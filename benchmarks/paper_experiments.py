@@ -1,0 +1,216 @@
+"""Paper-experiment reproductions (Figs. 3-10, Table II) on synthetic digits.
+
+Each function returns (rows, payload): CSV rows for benchmarks.run plus a
+JSON-serializable payload persisted under experiments/results/ and quoted in
+EXPERIMENTS.md §Repro. MNIST itself is data-gated in this container; the
+synthetic digit generator preserves the experimental structure (DESIGN.md §5),
+so claims are validated as orderings/regimes rather than absolute accuracies.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core.cascade import cascade_train
+from repro.core.federated import (EdgeDevice, FederatedALConfig, FogNode,
+                                  Trainer, run_federated_round)
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+
+Row = Tuple[str, float, str]
+
+
+def _timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6
+
+
+def _mk_cfg(quick: bool, **kw) -> FederatedALConfig:
+    # operating point calibrated to the synthetic generator's effective
+    # window (EXPERIMENTS.md §Repro): the 20-image seed of the paper sits
+    # BELOW this dataset's window (~0.15 acc, cannot measure uncertainty),
+    # so the in-window seed is 150 images.
+    base = dict(num_devices=4, mc_samples=8 if quick else 16,
+                pool_window=100 if quick else 200,
+                train_steps_per_acq=15 if quick else 30,
+                initial_train=150, initial_train_steps=60 if quick else 120,
+                seed=0)
+    base.update(kw)
+    return FederatedALConfig(**base)
+
+
+def _centralized_accuracy(trainer: Trainer, n_images: int, test, *, seed: int,
+                          steps: int) -> float:
+    """Train one model on n_images directly at the FN (paper's 'without FL')."""
+    data = make_digit_dataset(n_images, seed=seed)
+    params = trainer.init_params(jax.random.key(seed))
+    params, _ = trainer.fit(params, data.images, data.labels, steps=steps,
+                            rng=jax.random.key(seed + 1))
+    return trainer.accuracy(params, test.images, test.labels)
+
+
+# ---------------------------------------------------------------- Table II
+def bench_table2(quick: bool = False) -> Tuple[List[Row], Dict]:
+    """FN accuracy with FL (ave / opt) vs centralized training on 4x data
+    (paper Table II). Columns = acquisition counts."""
+    acq_counts = [5, 10] if quick else [10, 20]  # paper §IV-B: 10-20 is the recommended range; 30/40 behave like random (validated in quick runs)
+    test = make_digit_dataset(400 if quick else 800, seed=999)
+    rows, payload = [], {"acq": {}, "dataset": "synthetic-digits"}
+    for R in acq_counts:
+        cfg = _mk_cfg(quick, acquisitions=R, aggregation="average")
+        # capacity must cover the largest R for one shared Trainer; build per R
+        trainer = Trainer(cfg)
+        full = make_digit_dataset(3000, seed=R)
+        shards = federated_split(full, cfg.num_devices, seed=R + 1)
+        seed_set = make_digit_dataset(cfg.initial_train, seed=R + 2)
+
+        (_, rep_avg), us = _timed(lambda: run_federated_round(
+            cfg, shards, seed_set, test, trainer=trainer, record_curves=False))
+        accs = rep_avg["aggregation"]["device_accs"]
+        acc_opt = float(np.max(accs))
+        acc_avg = rep_avg["aggregated_acc"]
+
+        n_central = cfg.initial_train + cfg.num_devices * R * cfg.k_per_acquisition
+        central_steps = cfg.initial_train_steps + R * cfg.train_steps_per_acq
+        acc_central = _centralized_accuracy(
+            Trainer(replace(cfg, acquisitions=0,
+                            initial_train=n_central)), n_central, test,
+            seed=R + 3, steps=central_steps)
+
+        payload["acq"][R] = {"fl_average": acc_avg, "fl_optimal": acc_opt,
+                             "centralized_4x": acc_central,
+                             "device_accs": accs,
+                             "n_per_device": R * cfg.k_per_acquisition,
+                             "n_centralized": n_central}
+        rows.append((f"table2/acq{R}/fl_average", us, f"{acc_avg:.3f}"))
+        rows.append((f"table2/acq{R}/fl_optimal", us, f"{acc_opt:.3f}"))
+        rows.append((f"table2/acq{R}/centralized_4x", us, f"{acc_central:.3f}"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------- Fig 3 / 4
+def bench_window_effect(quick: bool = False) -> Tuple[List[Row], Dict]:
+    """Effective-window claim: AL beats random only with a seed-trained (but
+    not well-trained) model (paper Figs. 3-4)."""
+    strategies = ["entropy", "bald", "random"]  # vr == least-confidence ordering; covered by tests
+    R = 6 if quick else 8
+    repeats = 2
+    test = make_digit_dataset(400, seed=555)
+    regimes = {
+        "no_init": dict(initial_train=0, initial_train_steps=0),
+        "init20_paper": dict(initial_train=20, initial_train_steps=60),
+        "seeded_in_window": dict(initial_train=150),
+        "well_trained": dict(initial_train=1000, initial_train_steps=250),
+    }
+    rows, payload = [], {}
+    for regime, kw in regimes.items():
+        payload[regime] = {}
+        for strat in strategies:
+            finals = []
+            t0 = time.time()
+            for rep in range(repeats):
+                cfg = _mk_cfg(quick, num_devices=1, acquisitions=R,
+                              acquisition_fn=strat, seed=100 * rep + 7, **kw)
+                trainer = Trainer(cfg)
+                probs = np.random.default_rng(rep).dirichlet([2.0] * 10)
+                data = make_digit_dataset(1500, seed=rep, class_probs=probs)
+                seed_set = make_digit_dataset(cfg.initial_train, seed=rep + 50) \
+                    if cfg.initial_train else make_digit_dataset(0, seed=0)
+                fog = FogNode(trainer, cfg, seed_set)
+                params = fog.initial_model(jax.random.key(rep))
+                dev = EdgeDevice(0, data, trainer, cfg, seed_data=seed_set)
+                params = dev.run_active_learning(
+                    params, rng=jax.random.key(rep + 1))
+                finals.append(trainer.accuracy(params, test.images, test.labels))
+            us = (time.time() - t0) * 1e6 / repeats
+            mean, std = float(np.mean(finals)), float(np.std(finals))
+            payload[regime][strat] = {"mean": mean, "std": std, "runs": finals}
+            rows.append((f"window/{regime}/{strat}", us, f"{mean:.3f}±{std:.3f}"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------- Fig 8-10
+def bench_massive_cascade(quick: bool = False) -> Tuple[List[Row], Dict]:
+    """Massive regime: 20 devices x 60 images vs centralized, and the cascade
+    fix (chains of 2 / 4) with its slowdown (paper Figs. 8-10)."""
+    n_dev = 8 if quick else 12
+    per_dev_images = 60
+    R = per_dev_images // 10            # acquisitions to consume 60 images
+    total = n_dev * per_dev_images
+    test = make_digit_dataset(400, seed=777)
+    cfg = _mk_cfg(quick, num_devices=n_dev, acquisitions=R, initial_train=20)
+    trainer = Trainer(cfg)
+    full = make_digit_dataset(max(total * 3, 2000), seed=11)
+    shards = federated_split(full, n_dev, seed=12)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=13)
+    rows, payload = [], {"n_devices": n_dev, "per_device_images": per_dev_images}
+
+    # independent devices + FedAvg (paper: accuracy collapses)
+    (_, rep), us = _timed(lambda: run_federated_round(
+        cfg, shards, seed_set, test, trainer=trainer, record_curves=False))
+    payload["federated_avg"] = rep["aggregated_acc"]
+    rows.append((f"massive/federated_{n_dev}dev", us,
+                 f"{rep['aggregated_acc']:.3f}"))
+
+    # centralized on the same total data
+    steps = cfg.initial_train_steps + 3 * R * cfg.train_steps_per_acq
+    acc_c = _centralized_accuracy(
+        Trainer(replace(cfg, num_devices=1, acquisitions=0, initial_train=total)),
+        total, test, seed=14, steps=steps)
+    payload["centralized"] = acc_c
+    rows.append((f"massive/centralized_{total}img", 0.0, f"{acc_c:.3f}"))
+
+    # cascade chains (paper: accuracy recovers at k-times slowdown)
+    fog = FogNode(trainer, cfg, seed_set)
+    params0 = fog.initial_model(jax.random.key(0))
+    for chain_len in (2, 4):
+        t0 = time.time()
+        chain_accs = []
+        for c in range(max(2, n_dev // chain_len) if quick else n_dev // chain_len):
+            devices = [EdgeDevice(c * chain_len + i, shards[(c * chain_len + i) % n_dev],
+                                  trainer, cfg, seed_data=seed_set)
+                       for i in range(chain_len)]
+            p, _ = cascade_train(params0, devices, acquisitions_per_link=R,
+                                 rng_seed=31 * c)
+            chain_accs.append(trainer.accuracy(p, test.images, test.labels))
+        us = (time.time() - t0) * 1e6
+        from repro.core.aggregation import fedavg
+        acc = float(np.mean(chain_accs))
+        payload[f"cascade_{chain_len}"] = {"mean_chain_acc": acc,
+                                           "slowdown_blocking": chain_len}
+        rows.append((f"massive/cascade{chain_len}", us, f"{acc:.3f}"))
+    from repro.core.cascade import pipelined_cascade_speedup
+    for chain_len in (2, 4):
+        sp = pipelined_cascade_speedup(chain_len, R)
+        payload[f"cascade_{chain_len}"]["pipelined_speedup"] = sp
+        rows.append((f"massive/cascade{chain_len}_pipelined_speedup", 0.0,
+                     f"{sp:.2f}x"))
+    return rows, payload
+
+
+# ---------------------------------------------------------------- acq strat
+def bench_acquisition_strategies(quick: bool = False) -> Tuple[List[Row], Dict]:
+    """AL vs random at acq 10/20 with 20-image init (paper Figs. 6-7) +
+    beyond-paper margin acquisition."""
+    R = 5 if quick else 10
+    test = make_digit_dataset(400, seed=333)
+    rows, payload = [], {}
+    for strat in ["entropy", "random", "margin"]:
+        cfg = _mk_cfg(quick, num_devices=2, acquisitions=R,
+                      acquisition_fn=strat, seed=21)
+        trainer = Trainer(cfg)
+        full = make_digit_dataset(2000, seed=22)
+        shards = federated_split(full, cfg.num_devices, seed=23)
+        seed_set = make_digit_dataset(cfg.initial_train, seed=24)
+        (_, rep), us = _timed(lambda: run_federated_round(
+            cfg, shards, seed_set, test, trainer=trainer, record_curves=False))
+        payload[strat] = rep["aggregated_acc"]
+        rows.append((f"acquisition/{strat}/acq{R}", us,
+                     f"{rep['aggregated_acc']:.3f}"))
+    return rows, payload

@@ -1,0 +1,67 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.roofline import load_records, model_flops
+
+
+def fmt_bytes(gb):
+    return f"{gb:.2f}"
+
+
+def table(mesh: str, mode: str = "baseline", suffix: str = "") -> str:
+    lines = [
+        f"| arch | shape | compute s | memory s | collective s | bottleneck | "
+        f"useful | temp GB | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records():
+        if rec.get("skipped") or rec.get("error"):
+            continue
+        if rec["mesh"] != mesh or rec.get("mode", "baseline") != mode:
+            continue
+        if suffix and suffix not in rec.get("notes", ""):
+            continue
+        if not suffix and ("hints" in rec.get("notes", "")
+                           or "lowp_ce" in rec.get("notes", "")):
+            continue
+        r = rec["roofline"]
+        n_chips = 512 if mesh == "2x16x16" else 256
+        mf = model_flops(rec["arch"], rec["shape"])
+        useful = mf / (rec["hlo_flops"] * n_chips) if rec["hlo_flops"] else 0
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['bottleneck'].replace('_s', '')} | {useful:.2f} | "
+            f"{rec['per_device_bytes'].get('temp_gb', float('nan')):.2f} | "
+            f"{rec['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def skips() -> str:
+    out = []
+    for rec in load_records():
+        if rec.get("skipped"):
+            out.append(f"* {rec['arch']} × {rec['shape']}: {rec['skipped']}")
+    return "\n".join(sorted(set(out)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    meshes = [args.mesh] if args.mesh else ["16x16", "2x16x16"]
+    for mesh in meshes:
+        print(f"\n### Mesh {mesh} (baseline)\n")
+        print(table(mesh))
+    print("\n### Skips\n")
+    print(skips())
+
+
+if __name__ == "__main__":
+    main()

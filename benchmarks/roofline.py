@@ -1,0 +1,82 @@
+"""Roofline table assembled from the dry-run artifacts (§Roofline).
+
+Reads experiments/dryrun/*.json produced by repro.launch.dryrun and derives
+per (arch × shape × mesh): the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS = 6·N(_active)·D, and the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Tuple
+
+Row = Tuple[str, float, str]
+
+# (total params, active params) in units of 1e9, matmul-participating
+# (embedding excluded for MODEL_FLOPS; MoE counts routed active experts).
+_PARAMS = {
+    "gemma2-2b": (2.0, 2.0),
+    "recurrentgemma-9b": (8.0, 8.0),
+    "gemma-7b": (7.8, 7.8),
+    "whisper-small": (0.24, 0.24),
+    "qwen3-8b": (7.0, 7.0),
+    "deepseek-v2-236b": (234.0, 21.0),
+    "arctic-480b": (474.0, 17.0),
+    "llama-3.2-vision-11b": (10.0, 10.0),
+    "minicpm3-4b": (3.8, 3.8),
+    "mamba2-1.3b": (1.3, 1.3),
+}
+
+_TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+           "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    total, active = _PARAMS[arch]
+    toks = _TOKENS[shape]
+    if shape == "train_4k":
+        return 6.0 * active * 1e9 * toks          # fwd 2ND + bwd 4ND
+    return 2.0 * active * 1e9 * toks              # inference forward
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def bench_roofline(quick: bool = False) -> Tuple[List[Row], Dict]:
+    rows, payload = [], {"records": []}
+    for rec in load_records():
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec.get('mesh', '?')}"
+        if rec.get("skipped"):
+            rows.append((name, 0.0, "SKIP:" + rec["skipped"][:40]))
+            continue
+        if rec.get("error"):
+            rows.append((name, 0.0, "ERROR"))
+            continue
+        if rec.get("mode", "baseline") != "baseline":
+            name += "/" + rec["mode"]
+        r = rec["roofline"]
+        n_chips = 512 if rec["mesh"] == "2x16x16" else 256
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_global = rec["hlo_flops"] * n_chips
+        useful = mf / hlo_global if hlo_global > 0 else float("nan")
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        derived = (f"bottleneck={r['bottleneck'].replace('_s','')};"
+                   f"useful={useful:.2f};temp_gb={rec['per_device_bytes'].get('temp_gb', -1):.1f}")
+        rows.append((name, step_s * 1e6, derived))
+        payload["records"].append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "mode": rec.get("mode", "baseline"),
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bottleneck": r["bottleneck"],
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": useful,
+            "temp_gb": rec["per_device_bytes"].get("temp_gb"),
+            "collective_counts": rec.get("collective_counts", {}),
+        })
+    return rows, payload

@@ -1,0 +1,57 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro-
+benches + the roofline table from the dry-run artifacts.
+
+Prints ``name,us_per_call,derived`` CSV (per the repo contract) and persists
+JSON payloads under experiments/results/ for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only substr]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+BENCHES = [
+    ("table2", "benchmarks.paper_experiments", "bench_table2"),
+    ("window", "benchmarks.paper_experiments", "bench_window_effect"),
+    ("acquisition", "benchmarks.paper_experiments", "bench_acquisition_strategies"),
+    ("massive", "benchmarks.paper_experiments", "bench_massive_cascade"),
+    ("kernels", "benchmarks.kernel_bench", "bench_kernels"),
+    ("roofline", "benchmarks.roofline", "bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced repeats/sizes (CI-sized run)")
+    ap.add_argument("--only", default=None, help="substring filter on bench name")
+    args = ap.parse_args()
+
+    os.makedirs("experiments/results", exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, mod_name, fn_name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            fn = getattr(importlib.import_module(mod_name), fn_name)
+            rows, payload = fn(quick=args.quick)
+            with open(f"experiments/results/{name}.json", "w") as f:
+                json.dump(payload, f, indent=2, default=str)
+            for rname, us, derived in rows:
+                print(f"{rname},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001 — report, continue with the rest
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}")
+        print(f"# {name} finished in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.msgpack_ckpt import save_pytree, load_pytree, save_round, load_round, latest_round

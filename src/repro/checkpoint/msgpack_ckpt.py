@@ -1,0 +1,128 @@
+"""msgpack-based pytree checkpointing.
+
+Flat-key encoding: the pytree is flattened to {"a/b/c": leaf} with dtype and
+shape sidecars, serialized with msgpack (available offline). Supports the
+federated round structure: fog-node model + per-device models + optimizer
+states + round metadata.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict
+
+import msgpack
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        tag = "__list__" if isinstance(tree, list) else "__tuple__"
+        out[f"{prefix}{tag}"] = len(tree)
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP)] = tree
+    return out
+
+
+def _encode_leaf(x):
+    if isinstance(x, (int, float, str, bool)) or x is None:
+        return {"kind": "py", "value": x}
+    arr = np.asarray(x)
+    return {
+        "kind": "array",
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _decode_leaf(d):
+    if d["kind"] == "py":
+        return d["value"]
+    arr = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(d["shape"])
+    return jnp.asarray(arr)
+
+
+def save_pytree(path: str, tree) -> None:
+    tree = jax.device_get(tree)
+    flat = _flatten(tree)
+    payload = {k: (_encode_leaf(v) if not k.endswith(("__list__", "__tuple__"))
+                   else {"kind": "py", "value": v}) for k, v in flat.items()}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic: a crashed save never corrupts the checkpoint
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def resolve(node):
+        if not isinstance(node, dict):
+            return node
+        if "__list__" in node or "__tuple__" in node:
+            tag = "__list__" if "__list__" in node else "__tuple__"
+            n = node[tag]
+            items = [resolve(node[str(i)]) for i in range(n)]
+            return items if tag == "__list__" else tuple(items)
+        return {k: resolve(v) for k, v in node.items()}
+
+    return resolve(root)
+
+
+def load_pytree(path: str):
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat = {}
+    for k, d in payload.items():
+        if k.endswith(("__list__", "__tuple__")):
+            flat[k] = d["value"]
+        else:
+            flat[k] = _decode_leaf(d)
+    return _unflatten(flat)
+
+
+# ------------------------------------------------ federated round snapshots
+def save_round(ckpt_dir: str, round_idx: int, *, fog_model, device_models=None,
+               opt_states=None, metadata=None) -> str:
+    payload = {"fog_model": fog_model, "metadata": metadata or {}}
+    if device_models is not None:
+        payload["device_models"] = list(device_models)
+    if opt_states is not None:
+        payload["opt_states"] = list(opt_states)
+    path = os.path.join(ckpt_dir, f"round_{round_idx:06d}.msgpack")
+    save_pytree(path, payload)
+    return path
+
+
+def latest_round(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    rounds = []
+    for name in os.listdir(ckpt_dir):
+        m = re.match(r"round_(\d+)\.msgpack$", name)
+        if m:
+            rounds.append(int(m.group(1)))
+    return max(rounds) if rounds else None
+
+
+def load_round(ckpt_dir: str, round_idx: int):
+    return load_pytree(os.path.join(ckpt_dir, f"round_{round_idx:06d}.msgpack"))

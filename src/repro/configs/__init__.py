@@ -1,0 +1,45 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Each module defines ``config() -> ModelConfig`` with the exact published
+hyperparameters (source cited in the module docstring) and inherits
+``.reduced()`` for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_ARCHS = [
+    "gemma2_2b",
+    "recurrentgemma_9b",
+    "gemma_7b",
+    "whisper_small",
+    "qwen3_8b",
+    "deepseek_v2_236b",
+    "arctic_480b",
+    "llama32_vision_11b",
+    "minicpm3_4b",
+    "mamba2_13b",
+]
+
+# public ids (match the assignment) → module names
+ALIASES = {
+    "gemma2-2b": "gemma2_2b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "gemma-7b": "gemma_7b",
+    "whisper-small": "whisper_small",
+    "qwen3-8b": "qwen3_8b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "arctic-480b": "arctic_480b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "minicpm3-4b": "minicpm3_4b",
+    "mamba2-1.3b": "mamba2_13b",
+}
+
+ARCH_IDS: List[str] = list(ALIASES.keys())
+
+
+def get_config(name: str):
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.config()

@@ -1,0 +1,20 @@
+"""Core contribution of the paper, generalized: MC-dropout uncertainty,
+acquisition functions, federated aggregation, the fog/edge round loop, and
+pod-scale uncertainty-driven batch selection."""
+from repro.core.mc_dropout import mc_logprobs, predictive_posterior
+from repro.core.acquisition import (
+    ACQUISITIONS,
+    acquisition_scores,
+    bald,
+    entropy,
+    least_confidence,
+    margin,
+    select_topk,
+    variational_ratio,
+)
+from repro.core.aggregation import fedavg, opt_model, stack_models, weighted_average
+from repro.core.pool import ActivePool
+from repro.core.federated import (EdgeDevice, FederatedALConfig, FogNode,
+                                  run_federated_round, run_federated_rounds,
+                                  run_experiment)
+from repro.core.cascade import cascade_train, pipelined_cascade_schedule

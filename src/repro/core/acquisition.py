@@ -1,0 +1,116 @@
+"""Acquisition functions (paper §II-D) over MC-dropout log-probs.
+
+All functions take ``log_probs: [T, N, C]`` (T MC samples, N pool points,
+C classes) and return a score per pool point [N] where HIGHER = more
+desirable to query. The paper's three (Maximal Entropy Eq. 2, BALD Eq. 3,
+Variational Ratios Eq. 4) plus a random baseline and two beyond-paper
+classics (margin, least-confidence). ``batch_bald_lite`` adds a greedy
+diversity-aware variant.
+
+These pure-jnp versions are also the oracles for the fused Pallas kernel in
+``repro.kernels.acquisition_scores`` (ref.py delegates here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mc_dropout import predictive_log_posterior
+
+_EPS = 1e-10
+
+
+def entropy(log_probs):
+    """H[y|x, D] of the MC-mean posterior (paper Eq. 2)."""
+    logp_bar = predictive_log_posterior(log_probs)          # [N, C]
+    p_bar = jnp.exp(logp_bar)
+    return -jnp.sum(p_bar * logp_bar, axis=-1)
+
+
+def expected_entropy(log_probs):
+    """E_t[H[y|x, w_t]] — the second term of BALD."""
+    p = jnp.exp(log_probs)
+    ent_per_sample = -jnp.sum(p * log_probs, axis=-1)       # [T, N]
+    return jnp.mean(ent_per_sample, axis=0)
+
+
+def bald(log_probs):
+    """I[y; w | x, D] = H[mean] - mean[H] (paper Eq. 3, Houlsby et al.)."""
+    return entropy(log_probs) - expected_entropy(log_probs)
+
+
+def variational_ratio(log_probs):
+    """V[x] = 1 - max_y p̄(y|x) (paper Eq. 4)."""
+    logp_bar = predictive_log_posterior(log_probs)
+    return 1.0 - jnp.exp(jnp.max(logp_bar, axis=-1))
+
+
+def least_confidence(log_probs):
+    """Beyond-paper: 1 - p̄(ŷ|x) — identical ordering to VR; kept for API parity."""
+    return variational_ratio(log_probs)
+
+
+def margin(log_probs):
+    """Beyond-paper: negative margin between top-2 posterior classes."""
+    logp_bar = predictive_log_posterior(log_probs)
+    top2 = jax.lax.top_k(logp_bar, 2)[0]
+    return -(jnp.exp(top2[..., 0]) - jnp.exp(top2[..., 1]))
+
+
+def random_scores(log_probs, *, rng):
+    """Uniform-random baseline (paper's 'random' curves)."""
+    return jax.random.uniform(rng, (log_probs.shape[1],))
+
+
+ACQUISITIONS = {
+    "entropy": entropy,
+    "bald": bald,
+    "vr": variational_ratio,
+    "margin": margin,
+    "least_confidence": least_confidence,
+}
+
+
+def acquisition_scores(name: str, log_probs, *, rng=None):
+    if name == "random":
+        if rng is None:
+            raise ValueError("random acquisition needs rng")
+        return random_scores(log_probs, rng=rng)
+    return ACQUISITIONS[name](log_probs)
+
+
+def select_topk(scores, k: int):
+    """Indices of the k highest-scoring pool points."""
+    return jax.lax.top_k(scores, k)[1]
+
+
+def batch_bald_lite(log_probs, k: int):
+    """Greedy diversity-aware BALD (a cheap BatchBALD approximation).
+
+    Exact BatchBALD tracks the joint predictive entropy over the growing
+    batch, which is exponential in k; we use the standard MC approximation
+    with a running joint-sample matrix. Suitable for small C (classes) and
+    moderate T.  Returns indices [k].
+    """
+    T, N, C = log_probs.shape
+    p = jnp.exp(log_probs)                                   # [T, N, C]
+    cond_ent = -jnp.mean(jnp.sum(p * log_probs, axis=-1), axis=0)  # [N]
+
+    joint = jnp.ones((T, 1))                                 # joint sample matrix [T, J]
+    chosen_mask = jnp.zeros(N, bool)
+    picks = []
+    for _ in range(k):                                       # k is small (10-ish)
+        # candidate joint distributions: joint ⊗ p_n → entropy of the MC mean
+        mean_joint = jnp.einsum("tj,tnc->njc", joint, p) / T  # [N, J, C]
+        h_joint = -jnp.sum(mean_joint * jnp.log(mean_joint + _EPS), axis=(1, 2))
+        score = h_joint - cond_ent                           # joint mutual information gain
+        score = jnp.where(chosen_mask, -jnp.inf, score)
+        nxt = jnp.argmax(score)
+        picks.append(nxt)
+        chosen_mask = chosen_mask.at[nxt].set(True)
+        joint = (joint[:, :, None] * p[:, nxt, None, :]).reshape(T, -1)
+        if joint.shape[1] > 128:                             # bound memory: keep top bins
+            top_idx = jnp.argsort(joint.mean(0))[-128:]
+            joint = joint[:, top_idx]
+            joint = joint / (joint.sum(1, keepdims=True) + _EPS)
+    return jnp.stack(picks)

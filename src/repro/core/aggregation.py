@@ -1,0 +1,67 @@
+"""Fog-node aggregation strategies (paper §III-B, Eq. 1).
+
+All strategies operate on a list of parameter pytrees (one per edge device)
+and return a single aggregated pytree. ``exclude`` is a predicate on the
+flattened key path used to keep per-device state (e.g. recurrent states,
+batch statistics) out of the average — relevant for the hybrid/SSM
+architectures (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def weighted_average(models: Sequence, weights: Sequence[float], *,
+                     exclude: Optional[Callable[[str], bool]] = None):
+    """W ← Σ_i α_i W_i (paper Eq. 1). ``weights`` are normalized here.
+
+    Excluded leaves take the first model's value (the fog node's own copy).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def agg(path, *leaves):
+        if exclude is not None and exclude(_path_str(path)):
+            return leaves[0]
+        acc = sum(wi * l.astype(jnp.float32) for wi, l in zip(w, leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map_with_path(agg, models[0], *models[1:])
+
+
+def fedavg(models: Sequence, *, exclude: Optional[Callable[[str], bool]] = None):
+    """Uniform-α federated averaging — the paper's default."""
+    return weighted_average(models, [1.0] * len(models), exclude=exclude)
+
+
+def opt_model(models: Sequence, scores: Sequence[float]):
+    """Paper's 'choosing the best-trained model': argmax validation score."""
+    best = int(jnp.argmax(jnp.asarray(scores)))
+    return models[best], best
+
+
+def stack_models(models: Sequence):
+    """Stack device models along a new leading axis (paper's 'stacking the
+    weights by decomposition' — useful for ensembling / later analysis)."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *models)
+
+
+def ensemble_logits(apply_fn, stacked_params, x):
+    """Ensemble prediction from stacked models: mean of per-model probs."""
+    logits = jax.vmap(lambda p: apply_fn(p, x))(stacked_params)  # [M, N, C]
+    return jax.nn.logsumexp(jax.nn.log_softmax(logits, -1), axis=0) - jnp.log(logits.shape[0])

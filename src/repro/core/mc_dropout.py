@@ -1,0 +1,46 @@
+"""MC-dropout Bayesian posterior sampling (paper §III-A, Eq. 13).
+
+The predictive posterior p(y*|x*, D) ≈ (1/T) Σ_t p(y*|x*, ŵ_t) with
+ŵ_t ~ q(w) realized as dropout masks. On TPU we draw all T samples as ONE
+batched computation (vmap over T PRNG keys) rather than T sequential
+forwards — the masks differ per sample but the weight stream is shared, so
+the MXU sees a single large batch. See DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def mc_logprobs(apply_fn, params, x, rng, T: int, *, microbatch: int | None = None):
+    """Draw T MC-dropout samples → log-probs [T, N, C].
+
+    ``apply_fn(params, x, rng)`` must return logits with dropout ACTIVE.
+    ``microbatch``: optional chunking of the pool dimension (N) through
+    ``jax.lax.map`` to bound peak memory on big pools.
+    """
+    keys = jax.random.split(rng, T)
+
+    def one_sample(key):
+        if microbatch is None:
+            return jax.nn.log_softmax(apply_fn(params, x, key), axis=-1)
+        n = x.shape[0]
+        pad = (-n) % microbatch
+        xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+        chunks = xp.reshape((-1, microbatch) + x.shape[1:])
+        out = jax.lax.map(lambda c: jax.nn.log_softmax(apply_fn(params, c, key), axis=-1), chunks)
+        return out.reshape((-1,) + out.shape[2:])[:n]
+
+    return jax.vmap(one_sample)(keys)
+
+
+def predictive_posterior(log_probs):
+    """Mean posterior p̄(y|x) over the T samples: [T, N, C] -> [N, C] (prob space)."""
+    return jnp.exp(jax.nn.logsumexp(log_probs, axis=0) - jnp.log(log_probs.shape[0]))
+
+
+def predictive_log_posterior(log_probs):
+    """log p̄(y|x): numerically-stable log of the MC-mean probability."""
+    return jax.nn.logsumexp(log_probs, axis=0) - jnp.log(log_probs.shape[0])

@@ -1,0 +1,46 @@
+"""Labeled/unlabeled pool bookkeeping for pool-based active learning.
+
+The paper subsamples a 200-image window from the device's unlabeled data at
+every acquisition iteration "in order to reduce the computing cost as all
+the data in the pool are being measured" — ``draw_window`` reproduces that.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class ActivePool:
+    """Index-space pool over a device's local dataset."""
+    n_total: int
+    labeled: np.ndarray = field(default_factory=lambda: np.zeros(0, dtype=np.int64))
+    rng: np.random.Generator = field(default_factory=np.random.default_rng)
+
+    @classmethod
+    def create(cls, n_total: int, *, initial_labeled=None, seed: int = 0):
+        pool = cls(n_total=n_total, rng=np.random.default_rng(seed))
+        if initial_labeled is not None:
+            pool.labeled = np.asarray(initial_labeled, dtype=np.int64)
+        return pool
+
+    @property
+    def unlabeled(self) -> np.ndarray:
+        mask = np.ones(self.n_total, dtype=bool)
+        mask[self.labeled] = False
+        return np.nonzero(mask)[0]
+
+    def draw_window(self, window: int = 200) -> np.ndarray:
+        """Random subsample of the unlabeled pool to score this iteration."""
+        unl = self.unlabeled
+        if len(unl) <= window:
+            return unl
+        return self.rng.choice(unl, size=window, replace=False)
+
+    def acquire(self, window_indices: np.ndarray, selected_in_window: np.ndarray) -> np.ndarray:
+        """Mark ``window_indices[selected_in_window]`` as labeled; returns them."""
+        new = np.asarray(window_indices)[np.asarray(selected_in_window)]
+        self.labeled = np.concatenate([self.labeled, new.astype(np.int64)])
+        return new

@@ -1,0 +1,68 @@
+"""Pod-scale uncertainty-driven batch selection (the paper's AL, generalized).
+
+At pod scale the 'oracle' is not a human labeler — self-supervised targets
+are free — but the paper's economics still hold: compute per consumed
+example is the scarce resource, so we spend a cheap scoring pass to pick the
+most informative candidates before the expensive train step.
+
+``select_batch`` scores a candidate batch [B_cand, S] with T MC-dropout
+forward passes (dropout active), reduces token-level uncertainty to a
+sequence score with the paper's acquisition functions, and gathers the
+top-B_train sequences. It is shape-stable and pjit-friendly: candidates are
+sharded over (pod, data) like any batch; the gather is local to each data
+shard when ``per_shard=True`` (no cross-shard traffic, the default at scale).
+
+MoE extras (DESIGN.md §7.2): ``router_entropy_scores`` derives uncertainty
+from router logits of a single deterministic pass — zero extra forwards.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acquisition as acq
+
+
+def sequence_scores(token_logprobs, *, acquisition_fn: str = "entropy",
+                    reduce: str = "mean"):
+    """Reduce MC token log-probs [T, B, S, V] to sequence scores [B].
+
+    V can be large (256k): the acquisition functions are linear scans over
+    the class axis, no [V, V] intermediates.
+    """
+    T, B, S, V = token_logprobs.shape
+    flat = token_logprobs.reshape(T, B * S, V)
+    tok = acq.acquisition_scores(acquisition_fn, flat).reshape(B, S)
+    if reduce == "mean":
+        return jnp.mean(tok, axis=-1)
+    if reduce == "max":
+        return jnp.max(tok, axis=-1)
+    if reduce == "sum":
+        return jnp.sum(tok, axis=-1)
+    raise ValueError(reduce)
+
+
+def router_entropy_scores(router_logits):
+    """Uncertainty from MoE router logits [B, S, E] → [B] (free signal)."""
+    logp = jax.nn.log_softmax(router_logits, axis=-1)
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)    # [B, S]
+    return jnp.mean(ent, axis=-1)
+
+
+def select_batch(scores, tokens, targets, keep: int):
+    """Gather the ``keep`` highest-scoring sequences: returns (tok, tgt, idx)."""
+    idx = jax.lax.top_k(scores, keep)[1]
+    return jnp.take(tokens, idx, axis=0), jnp.take(targets, idx, axis=0), idx
+
+
+def mc_sequence_logprobs(apply_fn: Callable, params, tokens, rng, T: int):
+    """T stochastic forwards over a candidate batch → [T, B, S, V] log-probs.
+
+    ``apply_fn(params, tokens, rng)`` must run with dropout active. For the
+    big archs we instead use ``score_step`` in launch/train.py which fuses
+    scoring into the sharded step; this helper is the reference path.
+    """
+    keys = jax.random.split(rng, T)
+    return jax.vmap(lambda k: jax.nn.log_softmax(apply_fn(params, tokens, k), axis=-1))(keys)

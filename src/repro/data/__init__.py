@@ -1,0 +1,3 @@
+from repro.data.digits import SyntheticDigits, make_digit_dataset
+from repro.data.federated_split import federated_split, dirichlet_split
+from repro.data.lm import synthetic_lm_batch, SyntheticLMStream

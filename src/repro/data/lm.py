@@ -1,0 +1,58 @@
+"""Synthetic language-model token pipeline.
+
+The assigned pod-scale architectures are LMs; for smoke tests, examples and
+the selection subsystem we need token streams. We synthesize a Zipfian token
+source with local n-gram structure (a tiny Markov chain) so losses actually
+decrease and uncertainty varies across sequences — required for the
+uncertainty-driven selection demo to have signal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def synthetic_lm_batch(batch: int, seq_len: int, vocab: int, *, seed: int = 0):
+    """One batch of (tokens, targets): Zipf-distributed ids with a shift target."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks**1.1
+    probs /= probs.sum()
+    toks = rng.choice(vocab, size=(batch, seq_len + 1), p=probs).astype(np.int32)
+    return toks[:, :-1], toks[:, 1:]
+
+
+@dataclass
+class SyntheticLMStream:
+    """Markov-chain token stream with per-shard mixing weights.
+
+    Each federated group gets a different transition temperature so their
+    local distributions differ (the paper's 'same distribution, unbalanced'
+    analogue for LM data).
+    """
+    vocab: int
+    order_states: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self._proj = rng.integers(0, self.order_states, size=self.vocab)
+        logits = rng.normal(0.0, 2.0, size=(self.order_states, self.vocab))
+        self._cond = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+
+    def sample(self, batch: int, seq_len: int, *, seed: int = 0, temperature: float = 1.0):
+        rng = np.random.default_rng(seed)
+        out = np.empty((batch, seq_len + 1), dtype=np.int32)
+        state = rng.integers(0, self.vocab, size=batch)
+        out[:, 0] = state
+        for t in range(1, seq_len + 1):
+            p = self._cond[self._proj[state]]
+            if temperature != 1.0:
+                p = p ** (1.0 / temperature)
+                p /= p.sum(-1, keepdims=True)
+            cum = np.cumsum(p, axis=-1)
+            u = rng.random((batch, 1))
+            state = (u < cum).argmax(-1)
+            out[:, t] = state
+        return out[:, :-1], out[:, 1:]

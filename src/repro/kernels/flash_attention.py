@@ -1,0 +1,147 @@
+"""Blocked flash attention (Pallas TPU) with sliding-window + logit softcap.
+
+Grid (b·H, n_q_blocks, n_kv_blocks); the kv axis is innermost (sequential on
+TPU) and carries the online-softmax state (m, l, acc) in VMEM scratch,
+finalizing on the last kv block. Q/K/V tiles are [bq, d]/[bk, d] VMEM blocks
+with d = head_dim (64–256 → MXU-aligned lanes).
+
+Features folded into the kernel (the assigned archs need all of them):
+  * GQA: q-head → kv-head mapping in the k/v index_map (no KV repeat in HBM)
+  * sliding-window masking (gemma2 / recurrentgemma local layers)
+  * logit softcap (gemma2)
+  * kv-length masking from padded sequences (prefill) / cache fill (decode)
+
+Validated in interpret mode against repro.kernels.ref.attention_ref across
+shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_kv: int,
+                  n_kv_blocks: int, seq_kv: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                      # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                      # [bk, d]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    kv_pos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = kv_pos < seq_kv
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_scr[...]                                    # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.maximum(m_new, -1e30)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(jnp.maximum(m_prev, -1e30) - m_safe) * (m_prev > _NEG / 2)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, q_pos=None, kv_pos=None, causal: bool = True,
+                    window: Optional[int] = None, softcap: Optional[float] = None,
+                    scale: Optional[float] = None, block_q: int = 512,
+                    block_kv: int = 512, q_offset: int = 0,
+                    interpret: bool = True):
+    """q: [B, Sq, H, d]; k, v: [B, Skv, Hkv, d] → [B, Sq, H, d].
+
+    The kernel assumes contiguous positions with q starting at ``q_offset``
+    (decode callers pass the cache length); ``q_pos``/``kv_pos`` are accepted
+    for API parity with attention_core but only their lengths are used. On
+    this CPU container the kernel runs with interpret=True; on TPU pass
+    interpret=False.
+    """
+    B, Sq, H, d = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_kv, Skv)
+    Sq_pad = -(-Sq // bq) * bq
+    Skv_pad = -(-Skv // bk) * bk
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, d)
+    if Sq_pad != Sq:
+        qt = jnp.pad(qt, ((0, 0), (0, Sq_pad - Sq), (0, 0)))
+    if Skv_pad != Skv:
+        kt = jnp.pad(kt, ((0, 0), (0, Skv_pad - Skv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, Skv_pad - Skv), (0, 0)))
+
+    n_q = Sq_pad // bq
+    n_kv = Skv_pad // bk
+    grid = (B * H, n_q, n_kv)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * Hkv + h // rep, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_kv=bk, n_kv_blocks=n_kv,
+        seq_kv=Skv, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :Sq].reshape(B, H, Sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers for the Pallas kernels, with interpret-mode fallback.
+
+``INTERPRET`` defaults to True on non-TPU backends: the kernel bodies
+execute in Python on CPU for correctness validation; on TPU backends the
+same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import acquisition_scores as _acq
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def acquisition_scores(log_probs, *, block_n: int = 128, interpret: bool | None = None):
+    """Fused (entropy, bald, vr) from MC log-probs [T, N, C]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _acq.acquisition_scores_fused(log_probs, block_n=block_n,
+                                         interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                                   "block_q", "block_kv", "q_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None, softcap=None,
+                    scale=None, block_q: int = 512, block_kv: int = 512,
+                    q_offset: int = 0, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, block_q=block_q,
+                               block_kv=block_kv, q_offset=q_offset,
+                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(Cc, Bc, la, xdt, *, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd.ssd_intra_chunk(Cc, Bc, la, xdt, interpret=interpret)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acquisition as acq
+
+
+# ------------------------------------------------------- acquisition_scores
+def acquisition_scores_ref(log_probs):
+    """[T, N, C] → (entropy, bald, vr), delegating to core.acquisition."""
+    return (acq.entropy(log_probs), acq.bald(log_probs),
+            acq.variational_ratio(log_probs))
+
+
+# ------------------------------------------------------- flash_attention
+def attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None, scale: Optional[float] = None,
+                  q_offset: int = 0):
+    """Naive full-score attention with the same mask semantics as the kernel."""
+    B, Sq, H, d = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(B, Sq, Hkv, rep, d).astype(jnp.float32)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    any_valid = jnp.any(mask, axis=-1)[None, None, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, d).astype(q.dtype)
+
+
+# ------------------------------------------------------- ssd intra-chunk
+def ssd_intra_ref(Cc, Bc, la, xdt):
+    """Oracle for ssd_intra_chunk: masked quadratic form + chunk state."""
+    cb = jnp.einsum("gln,gmn->glm", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    log_decay = la[:, :, None] - la[:, None, :]
+    decay = jnp.exp(jnp.minimum(log_decay, 0.0))
+    L = la.shape[1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    scores = jnp.where(mask[None], cb * decay, 0.0)
+    y = jnp.einsum("glm,gmp->glp", scores, xdt.astype(jnp.float32))
+    seg = jnp.exp(la[:, -1:] - la)                       # [G, L]
+    st = jnp.einsum("glp,gln->gpn", xdt.astype(jnp.float32),
+                    Bc.astype(jnp.float32) * seg[..., None])
+    return y, st

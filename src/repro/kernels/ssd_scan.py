@@ -1,0 +1,80 @@
+"""Intra-chunk SSD kernel (Pallas TPU) — the quadratic block of Mamba-2's
+state-space duality [arXiv:2405.21060].
+
+For one (batch, chunk, head) the kernel computes, entirely in VMEM:
+
+    y_diag[l, p]  = Σ_{m ≤ l} (C_l · B_m) · exp(la_l − la_m) · xdt[m, p]
+    state[p, n]   = Σ_m  B_m[n] · exp(la_L − la_m) · xdt[m, p]
+
+i.e. the masked (L×L) attention-form matmul plus the chunk-final state
+contribution. The inter-chunk recurrence stays in XLA (lax.scan over ~S/L
+chunk states — tiny). Inputs are laid out chunk-major so one grid step's
+working set is [L, n] + [L, p] + [L, L] (L=256, n=128, p=64 → <0.5 MB).
+
+Grid: (B · n_chunks · H,). Validated against repro.nn.ssm.ssd_chunked's
+intra-chunk terms via repro.kernels.ref.ssd_intra_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cb_ref, bb_ref, la_ref, x_ref, y_ref, st_ref, *, L: int):
+    C = cb_ref[0].astype(jnp.float32)                   # [L, n]
+    B = bb_ref[0].astype(jnp.float32)                   # [L, n]
+    la = la_ref[0].astype(jnp.float32)                  # [L, 1]
+    x = x_ref[0].astype(jnp.float32)                    # [L, p]
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # [L, L]
+    log_decay = la - la.reshape(1, L)                   # [L, L]: la_l - la_m
+    decay = jnp.exp(jnp.minimum(log_decay, 0.0))
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    scores = jnp.where(mi <= li, cb * decay, 0.0)
+    y_ref[0] = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32
+                                   ).astype(y_ref.dtype)
+
+    seg = jnp.exp(la[L - 1, 0] - la)                    # [L, 1]
+    bx = B * seg                                        # [L, n]
+    st_ref[0] = jax.lax.dot_general(x, bx, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32
+                                    ).astype(st_ref.dtype)  # [p, n]
+
+
+def ssd_intra_chunk(Cc, Bc, la, xdt, *, interpret: bool = True):
+    """Batched intra-chunk SSD.
+
+    Cc, Bc: [G, L, n] per-(batch·chunk·head) C/B blocks
+    la:     [G, L]     cumulative log-decay within chunk
+    xdt:    [G, L, p]  dt-scaled inputs
+    Returns (y_diag [G, L, p], chunk_state [G, p, n]).
+    """
+    G, L, n = Cc.shape
+    p = xdt.shape[-1]
+    grid = (G,)
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, L=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, L, p), jnp.float32),
+            jax.ShapeDtypeStruct((G, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Cc, Bc, la[..., None], xdt)
+    return y, st

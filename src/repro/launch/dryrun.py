@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, proving the sharding config is coherent, and extract
+the roofline terms from the compiled artifact.
+
+MUST be run as its own process (python -m repro.launch.dryrun ...): the
+XLA_FLAGS line above has to execute before any jax device initialization,
+which is why it sits before all other imports. Smoke tests / benches see
+1 device because they never import this module.
+
+Outputs one JSON record per combination under experiments/dryrun/.
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+from dataclasses import asdict, dataclass  # noqa: E402
+from typing import Any, Dict, Optional     # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config                      # noqa: E402
+from repro.launch import hlo_analysis                                # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,      # noqa: E402
+                               batch_axes, make_production_mesh)
+from repro.launch.sharding import (batch_spec, cache_pspecs,         # noqa: E402
+                                   param_pspecs, param_shardings)
+from repro.launch.steps import (federated_sync, make_decode_step,    # noqa: E402
+                                make_federated_train_step,
+                                make_prefill_step, make_train_step)
+from repro.models import build_model                                  # noqa: E402
+from repro.optim import adafactor, adamw                               # noqa: E402
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, batch=1),
+}
+
+# long_500k only for sub-quadratic / compressed-cache archs (DESIGN.md §4)
+LONG_OK = {"gemma2-2b", "recurrentgemma-9b", "deepseek-v2-236b",
+           "minicpm3-4b", "mamba2-1.3b"}
+
+# factored optimizer for the giant MoEs (16 GB/chip budget, DESIGN.md §6)
+ADAFACTOR_ARCHS = {"deepseek-v2-236b", "arctic-480b"}
+
+DEFAULT_MICROBATCHES = {"train_4k": 8}
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def make_optimizer(arch: str):
+    if arch in ADAFACTOR_ARCHS:
+        return adafactor(1e-3)
+    return adamw(3e-4)
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, federated_groups: int = 0):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for every model input of the given step kind."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    info = SHAPES[shape_name]
+    S, B = info["seq_len"], info["batch"]
+    baxes = batch_axes(mesh)
+    bspec = NamedSharding(mesh, batch_spec(mesh, 2))
+
+    def extras_sds(batch, seq):
+        out = {}
+        for k, shp in model.extra_input_shapes(batch, seq).items():
+            spec = batch_spec(mesh, len(shp))
+            out[k] = _sds(shp, jnp.bfloat16, NamedSharding(mesh, spec))
+        return out
+
+    if info["kind"] == "train":
+        batch = {"tokens": _sds((B, S), jnp.int32, bspec),
+                 "targets": _sds((B, S), jnp.int32, bspec),
+                 **extras_sds(B, S)}
+        if federated_groups:
+            def stack(s):
+                # group axis rides 'pod'; the per-group batch dim keeps 'data'
+                spec = P("pod", "data", *([None] * (len(s.shape) - 1)))
+                return _sds((federated_groups, s.shape[0] // federated_groups)
+                            + s.shape[1:], s.dtype, NamedSharding(mesh, spec))
+            batch = jax.tree_util.tree_map(stack, batch)
+        return {"batch": batch}
+    if info["kind"] == "prefill":
+        # enc-dec: the 32k sequence is the AUDIO input (frames); decoder
+        # prefill stays at the family's 448-token spec (DESIGN.md §4)
+        tok_len = min(S, 448) if cfg.family == "encdec" else S
+        return {"batch": {"tokens": _sds((B, tok_len), jnp.int32, bspec),
+                          **extras_sds(B, S)}}
+    # decode: one new token against a seq_len cache
+    batch_sharded = B > 1
+    caches_shape = jax.eval_shape(
+        lambda: model.caches_init(B, S, extras_shape=model.extra_input_shapes(B, S)
+                                  or None))
+    cspecs = cache_pspecs(caches_shape, batch_sharded=batch_sharded,
+                          batch_axes=baxes)
+    caches = jax.tree_util.tree_map(
+        lambda s, sp: _sds(s.shape, s.dtype, NamedSharding(mesh, sp)),
+        caches_shape, cspecs)
+    tok_spec = NamedSharding(mesh, batch_spec(mesh, 2)) if batch_sharded \
+        else NamedSharding(mesh, P(None, None))
+    out = {"token": _sds((B, 1), jnp.int32, tok_spec), "caches": caches,
+           "position": _sds((), jnp.int32, NamedSharding(mesh, P()))}
+    if cfg.family == "vlm":
+        out["extras"] = extras_sds(B, 1)   # image tokens re-read every step
+    return out
+
+
+@dataclass
+class DryRunRecord:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str
+    lower_s: float
+    compile_s: float
+    per_device_bytes: Dict[str, float]
+    cost_flops_raw: float
+    cost_bytes_raw: float
+    hlo_flops: float
+    hlo_traffic: float
+    collective_bytes: float
+    cross_pod_bytes: float
+    collective_counts: Dict[str, int]
+    roofline: Dict[str, float]
+    notes: str = ""
+
+
+def roofline_terms(n_chips: int, hlo_flops: float, hlo_traffic: float,
+                   collective_bytes: float) -> Dict[str, float]:
+    """Three-term roofline (seconds). HLO numbers are already per-device."""
+    t_compute = hlo_flops / PEAK_FLOPS_BF16
+    t_memory = hlo_traffic / HBM_BW
+    t_collective = collective_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k])
+    return terms
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            mode: str = "baseline", num_microbatches: Optional[int] = None,
+            save_hlo: Optional[str] = None, hints: bool = False,
+            lowp_ce: bool = False, mesh_override=None) -> DryRunRecord:
+    if mesh_override is not None:
+        import jax as _jax
+        shape = tuple(int(x) for x in mesh_override.split('x'))
+        axes = ('pod', 'data', 'model')[-len(shape):] if len(shape) == 3 else ('data', 'model')
+        mesh = _jax.make_mesh(shape, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cfg = get_config(arch)
+    if hints:
+        from dataclasses import replace as _dc_replace
+        cfg = _dc_replace(cfg, shard_hints=True)
+    model = build_model(cfg)
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    mb = num_microbatches if num_microbatches is not None else \
+        DEFAULT_MICROBATCHES.get(shape_name, 1)
+    notes = ""
+
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    p_sh = param_shardings(mesh, params_shape)
+    params_sds = jax.tree_util.tree_map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), params_shape, p_sh)
+
+    if kind == "train" and mode == "federated":
+        if not multi_pod:
+            raise ValueError("federated mode rides the pod axis: use --multi-pod")
+        G = 2  # one federated group per pod
+        opt = make_optimizer(arch)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_sh = param_shardings(mesh, opt_shape)
+
+        def stack_sds(s, sh):
+            spec = P(*(("pod" if multi_pod else "data",) + tuple(sh.spec)))
+            return _sds((G,) + s.shape, s.dtype, NamedSharding(mesh, spec))
+
+        params_g = jax.tree_util.tree_map(stack_sds, params_shape, p_sh)
+        opt_g = jax.tree_util.tree_map(stack_sds, opt_shape, o_sh)
+        specs = input_specs(arch, shape_name, mesh, federated_groups=G)
+        step = make_federated_train_step(model, opt)
+        fn = jax.jit(step, static_argnames=())
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(params_g, opt_g, specs["batch"],
+                               jnp.zeros((), jnp.int32))
+        lower_s = time.time() - t0
+        notes = f"federated groups={G} (pod-axis local training)"
+    elif kind == "train":
+        opt = make_optimizer(arch)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_sh = param_shardings(mesh, opt_shape)
+        opt_sds = jax.tree_util.tree_map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh), opt_shape, o_sh)
+        specs = input_specs(arch, shape_name, mesh)
+        step = make_train_step(model, opt, num_microbatches=mb,
+                               batch_axes=batch_axes(mesh), lowp_ce=lowp_ce)
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step, out_shardings=(p_sh, o_sh, None)).lower(
+                params_sds, opt_sds, specs["batch"], jnp.zeros((), jnp.int32))
+        lower_s = time.time() - t0
+        notes = (f"hints " if hints else "") + (f"lowp_ce " if lowp_ce else "") + f"microbatches={mb} optimizer={'adafactor' if arch in ADAFACTOR_ARCHS else 'adamw'}"
+    elif kind == "prefill":
+        specs = input_specs(arch, shape_name, mesh)
+        step = make_prefill_step(model, max_cache_len=info["seq_len"])
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step).lower(params_sds, specs["batch"])
+        lower_s = time.time() - t0
+    else:  # decode
+        specs = input_specs(arch, shape_name, mesh)
+        step = make_decode_step(model)
+        t0 = time.time()
+        pos_sds = _sds((), jnp.int32)
+        args = [params_sds, specs["token"], specs["caches"], pos_sds]
+        kwargs = {}
+        if "extras" in specs:
+            kwargs["extras"] = specs["extras"]
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step).lower(*args, **kwargs)
+        lower_s = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        mem = {
+            "argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+            "alias_gb": ma.alias_size_in_bytes / 1e9,
+        }
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(txt)
+    stats = hlo_analysis.analyze(txt, pod_size=256 if multi_pod else 1 << 30)
+    roof = roofline_terms(n_chips, stats.flops, stats.traffic,
+                          stats.collective_bytes)
+    return DryRunRecord(
+        arch=arch, shape=shape_name,
+        mesh=(mesh_override or ("2x16x16" if multi_pod else "16x16")), mode=mode,
+        lower_s=round(lower_s, 2), compile_s=round(compile_s, 2),
+        per_device_bytes=mem,
+        cost_flops_raw=float(ca.get("flops", -1.0)),
+        cost_bytes_raw=float(ca.get("bytes accessed", -1.0)),
+        hlo_flops=stats.flops, hlo_traffic=stats.traffic,
+        collective_bytes=stats.collective_bytes,
+        cross_pod_bytes=stats.cross_pod_bytes,
+        collective_counts=stats.collective_counts,
+        roofline=roof, notes=notes)
+
+
+def should_skip(arch: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return "long_500k skipped: pure full-attention KV cache infeasible (DESIGN.md §4)"
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="baseline", choices=["baseline", "federated"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--hints", action="store_true",
+                    help="enable beyond-paper activation sharding hints")
+    ap.add_argument("--lowp-ce", action="store_true",
+                    help="bf16-logits cross entropy with fp32 accumulation")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override mesh, e.g. 32x8 ('data'x'model')")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for arch in archs:
+        for shape in shapes:
+            skip = should_skip(arch, shape)
+            tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}__{args.mode}"
+            if args.hints:
+                tag += "__hints"
+            if args.lowp_ce:
+                tag += "__lowpce"
+            if args.mesh_shape:
+                tag += f"__mesh{args.mesh_shape}"
+            if args.microbatches is not None:
+                tag += f"__mb{args.microbatches}"
+            out_path = os.path.join(args.out_dir, tag + ".json")
+            if skip:
+                with open(out_path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "skipped": skip}, f, indent=2)
+                print(f"[skip] {tag}: {skip}")
+                continue
+            print(f"[run ] {tag}", flush=True)
+            try:
+                rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                              mode=args.mode, num_microbatches=args.microbatches,
+                              save_hlo=args.save_hlo, hints=args.hints,
+                              lowp_ce=args.lowp_ce, mesh_override=args.mesh_shape)
+                with open(out_path, "w") as f:
+                    json.dump(asdict(rec), f, indent=2)
+                r = rec.roofline
+                print(f"   ok lower={rec.lower_s}s compile={rec.compile_s}s "
+                      f"temp={rec.per_device_bytes.get('temp_gb', -1):.2f}GB "
+                      f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                      f"coll={r['collective_s']:.4f}s → {r['bottleneck']}", flush=True)
+            except Exception as e:  # noqa: BLE001 — record the failure, keep going
+                with open(out_path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "error": repr(e)}, f, indent=2)
+                print(f"   FAIL {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

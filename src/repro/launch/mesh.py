@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax init; smoke tests must
+keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; multi-pod stacks a leading 'pod' axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int | None = None):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = devices or len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes a batch dimension shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# v5e hardware constants used by the roofline analysis (benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

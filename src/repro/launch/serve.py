@@ -1,0 +1,83 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Batched request serving: prefill the prompt batch, then step the decode
+loop against the per-family KV/state caches. On CPU this serves the
+REDUCED config; on a TPU slice the same step functions run the full config
+over the production mesh (launch/dryrun.py proves every decode shape
+lowers there).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced(max_seq_len=args.prompt_len + args.max_new_tokens + 8)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    max_len = args.prompt_len + args.max_new_tokens + 1
+
+    B = args.batch
+    prompts = jax.random.randint(jax.random.key(1), (B, args.prompt_len),
+                                 0, cfg.vocab_size)
+    extras = {k: jax.random.normal(jax.random.key(2), shp, jnp.float32)
+              for k, shp in model.extra_input_shapes(B, args.prompt_len).items()}
+
+    prefill = jax.jit(make_prefill_step(model, max_cache_len=max_len))
+    decode = jax.jit(make_decode_step(model))
+
+    t0 = time.time()
+    logits, caches = prefill(params, {"tokens": prompts, **extras})
+    prefill_s = time.time() - t0
+
+    def sample(logits, key):
+        if args.temperature <= 0:
+            return jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return jax.random.categorical(key, logits[:, -1] / args.temperature)[:, None]
+
+    key = jax.random.key(3)
+    key, k = jax.random.split(key)
+    tok = sample(logits, k)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.max_new_tokens - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        logits, caches = decode(params, tok, caches, pos, extras=extras or None)
+        key, k = jax.random.split(key)
+        tok = sample(logits, k)
+        out.append(tok)
+    decode_s = time.time() - t0
+
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"arch={args.arch} ({'full' if args.full_config else 'reduced'}) "
+          f"batch={B} prompt={args.prompt_len}")
+    print(f"prefill: {prefill_s:.2f}s   decode: {args.max_new_tokens} tokens "
+          f"in {decode_s:.2f}s ({B * args.max_new_tokens / max(decode_s, 1e-9):.1f} tok/s)")
+    for b in range(min(B, 2)):
+        print(f"  request {b}: {gen[b][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

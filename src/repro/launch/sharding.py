@@ -1,0 +1,173 @@
+"""Parameter / activation sharding rules (logical-axis rule tree).
+
+Rules map parameter tree paths (joined with '/') to PartitionSpecs by
+substring match, MaxText-style. Key decisions (DESIGN.md §6):
+
+* merged head·head_dim projection columns shard over ``model`` — works even
+  when n_heads < 16 (gemma2's 8 q / 4 kv heads);
+* expert tensors [E, D, F] shard E→model (expert parallelism) AND F→data
+  (FSDP over the data axis) — required to fit arctic-480b / deepseek-v2 on
+  16 GB/chip;
+* vocab (embedding rows, unembed columns) shards over model;
+* scanned layer stacks carry a leading unit axis → specs are right-aligned
+  to the leaf rank (leading axes replicated);
+* 1-D leaves (norm scales, biases, A_log, ...) replicate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# (substring, spec-for-trailing-dims) — first match wins; specs are
+# right-aligned: a 2-dim spec on a 3-dim stacked leaf leaves dim 0 replicated.
+_RULES = [
+    # --- MoE experts [E, D, F] / [E, F, D]: expert-parallel + FSDP ---------
+    ("experts/wi_gate", P("model", None, "data")),
+    ("experts/wi_up", P("model", None, "data")),
+    ("experts/wo", P("model", "data", None)),
+    ("router/kernel", P(None, None)),
+    # --- embeddings ---------------------------------------------------------
+    ("embed/embedding", P("model", None)),          # vocab → model
+    ("dec_pos/embedding", P(None, None)),
+    ("unembed/kernel", P(None, "model")),
+    # --- attention (merged head dim columns) --------------------------------
+    ("wq/kernel", P(None, "model")),
+    ("wk/kernel", P(None, "model")),
+    ("wv/kernel", P(None, "model")),
+    ("wo/kernel", P("model", None)),
+    ("wq/bias", P("model")),
+    ("wv/bias", P("model")),
+    ("wo/bias", P(None)),
+    # --- MLA ------------------------------------------------------------------
+    ("wdq/kernel", P(None, "model")),
+    ("wuq/kernel", P(None, "model")),
+    ("wdkv/kernel", P(None, None)),
+    ("wkr/kernel", P(None, None)),
+    ("wuk/kernel", P(None, "model")),
+    ("wuv/kernel", P(None, "model")),
+    # --- MLPs -------------------------------------------------------------------
+    ("wi_gate/kernel", P(None, "model")),
+    ("wi_up/kernel", P(None, "model")),
+    ("wi/kernel", P(None, "model")),
+    ("wi/bias", P("model")),
+    # --- mamba2 ----------------------------------------------------------------
+    ("in_proj/kernel", P(None, "model")),
+    ("out_proj/kernel", P("model", None)),
+    ("conv/kernel", P(None, "model")),
+    ("conv/bias", P("model")),
+    # --- rg-lru -----------------------------------------------------------------
+    ("gate_proj/kernel", P(None, "model")),
+    ("rnn_proj/kernel", P(None, "model")),
+    ("wa/kernel", P(None, "model")),
+    ("wx/kernel", P(None, "model")),
+    ("wa/bias", P("model")),
+    ("wx/bias", P("model")),
+    ("lambda", P("model")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, ndim: int) -> P:
+    # adafactor factored second moments: vr averages away the param's last
+    # dim, vc the second-to-last — adjust the base rule accordingly
+    suffix = None
+    if path_str.endswith("/vr") or path_str.endswith("/vc"):
+        suffix = path_str[-2:]
+        path_str = path_str[:-3]
+    for pat, spec in _RULES:
+        if pat in path_str:
+            entries = list(spec)
+            if suffix == "vr":
+                entries = entries[:-1]
+            elif suffix == "vc":
+                entries = entries[:-2] + entries[-1:]
+            if len(entries) > ndim:          # e.g. 2-dim rule on squeezed leaf
+                entries = entries[-ndim:]
+            pad = ndim - len(entries)
+            return P(*([None] * pad + entries))
+    return P(*([None] * ndim))               # replicate by default
+
+
+def param_pspecs(params):
+    """PartitionSpec pytree mirroring ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_path(_path_str(path), leaf.ndim), params)
+
+
+def param_shardings(mesh, params_or_shapes):
+    specs = param_pspecs(params_or_shapes)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# --------------------------------------------------------------- activations
+def batch_spec(mesh, ndim: int, *, batch_dim: int = 0) -> P:
+    """Shard dim ``batch_dim`` over (pod, data)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    entries = [None] * ndim
+    entries[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return P(*entries)
+
+
+def cache_pspec(path_str: str, ndim: int, *, batch_sharded: bool,
+                batch_axes=("data",)) -> P:
+    """Decode-cache shardings, right-aligned to the (possibly unit/layer-
+    stacked) leaf rank.
+
+    batch_sharded (decode_32k):   batch dim → (pod, data)
+    seq-sharded   (long_500k, B=1): cache sequence dim → data
+    The per-head/channel dim shards over model where divisibility is safe
+    (head_dim / latent rank / conv channels — all multiples of 16 in the
+    assigned configs); head-count dims are NOT sharded (gemma2 has 4 kv
+    heads < 16).
+    """
+    b_ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    leaf = path_str.rsplit("/", 1)[-1]
+
+    def align(trailing):
+        pad = ndim - len(trailing)
+        if pad < 0:
+            return P(*trailing[-ndim:])
+        return P(*([None] * pad + trailing))
+
+    if leaf == "pos":
+        return align([None])
+    if leaf in ("k", "v", "ck", "cv"):          # [B, S, Hkv, hd]
+        if batch_sharded:
+            return align([b_ax, None, None, "model"])
+        return align([None, b_ax, None, "model"])
+    if leaf == "ckv":                            # [B, S, kv_lora]
+        if batch_sharded:
+            return align([b_ax, None, "model"])
+        return align([None, b_ax, "model"])
+    if leaf == "krope":                          # [B, S, rope_dim]
+        if batch_sharded:
+            return align([b_ax, None, None])
+        return align([None, b_ax, None])
+    if leaf == "conv":                           # [B, W-1, channels]
+        return align([b_ax if batch_sharded else None, None, "model"])
+    if leaf == "state" and ndim >= 4:            # mamba [B, H, P, N]
+        return align([b_ax if batch_sharded else None, "model", None, None])
+    if leaf == "state":                          # rg-lru [B, width]
+        return align([b_ax if batch_sharded else None, "model"])
+    return P(*([None] * ndim))
+
+
+def cache_pspecs(caches, *, batch_sharded: bool, batch_axes=("data",)):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_pspec(_path_str(path), leaf.ndim,
+                                       batch_sharded=batch_sharded,
+                                       batch_axes=batch_axes), caches)

@@ -1,0 +1,226 @@
+"""Step factories: train / prefill / decode / federated-pod variants.
+
+All steps are pure functions of (params, opt_state, batch, ...) suitable for
+jax.jit with explicit in/out shardings (launch/dryrun.py, launch/train.py).
+
+Federated mode (the paper's technique at pod scale, DESIGN.md §2):
+* parameters carry a leading ``n_groups`` axis sharded over the ``pod`` mesh
+  axis — each pod trains its own replica on its own data shard (NO cross-pod
+  gradient traffic);
+* ``federated_sync`` averages the group axis (one cross-pod all-reduce every
+  H steps) — Eq. 1 of the paper with uniform α;
+* ``federated_sync_weighted`` implements performance-weighted α, and
+  ``cascade_shift`` the ring hand-off of the massive-distribution cascade
+  (collective-permute on the group axis).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+def softmax_cross_entropy(logits, targets, *, z_loss: float = 1e-4,
+                          lowp: bool = False):
+    """Token-level cross entropy.
+
+    ``lowp=True`` keeps the [B, S, V] logits in their compute dtype (bf16)
+    and only ACCUMULATES in fp32 (max-subtracted exp, f32 reduce) — halving
+    the dominant HBM traffic of the loss/unembed region at pod scale
+    (EXPERIMENTS.md §Perf). Default off: the paper-faithful baseline casts to
+    fp32 first.
+    """
+    if not lowp:
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = lse - ll
+        return ce + z_loss * jnp.square(lse)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    # bf16 reads; fp32 accumulation of the sum-exp
+    sumexp = jnp.sum(jnp.exp((logits - m)), axis=-1, dtype=jnp.float32)
+    lse = jnp.log(sumexp) + m[..., 0].astype(jnp.float32)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = lse - ll.astype(jnp.float32)
+    return ce + z_loss * jnp.square(lse)
+
+
+def make_loss_fn(model: Model, *, lowp_ce: bool = False):
+    def loss_fn(params, batch, rng=None):
+        extras = {k: v for k, v in batch.items() if k not in ("tokens", "targets")}
+        logits, aux = model.apply(params, batch["tokens"],
+                                  rng=rng, deterministic=rng is None,
+                                  extras=extras or None)
+        ce = softmax_cross_entropy(logits, batch["targets"], lowp=lowp_ce)
+        loss = jnp.mean(ce) + aux
+        return loss, {"loss": loss, "ce": jnp.mean(ce), "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, optimizer: Optimizer, *, clip_norm: float = 1.0,
+                    num_microbatches: int = 1, batch_axes: tuple = (),
+                    lowp_ce: bool = False):
+    """Standard train step; ``num_microbatches > 1`` scans gradient
+    accumulation over batch slices (fp32 accumulators sharded like params).
+    This bounds the live [B, S, V] logits to one microbatch — the lever that
+    brings train_4k temp memory under the 16 GB/chip budget (EXPERIMENTS.md
+    §Perf).
+
+    ``batch_axes`` (e.g. ("data",) or ("pod", "data")) re-pins the microbatch
+    dimension after the [B] → [M, B/M] reshape: without the constraint GSPMD
+    cannot propagate the batch sharding through the reshape (B/M picks up
+    only a fraction of the axis) and silently near-replicates the forward —
+    an 8× compute regression caught by the HLO flops analyzer
+    (EXPERIMENTS.md §Perf, iteration 1)."""
+    loss_fn = make_loss_fn(model, lowp_ce=lowp_ce)
+
+    def train_step(params, opt_state, batch, step, rng=None):
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, rng)
+        else:
+            M = num_microbatches
+
+            def slice_mb(x):
+                y = x.reshape((M, x.shape[0] // M) + x.shape[1:])
+                if batch_axes:
+                    from jax.sharding import PartitionSpec as P
+                    ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+                    spec = P(None, ax, *([None] * (y.ndim - 2)))
+                    y = jax.lax.with_sharding_constraint(y, spec)
+                return y
+
+            mb = jax.tree_util.tree_map(slice_mb, batch)
+
+            def accum(carry, mb_i):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb_i, rng)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(accum, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree_util.tree_map(lambda g: (g / M).astype(g.dtype), grads)
+            loss = loss_sum / M
+            metrics = {"loss": loss, "ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ------------------------------------------------------------------ serving
+def make_prefill_step(model: Model, *, max_cache_len: int,
+                      cache_dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        return model.prefill(params, batch["tokens"], extras=extras or None,
+                             max_cache_len=max_cache_len, cache_dtype=cache_dtype)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, token, caches, position, extras=None):
+        return model.decode_step(params, token, caches, position=position,
+                                 extras=extras)
+
+    return decode_step
+
+
+# ------------------------------------------------------------------ federated
+def make_federated_train_step(model: Model, optimizer: Optimizer, *,
+                              clip_norm: float = 1.0):
+    """vmap the base step over the group axis (params [G, ...], batch [G, ...]).
+
+    Under pjit with the group axis sharded over ``pod`` this is per-pod local
+    training: zero cross-pod collectives inside the step (GSPMD sees a
+    batched computation; all reductions stay within a group's mesh block).
+    """
+    base = make_train_step(model, optimizer, clip_norm=clip_norm)
+
+    def step_one(params, opt_state, batch, step, rng):
+        return base(params, opt_state, batch, step, rng)
+
+    def federated_step(params_g, opt_state_g, batch_g, step, rngs_g=None):
+        if rngs_g is None:
+            return jax.vmap(lambda p, o, b: step_one(p, o, b, step, None))(
+                params_g, opt_state_g, batch_g)
+        return jax.vmap(lambda p, o, b, r: step_one(p, o, b, step, r))(
+            params_g, opt_state_g, batch_g, rngs_g)
+
+    return federated_step
+
+
+def federated_sync(params_g, *, exclude: Optional[Callable[[str], bool]] = None):
+    """FedAvg over the group axis (paper Eq. 1, uniform α): the ONLY cross-pod
+    collective of the federated schedule. Returns group-stacked params again
+    (every group gets the average)."""
+    def avg(path, leaf):
+        if exclude is not None and exclude(_pstr(path)):
+            return leaf
+        mean = jnp.mean(leaf.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, leaf.shape).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(avg, params_g)
+
+
+def federated_sync_weighted(params_g, weights):
+    """Performance-weighted α (beyond paper §7.3). weights: [G]."""
+    w = weights / jnp.sum(weights)
+
+    def avg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        mean = jnp.sum(leaf.astype(jnp.float32) * wb, axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, leaf.shape).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(avg, params_g)
+
+
+def cascade_shift(params_g):
+    """Ring hand-off (massive-regime cascade): group g receives g-1's params.
+    Lowered by GSPMD to a collective-permute on the pod axis."""
+    return jax.tree_util.tree_map(lambda leaf: jnp.roll(leaf, 1, axis=0), params_g)
+
+
+def _pstr(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+# ------------------------------------------------------------------ scoring
+def make_score_step(model: Model, *, mc_samples: int = 4,
+                    acquisition_fn: str = "entropy"):
+    """Pod-scale AL scoring step: MC-dropout sequence uncertainty (selection.py).
+
+    Requires cfg.dropout_rate > 0 for non-degenerate MC sampling; with 0 it
+    degenerates to deterministic entropy (still a valid acquisition signal).
+    """
+    from repro.core.selection import sequence_scores
+
+    def score_step(params, batch, rng):
+        extras = {k: v for k, v in batch.items() if k not in ("tokens", "targets")}
+        keys = jax.random.split(rng, mc_samples)
+
+        def one(k):
+            logits, _ = model.apply(params, batch["tokens"], rng=k,
+                                    deterministic=False, extras=extras or None)
+            return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+        logp = jax.lax.map(one, keys)        # [T, B, S, V] via sequential map
+        return sequence_scores(logp, acquisition_fn=acquisition_fn)
+
+    return score_step

@@ -1,0 +1,96 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On the CPU container this trains the arch's REDUCED variant on synthetic LM
+data (full configs are exercised via launch/dryrun.py); on a real TPU slice
+the same driver runs the full config over the production mesh — the step
+functions, sharding rules and federated schedule are identical.
+
+Federated mode (--groups G --sync-every H) realizes the paper's technique:
+G model replicas train locally; parameters average every H steps (Eq. 1).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_round
+from repro.configs import ARCH_IDS, get_config
+from repro.data.lm import SyntheticLMStream
+from repro.launch.steps import federated_sync, make_train_step
+from repro.models import build_model
+from repro.optim import adafactor, adamw, warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--groups", type=int, default=1,
+                    help=">1 enables the federated schedule")
+    ap.add_argument("--sync-every", type=int, default=5)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (pod-scale) config — TPU slices only")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced(max_seq_len=max(512, args.seq))
+    model = build_model(cfg)
+    n = sum(int(np.prod(s.shape)) for s in
+            jax.tree_util.tree_leaves(jax.eval_shape(model.init, jax.random.key(0))))
+    print(f"arch={args.arch} ({'full' if args.full_config else 'reduced'}) "
+          f"params={n/1e6:.1f}M groups={args.groups}")
+
+    opt = (adafactor(warmup_cosine(1e-3, 10, max(100, args.steps)))
+           if args.arch in ("deepseek-v2-236b", "arctic-480b")
+           else adamw(warmup_cosine(3e-4, 10, max(100, args.steps))))
+    step_fn = jax.jit(make_train_step(model, opt,
+                                      num_microbatches=args.microbatches))
+
+    G = args.groups
+    streams = [SyntheticLMStream(vocab=cfg.vocab_size, seed=g) for g in range(G)]
+    params_g = [model.init(jax.random.key(g)) for g in range(G)]
+    opt_g = [opt.init(p) for p in params_g]
+    extras_shapes = model.extra_input_shapes(args.batch, args.seq)
+
+    key = jax.random.key(0)
+    t0 = time.time()
+    for step in range(args.steps):
+        losses = []
+        for g in range(G):
+            toks, tgt = streams[g].sample(args.batch, args.seq,
+                                          seed=1000 * step + g)
+            batch = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(tgt)}
+            for k, shp in extras_shapes.items():
+                key, ek = jax.random.split(key)
+                batch[k] = jax.random.normal(ek, shp, jnp.float32)
+            params_g[g], opt_g[g], m = step_fn(params_g[g], opt_g[g], batch,
+                                               jnp.asarray(step))
+            losses.append(float(m["loss"]))
+        if G > 1 and (step + 1) % args.sync_every == 0:
+            stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params_g)
+            synced = federated_sync(stacked)
+            params_g = [jax.tree_util.tree_map(lambda x: x[g], synced)
+                        for g in range(G)]
+            print(f"step {step+1:4d} losses={[f'{l:.3f}' for l in losses]} [sync]")
+        elif (step + 1) % 5 == 0 or step == 0:
+            print(f"step {step+1:4d} losses={[f'{l:.3f}' for l in losses]} "
+                  f"({time.time()-t0:.0f}s)")
+        if args.ckpt_dir and (step + 1) % 10 == 0:
+            save_round(args.ckpt_dir, step + 1, fog_model=params_g[0],
+                       metadata={"loss": losses[0], "arch": args.arch})
+    print(f"trained {args.steps} steps in {time.time()-t0:.0f}s; "
+          f"final losses={[f'{l:.3f}' for l in losses]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Unified model API: build_model(cfg) → Model with train/prefill/decode fns.
+
+All model functions are pure (params explicit) so they drop straight into
+pjit / shard_map in launch/. ``extras`` carries modality-stub inputs
+(whisper frame embeddings, VLM image embeddings) — see input_specs in
+launch/dryrun.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import whisper as W
+from repro.models.config import ModelConfig
+from repro.models.decoder import decoder_caches_init, decoder_forward, decoder_init
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable                 # (key) -> params
+    apply: Callable                # (params, tokens, *, rng, deterministic, extras) -> (logits, aux)
+    prefill: Callable              # (params, tokens, *, extras, max_cache_len) -> (last_logits, caches)
+    decode_step: Callable          # (params, token, caches, *, position, extras) -> (logits, caches)
+    caches_init: Callable          # (batch, max_len, *, extras_shape) -> caches
+
+    def extra_input_shapes(self, batch: int, seq_len: int) -> Dict[str, tuple]:
+        """Shapes of stubbed modality inputs for this family."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return {"frames": (batch, seq_len, cfg.d_model)}
+        if cfg.family == "vlm":
+            return {"image_embeds": (batch, cfg.n_image_tokens, cfg.d_model)}
+        return {}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_whisper(cfg)
+    return _build_decoder(cfg)
+
+
+# ------------------------------------------------------------- decoder-ish
+def _build_decoder(cfg: ModelConfig) -> Model:
+    def init(key):
+        return decoder_init(key, cfg)
+
+    def apply(params, tokens, *, rng=None, deterministic=True, extras=None):
+        image_embeds = (extras or {}).get("image_embeds")
+        logits, _, aux = decoder_forward(
+            params, tokens, cfg=cfg, image_embeds=image_embeds, rng=rng,
+            deterministic=deterministic)
+        return logits, aux
+
+    def prefill(params, tokens, *, extras=None, max_cache_len: int,
+                cache_dtype=jnp.bfloat16):
+        image_embeds = (extras or {}).get("image_embeds")
+        logits, caches, _ = decoder_forward(
+            params, tokens, cfg=cfg, image_embeds=image_embeds,
+            collect_prefill_caches=True, max_cache_len=max_cache_len,
+            cache_dtype=cache_dtype, last_logit_only=True)
+        return logits, caches
+
+    def decode_step(params, token, caches, *, position, extras=None):
+        image_embeds = (extras or {}).get("image_embeds")
+        positions = position[None] if jnp.ndim(position) == 0 else position
+        logits, new_caches, _ = decoder_forward(
+            params, token, cfg=cfg, positions=positions, caches=caches,
+            decode=True, image_embeds=image_embeds)
+        return logits, new_caches
+
+    def caches_init(batch: int, max_len: int, *, extras_shape=None,
+                    dtype=jnp.bfloat16):
+        return decoder_caches_init(cfg, batch, max_len, dtype=dtype)
+
+    return Model(cfg=cfg, init=init, apply=apply, prefill=prefill,
+                 decode_step=decode_step, caches_init=caches_init)
+
+
+# ------------------------------------------------------------- whisper
+def _build_whisper(cfg: ModelConfig) -> Model:
+    def init(key):
+        return W.whisper_init(key, cfg)
+
+    def apply(params, tokens, *, rng=None, deterministic=True, extras=None):
+        frames = extras["frames"]
+        enc_out = W.encode(params, frames, cfg=cfg)
+        logits = W.decode_train(params, tokens, enc_out, cfg=cfg)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def prefill(params, tokens, *, extras=None, max_cache_len: int,
+                cache_dtype=jnp.bfloat16):
+        return W.prefill(params, tokens, extras["frames"], cfg=cfg,
+                         max_cache_len=max_cache_len, cache_dtype=cache_dtype)
+
+    def decode_step(params, token, caches, *, position, extras=None):
+        return W.decode_step(params, token, caches, cfg=cfg, position=position)
+
+    def caches_init(batch: int, max_len: int, *, extras_shape=None,
+                    dtype=jnp.bfloat16):
+        enc_len = extras_shape["frames"][1] if extras_shape else cfg.encoder_seq_len
+        return W.whisper_caches_init(cfg, batch, max_len, enc_len, dtype=dtype)
+
+    return Model(cfg=cfg, init=init, apply=apply, prefill=prefill,
+                 decode_step=decode_step, caches_init=caches_init)

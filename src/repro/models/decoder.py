@@ -1,0 +1,351 @@
+"""Generic decoder-only LM assembly for all decoder-ish families.
+
+The layer stack is expressed as a repeating *pattern unit* (config
+``attn_pattern``), e.g. gemma2 = ("L", "G"), recurrentgemma = ("R","R","L"),
+llama-3.2-vision = ("S","S","S","S","X"), mamba2 = ("M",). Parameters for
+each pattern position are stacked across units and the stack is traversed
+with jax.lax.scan (+ per-unit remat) — HLO size and compile time are O(1)
+in depth, which is what lets the 60-layer/236B configs lower quickly
+(DESIGN.md §6). Non-dividing remainders become unrolled tail layers; the
+``first_k_dense`` MoE prologue becomes unrolled head layers.
+
+Layer type codes:
+  S global attention   L sliding-window attention   R RG-LRU recurrent block
+  M mamba2 (SSD) block X gated cross-attention (image/encoder tokens)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn import embeddings as emb
+from repro.nn import layers as L
+from repro.nn.attention import (cache_from_prefill, cross_attn_init,
+                                cross_attn_apply, gqa_apply, gqa_init, init_cache)
+from repro.nn.mla import (mla_apply, mla_cache_from_prefill, mla_decode,
+                          mla_init, mla_init_cache)
+from repro.nn.moe import moe_apply, moe_init
+from repro.nn.norms import rmsnorm_apply, rmsnorm_init, layernorm_apply, layernorm_init
+from repro.nn.rglru import (recurrent_block_apply, recurrent_block_init,
+                            recurrent_block_init_cache)
+from repro.nn.ssm import mamba2_apply, mamba2_decode, mamba2_init, mamba2_init_cache
+
+
+def _norm_init(cfg, dim=None):
+    dim = dim or cfg.d_model
+    return rmsnorm_init(dim) if cfg.norm == "rmsnorm" else layernorm_init(dim)
+
+
+def _norm_apply(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm_apply(p, x)
+    return layernorm_apply(p, x)
+
+
+def _use_moe(cfg, *, is_head_layer: bool) -> bool:
+    return cfg.n_experts > 0 and not is_head_layer
+
+
+# ================================================================ layer init
+def layer_init(key, cfg: ModelConfig, ltype: str, *, is_head_layer: bool = False):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if ltype in ("S", "L"):
+        p["attn_norm"] = _norm_init(cfg)
+        p["attn"] = mla_init(ks[0], cfg) if cfg.use_mla else gqa_init(ks[0], cfg)
+        if cfg.use_post_norms:
+            p["post_attn_norm"] = _norm_init(cfg)
+    elif ltype == "R":
+        p["attn_norm"] = _norm_init(cfg)
+        p["recurrent"] = recurrent_block_init(ks[0], cfg)
+    elif ltype == "M":
+        p["attn_norm"] = _norm_init(cfg)
+        p["mamba"] = mamba2_init(ks[0], cfg)
+        return p  # mamba blocks have no separate MLP
+    elif ltype == "X":
+        p["attn_norm"] = _norm_init(cfg)
+        p["cross_attn"] = cross_attn_init(ks[0], cfg, gated=True)
+        p["gate_ffn"] = jnp.zeros((), cfg.param_dtype)
+    else:
+        raise ValueError(ltype)
+
+    p["mlp_norm"] = _norm_init(cfg)
+    if _use_moe(cfg, is_head_layer=is_head_layer) and ltype != "X":
+        p["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = (L.mlp_gelu_init(ks[1], cfg.d_model, cfg.d_ff)
+                    if cfg.activation == "gelu"
+                    else L.mlp_init(ks[1], cfg.d_model, cfg.d_ff))
+    if cfg.use_post_norms:
+        p["post_mlp_norm"] = _norm_init(cfg)
+    return p
+
+
+# ================================================================ layer apply
+def layer_apply(params, x, *, cfg: ModelConfig, ltype: str, positions,
+                cache=None, decode: bool = False, image_embeds=None,
+                rng=None, deterministic: bool = True, impl: str = "auto",
+                collect_cache: bool = False):
+    """One decoder layer. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    res_scale = jnp.asarray(cfg.residual_scale or 1.0, x.dtype)
+
+    def _drop(key_idx, h):
+        if deterministic or cfg.dropout_rate == 0.0:
+            return h
+        return L.dropout(jax.random.fold_in(rng, key_idx), h, cfg.dropout_rate)
+
+    # ---- sequence mixing ----------------------------------------------------
+    h = _norm_apply(cfg, params["attn_norm"], x)
+    if ltype in ("S", "L"):
+        window = cfg.sliding_window if ltype == "L" else None
+        if cfg.use_mla:
+            if decode:
+                h, new_cache = mla_decode(params["attn"], h, cache, cfg=cfg,
+                                          position=positions[0])
+            else:
+                h, new_cache = mla_apply(params["attn"], h, cfg=cfg,
+                                         positions=positions, impl=impl)
+        else:
+            h, new_cache = gqa_apply(params["attn"], h, cfg=cfg, positions=positions,
+                                     window=window, cache=cache, decode=decode,
+                                     impl=impl)
+    elif ltype == "R":
+        h, new_cache = recurrent_block_apply(params["recurrent"], h, cfg=cfg,
+                                             cache=cache, decode=decode)
+    elif ltype == "M":
+        if decode:
+            h, new_cache = mamba2_decode(params["mamba"], h, cache, cfg=cfg)
+        elif collect_cache:
+            h, new_cache = mamba2_apply(params["mamba"], h, cfg=cfg, return_cache=True)
+        else:
+            h = mamba2_apply(params["mamba"], h, cfg=cfg)
+            new_cache = None
+        h = _drop(0, h)
+        return x + res_scale * h, new_cache, aux
+    elif ltype == "X":
+        h = cross_attn_apply(params["cross_attn"], h, image_embeds, cfg=cfg, impl=impl)
+        new_cache = {}
+
+    if "post_attn_norm" in params:
+        h = _norm_apply(cfg, params["post_attn_norm"], h)
+    x = x + res_scale * _drop(0, h)
+
+    # ---- channel mixing -------------------------------------------------------
+    h = _norm_apply(cfg, params["mlp_norm"], x)
+    if "moe" in params:
+        h, aux = moe_apply(params["moe"], h, cfg=cfg)
+    elif cfg.activation == "gelu":
+        h = L.mlp_gelu_apply(params["mlp"], h)
+    else:
+        h = L.mlp_apply(params["mlp"], h, activation=cfg.activation)
+    if "post_mlp_norm" in params:
+        h = _norm_apply(cfg, params["post_mlp_norm"], h)
+    if ltype == "X":
+        h = jnp.tanh(params["gate_ffn"].astype(h.dtype)) * h
+    x = x + res_scale * _drop(1, h)
+    return x, new_cache, aux
+
+
+# ================================================================ cache init
+def layer_cache_init(cfg: ModelConfig, ltype: str, batch: int, max_len: int,
+                     *, dtype=jnp.bfloat16):
+    if ltype in ("S", "L"):
+        if cfg.use_mla:
+            return mla_init_cache(batch, max_len, cfg, dtype=dtype)
+        window = cfg.sliding_window if ltype == "L" else None
+        kind = "ring" if window is not None else "full"
+        return init_cache(batch, max_len, cfg.n_kv_heads, cfg.resolved_head_dim,
+                          kind=kind, window=window, dtype=dtype)
+    if ltype == "R":
+        return recurrent_block_init_cache(batch, cfg)
+    if ltype == "M":
+        return mamba2_init_cache(batch, cfg)
+    if ltype == "X":
+        return {}  # cross-attn keys come from static image/encoder tokens
+    raise ValueError(ltype)
+
+
+# ================================================================ full model
+def _layer_plan(cfg: ModelConfig) -> Tuple[List[str], List[str], List[str]]:
+    """(head_types, pattern, tail_types) with first_k_dense as head layers."""
+    head = [cfg.attn_pattern[i % len(cfg.attn_pattern)] for i in range(cfg.first_k_dense)]
+    return head, list(cfg.attn_pattern), list(cfg.tail_pattern)
+
+
+def decoder_init(key, cfg: ModelConfig):
+    head_types, pattern, tail_types = _layer_plan(cfg)
+    U = cfg.pattern_units
+    n_keys = 3 + len(head_types) + len(tail_types)
+    ks = iter(jax.random.split(key, n_keys + len(pattern) * U))
+    params: Dict[str, Any] = {"embed": emb.embed_init(next(ks), cfg.vocab_size,
+                                                      cfg.d_model, dtype=cfg.param_dtype)}
+    params["head_layers"] = [layer_init(next(ks), cfg, t, is_head_layer=True)
+                             for t in head_types]
+    units = []
+    for p_idx, t in enumerate(pattern):
+        stacked = [layer_init(next(ks), cfg, t) for _ in range(U)]
+        units.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacked))
+    params["units"] = units
+    params["tail_layers"] = [layer_init(next(ks), cfg, t) for t in tail_types]
+    params["final_norm"] = _norm_init(cfg)
+    if not cfg.tie_embeddings:
+        from repro.nn import init as initializers
+        params["unembed"] = {"kernel": initializers.lecun_normal()(
+            next(ks), (cfg.d_model, cfg.vocab_size), cfg.param_dtype)}
+    return params
+
+
+def _stack_unit_caches(cfg, pattern, batch, max_len, U, dtype):
+    out = []
+    for t in pattern:
+        one = layer_cache_init(cfg, t, batch, max_len, dtype=dtype)
+        out.append(jax.tree_util.tree_map(lambda x: jnp.stack([x] * U), one))
+    return out
+
+
+def decoder_caches_init(cfg: ModelConfig, batch: int, max_len: int, *,
+                        dtype=jnp.bfloat16):
+    head_types, pattern, tail_types = _layer_plan(cfg)
+    return {
+        "head": [layer_cache_init(cfg, t, batch, max_len, dtype=dtype) for t in head_types],
+        "units": _stack_unit_caches(cfg, pattern, batch, max_len, cfg.pattern_units, dtype),
+        "tail": [layer_cache_init(cfg, t, batch, max_len, dtype=dtype) for t in tail_types],
+    }
+
+
+def decoder_forward(params, tokens, *, cfg: ModelConfig, positions=None,
+                    caches=None, decode: bool = False, image_embeds=None,
+                    rng=None, deterministic: bool = True, impl: str = "auto",
+                    collect_prefill_caches: bool = False, max_cache_len: int = 0,
+                    cache_dtype=jnp.bfloat16, last_logit_only: bool = False):
+    """Run the decoder. Returns (logits, new_caches, aux_loss).
+
+    * train:    decode=False, caches=None
+    * prefill:  decode=False, collect_prefill_caches=True (builds decode caches)
+    * decode:   decode=True, caches given, tokens [B, 1]
+    """
+    head_types, pattern, tail_types = _layer_plan(cfg)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    x = emb.embed_apply(params["embed"], tokens, scale=cfg.scale_embeddings,
+                        dtype=cfg.dtype)
+    aux_total = jnp.zeros((), jnp.float32)
+    layer_counter = 0
+
+    def run_layer(p, x, t, cache, idx):
+        r = jax.random.fold_in(rng, idx) if rng is not None else None
+        return layer_apply(p, x, cfg=cfg, ltype=t, positions=positions,
+                           cache=cache, decode=decode, image_embeds=image_embeds,
+                           rng=r, deterministic=deterministic, impl=impl,
+                           collect_cache=collect_prefill_caches)
+
+    new_caches: Dict[str, Any] = {"head": [], "units": [], "tail": []}
+
+    # ---- head layers (unrolled) ------------------------------------------------
+    for i, (p, t) in enumerate(zip(params["head_layers"], head_types)):
+        c = caches["head"][i] if caches is not None else None
+        x, nc, aux = run_layer(p, x, t, c, layer_counter)
+        layer_counter += 1
+        aux_total += aux
+        new_caches["head"].append(_maybe_cacheify(cfg, t, nc, decode,
+                                                  collect_prefill_caches,
+                                                  max_cache_len, cache_dtype))
+
+    # ---- pattern units (scanned) ---------------------------------------------
+    U = cfg.pattern_units
+    base_counter = layer_counter
+
+    def unit_fn(carry, xs):
+        x, unit_idx = carry
+        unit_params, unit_caches = xs
+        out_caches = []
+        aux_sum = jnp.zeros((), jnp.float32)
+        for p_idx, t in enumerate(pattern):
+            r = (jax.random.fold_in(rng, base_counter * 1000 + p_idx)
+                 if rng is not None else None)
+            r = jax.random.fold_in(r, unit_idx) if r is not None else None
+            c = unit_caches[p_idx] if unit_caches is not None else None
+            x, nc, aux = layer_apply(
+                unit_params[p_idx], x, cfg=cfg, ltype=t, positions=positions,
+                cache=c, decode=decode, image_embeds=image_embeds, rng=r,
+                deterministic=deterministic, impl=impl,
+                collect_cache=collect_prefill_caches)
+            aux_sum += aux
+            out_caches.append(_maybe_cacheify(cfg, t, nc, decode,
+                                              collect_prefill_caches,
+                                              max_cache_len, cache_dtype))
+        if all(oc is None for oc in out_caches):
+            out_caches = None
+        return (x, unit_idx + 1), (out_caches, aux_sum)
+
+    if U > 0:
+        unit_fn_run = jax.checkpoint(unit_fn) if cfg.remat else unit_fn
+        unit_caches_xs = caches["units"] if caches is not None else None
+        if unit_caches_xs is None:
+            unit_caches_xs = [None] * len(pattern)
+            xs = (tuple(params["units"]), tuple(unit_caches_xs))
+            # lax.scan can't carry None in xs; scan over params only
+            (x, _), (out_caches, aux_per_unit) = jax.lax.scan(
+                lambda c, up: unit_fn_run(c, (up, [None] * len(pattern))),
+                (x, jnp.zeros((), jnp.int32)), tuple(params["units"]))
+        else:
+            (x, _), (out_caches, aux_per_unit) = jax.lax.scan(
+                unit_fn_run, (x, jnp.zeros((), jnp.int32)),
+                (tuple(params["units"]), tuple(unit_caches_xs)))
+        aux_total += jnp.sum(aux_per_unit)
+        new_caches["units"] = out_caches
+    layer_counter += U * len(pattern)
+
+    # ---- tail layers (unrolled) --------------------------------------------------
+    for i, (p, t) in enumerate(zip(params["tail_layers"], tail_types)):
+        c = caches["tail"][i] if caches is not None else None
+        x, nc, aux = run_layer(p, x, t, c, layer_counter)
+        layer_counter += 1
+        aux_total += aux
+        new_caches["tail"].append(_maybe_cacheify(cfg, t, nc, decode,
+                                                  collect_prefill_caches,
+                                                  max_cache_len, cache_dtype))
+
+    if last_logit_only:
+        x = x[:, -1:]            # prefill: only the next-token logit is needed
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = (emb.unembed_apply(params["embed"], x, tied=True)
+              if cfg.tie_embeddings
+              else x @ params["unembed"]["kernel"].astype(x.dtype))
+    if cfg.final_logit_softcap:
+        cap = cfg.final_logit_softcap
+        logits = cap * jnp.tanh(logits / cap)
+    return logits, new_caches, aux_total
+
+
+def _maybe_cacheify(cfg, ltype, layer_out_cache, decode, collect, max_len, dtype):
+    """Convert a layer's cache output to the decode-cache format.
+
+    decode: layer already returned the updated decode cache — pass through.
+    prefill (collect=True): convert (k, v)/latents/states to decode caches.
+    train: drop.
+    """
+    if decode:
+        return layer_out_cache
+    if not collect:
+        return None
+    if ltype in ("S", "L") and not cfg.use_mla:
+        k, v = layer_out_cache
+        window = cfg.sliding_window if ltype == "L" else None
+        kind = "ring" if window is not None else "full"
+        return cache_from_prefill(k, v, kind=kind, max_len=max_len,
+                                  window=window, dtype=dtype)
+    if ltype in ("S", "L") and cfg.use_mla:
+        ckv, krope = layer_out_cache
+        return mla_cache_from_prefill(ckv, krope, max_len=max_len, dtype=dtype)
+    if ltype in ("R", "M"):
+        return layer_out_cache  # already {"conv": ..., "state": ...}
+    if ltype == "X":
+        return {}
+    return None

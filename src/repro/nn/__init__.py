@@ -1,0 +1,1 @@
+"""Functional neural-network substrate (no flax): init/apply pairs over pytrees."""

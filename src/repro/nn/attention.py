@@ -1,0 +1,285 @@
+"""Attention: GQA projections + masked online-softmax core + KV caches.
+
+Three interchangeable cores (selected by ``impl``):
+  * ``naive``     — materializes [B, H, Sq, Skv] scores. Smoke tests only.
+  * ``blockwise`` — lax.scan over KV blocks with an online softmax (the
+    flash-attention recurrence expressed in XLA). O(Sq·block) memory, the
+    path used by the big dry-run shapes; compiles on any backend.
+  * ``pallas``    — the TPU Pallas kernel (repro.kernels.flash_attention),
+    same blocking strategy tiled for VMEM/MXU.
+
+Cache kinds:
+  * full — [B, S_max, Hkv, hd] k/v plus absolute-position array; decode
+    writes at position t.
+  * ring — [B, W, Hkv, hd] circular buffer for sliding-window layers; slot
+    t % W. This is what makes long_500k decode feasible for gemma2 /
+    recurrentgemma local layers (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.norms import rmsnorm_apply, rmsnorm_init
+from repro.nn.rope import apply_rope
+
+_NEG_INF = -2.0e38
+
+
+# =============================================================== core
+def _mask_block(q_pos, kv_pos, *, causal: bool, window: Optional[int], kv_valid=None):
+    """Boolean mask [.., Sq, Skv] from absolute positions [Sq], [Skv]."""
+    m = jnp.ones((q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - kv_pos[None, :]) < window
+    m &= kv_pos[None, :] >= 0  # ring-buffer empty slots carry pos = -1
+    if kv_valid is not None:
+        m &= kv_valid[None, :]
+    return m
+
+
+def _scores(q, k, *, scale, softcap):
+    """q [B, Sq, Hkv, rep, d] · k [B, Skv, Hkv, d] → [B, Hkv, rep, Sq, Skv]."""
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def attention_core(q, k, v, *, q_pos, kv_pos, causal: bool = True,
+                   window: Optional[int] = None, softcap: Optional[float] = None,
+                   scale: Optional[float] = None, impl: str = "auto",
+                   kv_valid=None, block_kv: int = 1024):
+    """q: [B, Sq, H, d]; k, v: [B, Skv, Hkv, d] → [B, Sq, H, d].
+
+    ``q_pos`` [Sq] and ``kv_pos`` [Skv] are absolute token positions
+    (int32); masking is derived entirely from them, which makes the same
+    core serve train, prefill, full-cache decode and ring-cache decode.
+    """
+    B, Sq, H, d = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(B, Sq, Hkv, rep, d)
+
+    if impl == "auto":
+        impl = "blockwise" if k.shape[1] > 2048 and Sq > 1 else "naive"
+
+    if impl == "naive":
+        s = _scores(qg, k, scale=scale, softcap=softcap)
+        mask = _mask_block(q_pos, kv_pos, causal=causal, window=window, kv_valid=kv_valid)
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # rows with no valid key (fully masked) produce ~uniform rows; zero them
+        any_valid = jnp.any(mask, axis=-1)[None, None, None, :, None]
+        p = jnp.where(any_valid, p, 0.0)
+        out = jnp.einsum("bhrqk,bkhd->bqhrd", p.astype(v.dtype), v)
+        return out.reshape(B, Sq, H, d)
+
+    if impl == "blockwise":
+        Skv = k.shape[1]
+        nb = -(-Skv // block_kv)
+        pad = nb * block_kv - Skv
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_p = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+        valid_p = (jnp.pad(kv_valid, (0, pad), constant_values=False)
+                   if kv_valid is not None else None)
+        kb = kp.reshape(B, nb, block_kv, Hkv, d).transpose(1, 0, 2, 3, 4)
+        vb = vp.reshape(B, nb, block_kv, Hkv, d).transpose(1, 0, 2, 3, 4)
+        posb = pos_p.reshape(nb, block_kv)
+        validb = valid_p.reshape(nb, block_kv) if valid_p is not None else None
+
+        m0 = jnp.full((B, Hkv, rep, Sq), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+        acc0 = jnp.zeros((B, Hkv, rep, Sq, d), jnp.float32)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            if validb is not None:
+                kblk, vblk, pblk, vldblk = xs
+            else:
+                kblk, vblk, pblk = xs
+                vldblk = None
+            s = _scores(qg, kblk, scale=scale, softcap=softcap)  # [B,Hkv,rep,Sq,bk]
+            mask = _mask_block(q_pos, pblk, causal=causal, window=window, kv_valid=vldblk)
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.maximum(m_new, -1e30)  # rows w/ no valid key yet
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(jnp.maximum(m, -1e30) - m_safe) * (m > _NEG_INF / 2)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhrqk,bkhd->bhrqd", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        xs = (kb, vb, posb) if validb is None else (kb, vb, posb, validb)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), xs)
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, d)
+        return out.astype(q.dtype)
+
+    if impl == "pallas":
+        from repro.kernels import flash_attention as fa
+
+        return fa.flash_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                                  window=window, softcap=softcap, scale=scale)
+    raise ValueError(impl)
+
+
+# =============================================================== projections
+def gqa_init(key, cfg, *, dtype=None):
+    """Standard GQA projection params for a ModelConfig-like cfg."""
+    dtype = dtype or cfg.param_dtype
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    ki = initializers.lecun_normal()
+    p = {
+        "wq": {"kernel": ki(ks[0], (d, H * hd), dtype)},
+        "wk": {"kernel": ki(ks[1], (d, Hkv * hd), dtype)},
+        "wv": {"kernel": ki(ks[2], (d, Hkv * hd), dtype)},
+        "wo": {"kernel": ki(ks[3], (H * hd, d), dtype)},
+    }
+    if getattr(cfg, "attn_bias", False):
+        p["wq"]["bias"] = jnp.zeros((H * hd,), dtype)
+        p["wv"]["bias"] = jnp.zeros((Hkv * hd,), dtype)
+        p["wo"]["bias"] = jnp.zeros((d,), dtype)
+    if getattr(cfg, "qk_norm", False):
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _proj(p, x, heads, hd):
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y.reshape(x.shape[:-1] + (heads, hd))
+
+
+# =============================================================== caches
+def init_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+               *, kind: str = "full", window: Optional[int] = None, dtype=jnp.bfloat16):
+    """Create an empty decode cache. ``kind='ring'`` sizes it to the window."""
+    size = window if kind == "ring" else max_len
+    assert size is not None
+    return {
+        "k": jnp.zeros((batch, size, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, size, n_kv_heads, head_dim), dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def cache_update_decode(cache, k_new, v_new, position):
+    """Write one token (k_new/v_new [B, 1, Hkv, hd]) at absolute ``position``."""
+    size = cache["k"].shape[1]
+    slot = position % size
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], position[None].astype(jnp.int32), slot, axis=0)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def cache_from_prefill(k, v, *, kind: str, max_len: int, window: Optional[int],
+                       dtype=jnp.bfloat16):
+    """Build a cache holding a prefilled sequence k/v [B, S, Hkv, hd]."""
+    B, S = k.shape[:2]
+    if kind == "ring":
+        W = window
+        take = min(S, W)
+        k_tail, v_tail = k[:, -take:], v[:, -take:]
+        positions = jnp.arange(S - take, S, dtype=jnp.int32)
+        slots = positions % W
+        cache = init_cache(B, max_len, k.shape[2], k.shape[3], kind="ring",
+                           window=W, dtype=dtype)
+        cache["k"] = cache["k"].at[:, slots].set(k_tail.astype(dtype))
+        cache["v"] = cache["v"].at[:, slots].set(v_tail.astype(dtype))
+        cache["pos"] = cache["pos"].at[slots].set(positions)
+        return cache
+    cache = init_cache(B, max_len, k.shape[2], k.shape[3], kind="full", dtype=dtype)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(dtype), 0, axis=1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(dtype), 0, axis=1)
+    cache["pos"] = cache["pos"].at[:S].set(jnp.arange(S, dtype=jnp.int32))
+    return cache
+
+
+# =============================================================== full layer
+def gqa_apply(params, x, *, cfg, positions, window: Optional[int] = None,
+              cache=None, decode: bool = False, impl: str = "auto",
+              scale: Optional[float] = None):
+    """Self-attention layer body. Returns (out, new_cache_kv or None).
+
+    * train:      cache=None, decode=False → (out, (k, v)) for later caching
+    * decode:     cache=dict, decode=True, x is [B, 1, D], positions [1]
+    """
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = _proj(params["wq"], x, H, hd)
+    k = _proj(params["wk"], x, Hkv, hd)
+    v = _proj(params["wv"], x, Hkv, hd)
+
+    if "q_norm" in params:
+        q = rmsnorm_apply(params["q_norm"], q)
+        k = rmsnorm_apply(params["k_norm"], k)
+
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+
+    if getattr(cfg, "shard_hints", False) and not decode:
+        # §Perf: pin the post-reshape head layout; GSPMD otherwise reshards
+        # [B,S,H*hd]→[B,S,H,hd] with all-to-alls when H < model-axis size
+        from repro.nn.shard_hints import hint_heads
+        q = hint_heads(q)
+        k = hint_heads(k)
+        v = hint_heads(v)
+
+    if decode:
+        assert cache is not None
+        cache = cache_update_decode(cache, k, v, positions[0])
+        k_all, v_all, kv_pos = cache["k"], cache["v"], cache["pos"]
+    else:
+        k_all, v_all, kv_pos = k, v, positions
+
+    out = attention_core(q, k_all.astype(q.dtype), v_all.astype(q.dtype),
+                         q_pos=positions, kv_pos=kv_pos, causal=True,
+                         window=window, softcap=cfg.attn_logit_softcap,
+                         scale=scale, impl=impl)
+    out = out.reshape(out.shape[:2] + (H * hd,))
+    y = out @ params["wo"]["kernel"].astype(out.dtype)
+    if "bias" in params["wo"]:
+        y = y + params["wo"]["bias"].astype(y.dtype)
+    return y, (cache if decode else (k, v))
+
+
+# =============================================================== cross-attn
+def cross_attn_init(key, cfg, *, gated: bool = False, dtype=None):
+    p = gqa_init(key, cfg, dtype=dtype)
+    if gated:
+        p["gate_attn"] = jnp.zeros((), dtype or cfg.param_dtype)
+    return p
+
+
+def cross_attn_apply(params, x, kv_src, *, cfg, impl: str = "auto"):
+    """Cross-attention: queries from x [B,Sq,D], keys/values from kv_src
+    [B,Skv,D] (encoder output / image embeddings). No RoPE, no causality."""
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = _proj(params["wq"], x, H, hd)
+    k = _proj(params["wk"], kv_src, Hkv, hd)
+    v = _proj(params["wv"], kv_src, Hkv, hd)
+    q_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    kv_pos = jnp.arange(kv_src.shape[1], dtype=jnp.int32)
+    out = attention_core(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=False,
+                         impl=impl)
+    out = out.reshape(out.shape[:2] + (H * hd,))
+    y = out @ params["wo"]["kernel"].astype(out.dtype)
+    if "bias" in params["wo"]:
+        y = y + params["wo"]["bias"].astype(y.dtype)
+    if "gate_attn" in params:
+        y = jnp.tanh(params["gate_attn"].astype(y.dtype)) * y
+    return y

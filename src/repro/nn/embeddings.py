@@ -1,0 +1,42 @@
+"""Token embeddings, unembedding, positional embeddings."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+
+
+def embed_init(key, vocab: int, dim: int, *, dtype=jnp.float32):
+    return {"embedding": initializers.normal(0.02)(key, (vocab, dim), dtype)}
+
+
+def embed_apply(params, tokens, *, scale: bool = False, dtype=jnp.float32):
+    emb = params["embedding"][tokens].astype(dtype)
+    if scale:
+        emb = emb * jnp.asarray(np.sqrt(emb.shape[-1]), dtype)
+    return emb
+
+
+def unembed_apply(params, x, *, tied: bool = True):
+    """Project to vocab. With ``tied=True`` params is the embed table dict."""
+    table = params["embedding"] if tied else params["kernel"]
+    if tied:
+        return x @ table.astype(x.dtype).T
+    return x @ table.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int, *, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal embeddings [seq_len, dim]."""
+    pos = np.arange(seq_len)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, dim, 2) / dim)
+    table = np.zeros((seq_len, dim), np.float32)
+    table[:, 0::2] = np.sin(pos * div)
+    table[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(table, dtype)
+
+
+def learned_positions_init(key, seq_len: int, dim: int, *, dtype=jnp.float32):
+    return {"embedding": initializers.normal(0.02)(key, (seq_len, dim), dtype)}

@@ -1,0 +1,85 @@
+"""Parameter initializers.
+
+All initializers take (key, shape, dtype) and return a jnp array. They are
+plain functions so layer code can thread explicit PRNG keys (reproducibility
+across federated devices matters: every edge device derives its init from the
+fog node's dispatch key).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal(stddev: float = 1.0):
+    def _init(key, shape, dtype=jnp.float32):
+        return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+    return _init
+
+
+def truncated_normal(stddev: float = 1.0, lower: float = -2.0, upper: float = 2.0):
+    def _init(key, shape, dtype=jnp.float32):
+        # match TF truncated_normal stddev correction
+        s = stddev / 0.87962566103423978
+        return (s * jax.random.truncated_normal(key, lower, upper, shape)).astype(dtype)
+
+    return _init
+
+
+def _fans(shape, in_axis=-2, out_axis=-1):
+    if len(shape) < 1:
+        return 1, 1
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    receptive = math.prod(shape) / (shape[in_axis] * shape[out_axis])
+    return shape[in_axis] * receptive, shape[out_axis] * receptive
+
+
+def variance_scaling(scale: float, mode: str, distribution: str, in_axis=-2, out_axis=-1):
+    def _init(key, shape, dtype=jnp.float32):
+        fan_in, fan_out = _fans(shape, in_axis, out_axis)
+        denom = {"fan_in": fan_in, "fan_out": fan_out, "fan_avg": (fan_in + fan_out) / 2}[mode]
+        var = scale / max(1.0, denom)
+        if distribution == "normal":
+            x = jax.random.normal(key, shape) * math.sqrt(var)
+        elif distribution == "truncated_normal":
+            x = jax.random.truncated_normal(key, -2.0, 2.0, shape) * (
+                math.sqrt(var) / 0.87962566103423978
+            )
+        elif distribution == "uniform":
+            lim = math.sqrt(3.0 * var)
+            x = jax.random.uniform(key, shape, minval=-lim, maxval=lim)
+        else:
+            raise ValueError(distribution)
+        return x.astype(dtype)
+
+    return _init
+
+
+def lecun_normal(in_axis=-2, out_axis=-1):
+    return variance_scaling(1.0, "fan_in", "truncated_normal", in_axis, out_axis)
+
+
+def glorot_uniform(in_axis=-2, out_axis=-1):
+    return variance_scaling(1.0, "fan_avg", "uniform", in_axis, out_axis)
+
+
+def he_normal(in_axis=-2, out_axis=-1):
+    return variance_scaling(2.0, "fan_in", "truncated_normal", in_axis, out_axis)
+
+
+def embedding_init(stddev: float = 0.02):
+    return normal(stddev)

@@ -1,0 +1,110 @@
+"""Core layers: dense, dropout, gated MLPs, conv/pool (for LeNet)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+
+
+# ---------------------------------------------------------------- dense
+def dense_init(key, in_dim: int, out_dim: int, *, use_bias: bool = False,
+               kernel_init=None, dtype=jnp.float32):
+    kernel_init = kernel_init or initializers.lecun_normal()
+    p = {"kernel": kernel_init(key, (in_dim, out_dim), dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(params, x):
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- dropout
+def dropout(key, x, rate: float, *, deterministic: bool = False):
+    """Inverted dropout. With ``deterministic=True`` it is the identity.
+
+    MC-dropout keeps ``deterministic=False`` at inference and draws a fresh
+    key per posterior sample (Gal & Ghahramani 2016) — see core/mc_dropout.py.
+    """
+    if deterministic or rate == 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, jnp.zeros_like(x))
+
+
+# ---------------------------------------------------------------- activations
+def geglu(x, gate):
+    return jax.nn.gelu(gate, approximate=True) * x
+
+
+def swiglu(x, gate):
+    return jax.nn.silu(gate) * x
+
+
+# ---------------------------------------------------------------- gated MLP
+def mlp_init(key, d_model: int, d_ff: int, *, dtype=jnp.float32):
+    """Gated MLP (GeGLU/SwiGLU share parameter shapes)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    ki = initializers.lecun_normal()
+    return {
+        "wi_gate": {"kernel": ki(k1, (d_model, d_ff), dtype)},
+        "wi_up": {"kernel": ki(k2, (d_model, d_ff), dtype)},
+        "wo": {"kernel": ki(k3, (d_ff, d_model), dtype)},
+    }
+
+
+def mlp_apply(params, x, *, activation: str = "swiglu"):
+    gate = dense_apply(params["wi_gate"], x)
+    up = dense_apply(params["wi_up"], x)
+    h = swiglu(up, gate) if activation == "swiglu" else geglu(up, gate)
+    return dense_apply(params["wo"], h)
+
+
+def mlp_gelu_init(key, d_model: int, d_ff: int, *, use_bias: bool = True, dtype=jnp.float32):
+    """Plain 2-layer GELU MLP (whisper)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, use_bias=use_bias, dtype=dtype),
+        "wo": dense_init(k2, d_ff, d_model, use_bias=use_bias, dtype=dtype),
+    }
+
+
+def mlp_gelu_apply(params, x):
+    return dense_apply(params["wo"], jax.nn.gelu(dense_apply(params["wi"], x)))
+
+
+# ---------------------------------------------------------------- conv (LeNet)
+def conv2d_init(key, in_ch: int, out_ch: int, ksize: int, *, dtype=jnp.float32):
+    ki = initializers.he_normal(in_axis=-2, out_axis=-1)
+    return {
+        "kernel": ki(key, (ksize, ksize, in_ch, out_ch), dtype),
+        "bias": jnp.zeros((out_ch,), dtype),
+    }
+
+
+def conv2d_apply(params, x, *, stride: int = 1, padding="VALID"):
+    """x: [batch, h, w, c] (NHWC)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        params["kernel"].astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + params["bias"].astype(x.dtype)
+
+
+def avg_pool(x, window: int = 2, stride: int = 2):
+    y = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+    return y / float(window * window)

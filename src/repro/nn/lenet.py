@@ -1,0 +1,82 @@
+"""LeNet-5 (paper Table I) with MC-dropout, as a functional init/apply pair.
+
+Architecture (paper Table I): conv6@5x5 → avgpool2 → conv16@5x5 → avgpool2 →
+conv120@5x5 → FC84 → FC10. Input 28x28x1 (first conv SAME-padded so the
+28x28 MNIST geometry flows to a 1x1x120 tensor before the FC head).
+
+Dropout placement follows Gal & Ghahramani's Bayesian LeNet: after each
+pooling stage (p_conv) and after FC84 (p_fc). Keeping dropout active at
+inference turns the forward pass into a draw from q(w) — MC-dropout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+from repro.nn import init as initializers
+
+
+@dataclass(frozen=True)
+class LeNetConfig:
+    num_classes: int = 10
+    p_conv: float = 0.25
+    p_fc: float = 0.5
+    dtype: object = jnp.float32
+
+
+class LeNet:
+    """Namespace class bundling init/apply for the paper's model."""
+
+    @staticmethod
+    def init(key, cfg: LeNetConfig = LeNetConfig()):
+        ks = jax.random.split(key, 5)
+        dt = cfg.dtype
+        ki = initializers.he_normal()
+        return {
+            "conv1": layers.conv2d_init(ks[0], 1, 6, 5, dtype=dt),
+            "conv2": layers.conv2d_init(ks[1], 6, 16, 5, dtype=dt),
+            "conv3": layers.conv2d_init(ks[2], 16, 120, 5, dtype=dt),
+            "fc1": {
+                "kernel": ki(ks[3], (120, 84), dt),
+                "bias": jnp.zeros((84,), dt),
+            },
+            "fc2": {
+                "kernel": ki(ks[4], (84, cfg.num_classes), dt),
+                "bias": jnp.zeros((cfg.num_classes,), dt),
+            },
+        }
+
+    @staticmethod
+    def apply(params, x, *, cfg: LeNetConfig = LeNetConfig(), rng=None,
+              deterministic: bool = True):
+        """x: [batch, 28, 28, 1] → logits [batch, num_classes].
+
+        ``deterministic=False`` requires ``rng`` and gives one MC-dropout draw.
+        """
+        if not deterministic and rng is None:
+            raise ValueError("stochastic apply needs an rng key")
+        if rng is not None:
+            r1, r2, r3 = jax.random.split(rng, 3)
+        else:
+            r1 = r2 = r3 = None
+
+        h = layers.conv2d_apply(params["conv1"], x, padding="SAME")
+        h = jnp.tanh(h)
+        h = layers.avg_pool(h)                                   # 14x14x6
+        h = layers.dropout(r1, h, cfg.p_conv, deterministic=deterministic)
+
+        h = layers.conv2d_apply(params["conv2"], h, padding="VALID")
+        h = jnp.tanh(h)
+        h = layers.avg_pool(h)                                   # 5x5x16
+        h = layers.dropout(r2, h, cfg.p_conv, deterministic=deterministic)
+
+        h = layers.conv2d_apply(params["conv3"], h, padding="VALID")  # 1x1x120
+        h = jnp.tanh(h)
+        h = h.reshape(h.shape[0], -1)                            # [b, 120]
+
+        h = jnp.tanh(layers.dense_apply(params["fc1"], h))
+        h = layers.dropout(r3, h, cfg.p_fc, deterministic=deterministic)
+        return layers.dense_apply(params["fc2"], h)

@@ -1,0 +1,165 @@
+"""Multi-head Latent Attention (DeepSeek-V2; also MiniCPM3).
+
+Two execution forms, both implemented:
+
+* **direct** (train / prefill): decompress the latent to per-head K/V and run
+  the shared attention core (blockwise/flash). K = [k_nope ; k_rope-shared].
+* **absorbed** (decode): the latent cache [B, S, kv_lora (+rope)] is attended
+  directly — q_nope is absorbed through W_uk and the attention output stays
+  in latent space until W_uv. This is what makes the 500k-token decode cache
+  feasible: 576 floats/token/layer instead of n_heads·(dn+dv).
+
+Cache layout: {"ckv": [B, S, kv_lora], "krope": [B, S, rope_dim], "pos": [S]}.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.attention import attention_core
+from repro.nn.norms import rmsnorm_apply, rmsnorm_init
+from repro.nn.rope import apply_rope
+
+
+def mla_init(key, cfg, *, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d = cfg.d_model
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    ki = initializers.lecun_normal()
+    p = {}
+    if cfg.q_lora_rank:
+        p["wdq"] = {"kernel": ki(ks[0], (d, cfg.q_lora_rank), dtype)}
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wuq"] = {"kernel": ki(ks[1], (cfg.q_lora_rank, H * (dn + dr)), dtype)}
+    else:
+        p["wq"] = {"kernel": ki(ks[1], (d, H * (dn + dr)), dtype)}
+    p["wdkv"] = {"kernel": ki(ks[2], (d, r_kv), dtype)}
+    p["kv_norm"] = rmsnorm_init(r_kv, dtype)
+    p["wkr"] = {"kernel": ki(ks[3], (d, dr), dtype)}
+    p["wuk"] = {"kernel": ki(ks[4], (r_kv, H * dn), dtype)}
+    p["wuv"] = {"kernel": ki(ks[5], (r_kv, H * dv), dtype)}
+    p["wo"] = {"kernel": ki(ks[6], (H * dv, d), dtype)}
+    return p
+
+
+def _queries(params, x, cfg, positions):
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = x @ params["wdq"]["kernel"].astype(x.dtype)
+        cq = rmsnorm_apply(params["q_norm"], cq, zero_centered=False)
+        q = cq @ params["wuq"]["kernel"].astype(x.dtype)
+    else:
+        q = x @ params["wq"]["kernel"].astype(x.dtype)
+    q = q.reshape(x.shape[:-1] + (H, dn + dr))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(params, x, cfg, positions):
+    """Compressed KV latent + shared rope key for a full sequence."""
+    ckv = x @ params["wdkv"]["kernel"].astype(x.dtype)
+    ckv = rmsnorm_apply(params["kv_norm"], ckv, zero_centered=False)
+    krope = x @ params["wkr"]["kernel"].astype(x.dtype)          # [B, S, dr]
+    krope = apply_rope(krope[:, :, None, :], positions, theta=cfg.rope_theta)[:, :, 0]
+    return ckv, krope
+
+
+def mla_apply(params, x, *, cfg, positions, impl: str = "auto"):
+    """Direct form (train / prefill). Returns (out, (ckv, krope)) so callers
+    can build the latent decode cache from a prefill pass."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    ckv, krope = _latents(params, x, cfg, positions)
+
+    k_nope = (ckv @ params["wuk"]["kernel"].astype(x.dtype)).reshape(B, S, H, dn)
+    v = (ckv @ params["wuv"]["kernel"].astype(x.dtype)).reshape(B, S, H, dv)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)               # [B,S,H,dn+dr]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(krope[:, :, None, :], (B, S, H, dr))],
+                        axis=-1)
+    if getattr(cfg, "shard_hints", False):
+        from repro.nn.shard_hints import hint_heads
+        q = hint_heads(q)
+        k = hint_heads(k)
+    # pad v to qk head dim so the shared core can run; slice after
+    pad_v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    out = attention_core(q, k, pad_v, q_pos=positions, kv_pos=positions,
+                         causal=True, scale=(dn + dr) ** -0.5, impl=impl)
+    out = out[..., :dv].reshape(B, S, H * dv)
+    return out @ params["wo"]["kernel"].astype(out.dtype), (ckv, krope)
+
+
+# ------------------------------------------------------------- decode cache
+def mla_init_cache(batch: int, max_len: int, cfg, *, dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def mla_cache_from_prefill(ckv, krope, *, max_len: int, dtype=jnp.bfloat16):
+    B, S = ckv.shape[:2]
+    cache = mla_init_cache(B, max_len, _CfgView(ckv.shape[-1], krope.shape[-1]), dtype=dtype)
+    cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(dtype), 0, 1)
+    cache["krope"] = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope.astype(dtype), 0, 1)
+    cache["pos"] = cache["pos"].at[:S].set(jnp.arange(S, dtype=jnp.int32))
+    return cache
+
+
+class _CfgView:
+    def __init__(self, kv_lora_rank, qk_rope_head_dim):
+        self.kv_lora_rank = kv_lora_rank
+        self.qk_rope_head_dim = qk_rope_head_dim
+
+
+def mla_decode(params, x, cache, *, cfg, position):
+    """Absorbed decode step. x: [B, 1, D]; position: scalar int32.
+
+    scores = q_absorbed · ckv + q_rope · krope  (latent-space attention)
+    out    = (softmax · ckv) through W_uv.
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    positions = position[None] if position.ndim == 0 else position
+
+    q_nope, q_rope = _queries(params, x, cfg, positions)          # [B,1,H,dn/dr]
+    ckv_new, krope_new = _latents(params, x, cfg, positions)
+
+    slot = positions[0]
+    cache = dict(cache)
+    cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), slot, 1)
+    cache["krope"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], krope_new.astype(cache["krope"].dtype), slot, 1)
+    cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions.astype(jnp.int32), slot, 0)
+
+    wuk = params["wuk"]["kernel"].astype(x.dtype).reshape(r_kv, H, dn)
+    q_abs = jnp.einsum("bqhd,chd->bqhc", q_nope, wuk)             # [B,1,H,r_kv]
+
+    ckv = cache["ckv"].astype(x.dtype)                            # [B,S,r]
+    krope = cache["krope"].astype(x.dtype)                        # [B,S,dr]
+    s = (jnp.einsum("bqhc,bsc->bhqs", q_abs, ckv, preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhd,bsd->bhqs", q_rope, krope, preferred_element_type=jnp.float32))
+    s = s * (dn + dr) ** -0.5
+    valid = (cache["pos"] >= 0) & (cache["pos"] <= positions[0])
+    s = jnp.where(valid[None, None, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+
+    out_latent = jnp.einsum("bhqs,bsc->bqhc", p.astype(x.dtype), ckv)  # [B,1,H,r]
+    wuv = params["wuv"]["kernel"].astype(x.dtype).reshape(r_kv, H, dv)
+    out = jnp.einsum("bqhc,chd->bqhd", out_latent, wuv).reshape(B, 1, H * dv)
+    return out @ params["wo"]["kernel"].astype(out.dtype), cache

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Scalable JAX MoE without the [tokens, E, C] one-hot dispatch tensor: tokens
+are argsorted by assigned expert *within a group* (group = one batch row),
+scattered into a capacity-bounded [E, C, D] buffer, pushed through batched
+expert matmuls, and gathered back. Memory is O(tokens·D + E·C·D) per group.
+
+Under pjit, experts shard over the ``model`` mesh axis (expert parallelism)
+and groups over ``(pod, data)``; GSPMD inserts the all-to-all at the
+group→expert buffer boundary. See launch/sharding.py.
+
+Supports: top-k routing with renormalization, shared experts (DeepSeek-V2),
+dense residual branch (Arctic), load-balance + router-z auxiliary losses.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.layers import mlp_apply, mlp_init
+
+
+def moe_init(key, cfg, *, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_hidden
+    ks = jax.random.split(key, 6)
+    ki = initializers.lecun_normal()
+    p = {
+        "router": {"kernel": ki(ks[0], (d, E), jnp.float32)},  # router stays fp32
+        "experts": {
+            "wi_gate": ki(ks[1], (E, d, f), dtype),
+            "wi_up": ki(ks[2], (E, d, f), dtype),
+            "wo": ki(ks[3], (E, f, d), dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, cfg.n_shared_experts * f, dtype=dtype)
+    if cfg.moe_dense_residual:
+        p["dense"] = mlp_init(ks[5], d, cfg.d_ff, dtype=dtype)
+    return p
+
+
+def _group_dispatch(x_g, gates_g, experts_g, E: int, C: int):
+    """One group's scatter into the expert buffer.
+
+    x_g: [S, D] tokens; gates_g: [S, K] weights; experts_g: [S, K] ids.
+    Returns (buffer [E, C, D], meta for combine).
+    """
+    S, D = x_g.shape
+    K = experts_g.shape[-1]
+    flat_e = experts_g.reshape(-1)                       # [S*K]
+    order = jnp.argsort(flat_e)                          # stable
+    sorted_e = flat_e[order]
+    # rank within expert: index minus first occurrence of this expert id
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(S * K, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = pos < C
+    pos_c = jnp.minimum(pos, C - 1)
+    token_of = order // K
+    vals = jnp.where(keep[:, None], x_g[token_of], 0.0)
+    buffer = jnp.zeros((E, C, D), x_g.dtype).at[sorted_e, pos_c].add(vals)
+    return buffer, (order, sorted_e, pos_c, keep, token_of)
+
+
+def _group_combine(out_buf, meta, gates_g, S: int, K: int):
+    """Gather expert outputs back to token order and apply gate weights."""
+    order, sorted_e, pos_c, keep, token_of = meta
+    y_sorted = out_buf[sorted_e, pos_c] * keep[:, None]  # [S*K, D]
+    inv = jnp.argsort(order)
+    y = y_sorted[inv].reshape(S, K, -1)
+    return jnp.einsum("skd,sk->sd", y, gates_g.astype(y.dtype))
+
+
+def moe_apply(params, x, *, cfg, impl: str = "sort") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] → (y [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_top_k
+    C = max(K, int(S * K / E * cfg.router_capacity_factor))
+
+    router_logits = (x.astype(jnp.float32)
+                     @ params["router"]["kernel"]).astype(jnp.float32)  # [B,S,E]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)                     # [B,S,K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- aux losses (load balance + router z) -------------------------------
+    me = jnp.mean(probs, axis=(0, 1))                                   # [E]
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], E)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = cfg.router_aux_loss_weight * E * jnp.sum(me * ce)
+    aux = aux + 1e-4 * jnp.mean(jax.nn.logsumexp(router_logits, axis=-1) ** 2)
+
+    if impl == "dense":
+        # smoke-test oracle: run every expert on every token
+        def one_expert(wg, wu, wo):
+            h = jax.nn.silu(x @ wg.astype(x.dtype)) * (x @ wu.astype(x.dtype))
+            return h @ wo.astype(x.dtype)
+
+        all_out = jax.vmap(one_expert)(params["experts"]["wi_gate"],
+                                       params["experts"]["wi_up"],
+                                       params["experts"]["wo"])           # [E,B,S,D]
+        w_full = jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=x.dtype)
+                         * gate_vals[..., None].astype(x.dtype), axis=2)  # [B,S,E]
+        y = jnp.einsum("ebsd,bse->bsd", all_out, w_full)
+    else:
+        hints = getattr(cfg, "shard_hints", False)
+        dispatch = jax.vmap(lambda xg, gg, eg: _group_dispatch(xg, gg, eg, E, C))
+        buffers, meta = dispatch(x, gate_vals, expert_idx)                # [B,E,C,D]
+        if hints:
+            from repro.nn.shard_hints import hint
+            # §Perf: expert-parallel buffer layout — groups stay on data,
+            # experts land on model (the all-to-all boundary); GSPMD left
+            # unpinned reshards these per einsum
+            buffers = hint(buffers, "data", "model", None, None)
+        wg = params["experts"]["wi_gate"].astype(x.dtype)
+        wu = params["experts"]["wi_up"].astype(x.dtype)
+        wo = params["experts"]["wo"].astype(x.dtype)
+        h = jnp.einsum("becd,edf->becf", buffers, wg)
+        h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buffers, wu)
+        if hints:
+            h = hint(h, "data", "model", None, None)
+        out_buf = jnp.einsum("becf,efd->becd", h, wo)                     # [B,E,C,D]
+        if hints:
+            out_buf = hint(out_buf, "data", "model", None, None)
+        combine = jax.vmap(lambda ob, mt, gg: _group_combine(ob, mt, gg, S, K))
+        y = combine(out_buf, meta, gate_vals)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x, activation="swiglu")
+    if "dense" in params:
+        y = y + mlp_apply(params["dense"], x, activation="swiglu")
+    return y, aux
+
+
+def moe_router_entropy(params, x):
+    """Router-entropy uncertainty signal (beyond-paper acquisition for MoE)."""
+    logits = (x.astype(jnp.float32) @ params["router"]["kernel"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)

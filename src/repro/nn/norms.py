@@ -1,0 +1,33 @@
+"""Normalization layers (RMSNorm, LayerNorm) as init/apply pairs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((dim,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm_apply(params, x, *, eps: float = 1e-6, zero_centered: bool = True):
+    """RMSNorm. ``zero_centered=True`` uses the gemma convention w = 1 + scale."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jnp.reciprocal(jnp.sqrt(var + eps))
+    scale = params["scale"].astype(jnp.float32)
+    w = 1.0 + scale if zero_centered else scale
+    return (x * w).astype(dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(params, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jnp.reciprocal(jnp.sqrt(var + eps))
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)

@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Λ) * r_t        (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Train/prefill uses jax.lax.associative_scan over time (log-depth — the
+TPU-friendly formulation of the paper's linear recurrence); decode is the
+O(1) single step. The enclosing residual block is Griffin's: two branches
+(GeLU gate / conv1d→RG-LRU), merged multiplicatively, projected back.
+
+Federated note: the recurrent hidden state is *per-device data state*, not a
+parameter — it is excluded from fog-node averaging (core/aggregation.py
+``exclude``), see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.ssm import causal_conv1d
+
+_C = 8.0
+
+
+def rglru_init(key, width: int, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    ki = initializers.lecun_normal()
+    # Λ init so that a^c = sigmoid(Λ)^... spans decays in [0.9, 0.999]
+    u = jax.random.uniform(ks[2], (width,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u ** (1.0 / _C))))  # softplus^-1(-log(a)/c)
+    return {
+        "wa": {"kernel": ki(ks[0], (width, width), dtype), "bias": jnp.zeros((width,), dtype)},
+        "wx": {"kernel": ki(ks[1], (width, width), dtype), "bias": jnp.zeros((width,), dtype)},
+        "lambda": lam.astype(jnp.float32),
+    }
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x @ params["wa"]["kernel"].astype(x.dtype)
+                       + params["wa"]["bias"].astype(x.dtype))
+    i = jax.nn.sigmoid(x @ params["wx"]["kernel"].astype(x.dtype)
+                       + params["wx"]["bias"].astype(x.dtype))
+    log_a = (-_C * jax.nn.softplus(params["lambda"]) * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_apply(params, x, *, initial_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """x: [B, S, W] → [B, S, W] via associative scan of h_t = a_t h + b_t."""
+    a, b = _gates(params, x)                             # [B, S, W] fp32
+    if initial_state is not None:
+        b = b.at[:, 0].add(a[:, 0] * initial_state.astype(jnp.float32))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = h.astype(x.dtype)
+    if return_state:
+        return out, h[:, -1]
+    return out
+
+
+def rglru_step(params, x_t, state):
+    """Decode step. x_t: [B, 1, W], state: [B, W] → (y [B,1,W], new_state)."""
+    a, b = _gates(params, x_t)
+    h = a[:, 0] * state.astype(jnp.float32) + b[:, 0]
+    return h[:, None].astype(x_t.dtype), h
+
+
+# ------------------------------------------------------------------ block
+def recurrent_block_init(key, cfg, *, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 5)
+    ki = initializers.lecun_normal()
+    return {
+        "gate_proj": {"kernel": ki(ks[0], (d, w), dtype)},
+        "rnn_proj": {"kernel": ki(ks[1], (d, w), dtype)},
+        "conv": {
+            "kernel": initializers.normal(0.1)(ks[2], (cfg.conv1d_width, w), dtype),
+            "bias": jnp.zeros((w,), dtype),
+        },
+        "rglru": rglru_init(ks[3], w, dtype=dtype),
+        "out_proj": {"kernel": ki(ks[4], (w, d), dtype)},
+    }
+
+
+def recurrent_block_apply(params, x, *, cfg, cache=None, decode: bool = False):
+    """Griffin recurrent block. Returns (out, new_cache).
+
+    cache = {"conv": [B, W-1, w], "state": [B, w]} (decode only).
+    """
+    gate = jax.nn.gelu(x @ params["gate_proj"]["kernel"].astype(x.dtype))
+    h = x @ params["rnn_proj"]["kernel"].astype(x.dtype)
+    if decode:
+        h, conv_state = causal_conv1d(h, params["conv"]["kernel"],
+                                      params["conv"]["bias"], state=cache["conv"])
+        h, rnn_state = rglru_step(params["rglru"], h, cache["state"])
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "state": rnn_state}
+    else:
+        W = params["conv"]["kernel"].shape[0]
+        pad_front = max(0, (W - 1) - h.shape[1])
+        conv_tail = jnp.pad(h, ((0, 0), (pad_front, 0), (0, 0)))[:, -(W - 1):]
+        h, _ = causal_conv1d(h, params["conv"]["kernel"], params["conv"]["bias"])
+        h, last = rglru_apply(params["rglru"], h, return_state=True)
+        new_cache = {"conv": conv_tail, "state": last}
+    out = (h * gate) @ params["out_proj"]["kernel"].astype(x.dtype)
+    return out, new_cache
+
+
+def recurrent_block_init_cache(batch: int, cfg, *, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+        "state": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,43 @@
+"""Rotary position embeddings, including partial-RoPE (MLA) support."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, *, theta: float = 10000.0, dtype=jnp.float32):
+    """Inverse frequencies for a head_dim (must be even)."""
+    assert head_dim % 2 == 0, head_dim
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return (1.0 / (theta**exponent)).astype(dtype)
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """Apply RoPE to ``x: [..., seq, heads, head_dim]`` given ``positions: [..., seq]``.
+
+    Uses the split-half convention (rotate_half), matching llama/gemma.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta=theta)
+    # angles: [..., seq, head_dim//2]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    sin = jnp.sin(angles)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope_interleaved(x, positions, *, theta: float = 10000.0):
+    """Interleaved-pair RoPE convention (deepseek MLA rope half uses this)."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta=theta)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1 = xf[..., 0::2]
+    x2 = xf[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)

@@ -1,0 +1,242 @@
+"""Mamba-2 SSD (state-space duality) layer [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of length L; the
+intra-chunk contribution is the masked quadratic 'attention form'
+(C_l·B_s · decay(l,s)) and the inter-chunk contribution is a linear
+recurrence over per-chunk states — O(S·L) compute, O(S) memory, exactly the
+duality the paper exploits. The intra-chunk matmul block is the Pallas
+kernel target (repro.kernels.ssd_scan); this module is the pure-JAX
+implementation used everywhere else and as the kernel oracle.
+
+Decode carries {"conv": [B, W-1, conv_ch], "state": [B, H, P, N]} — O(1) in
+sequence length, which is why mamba2 runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.norms import rmsnorm_apply, rmsnorm_init
+
+
+# ------------------------------------------------------------------ params
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state_dim, cfg.ssm_n_groups
+
+
+def mamba2_init(key, cfg, *, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d = cfg.d_model
+    d_inner, H, P, N, G = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    ks = jax.random.split(key, 6)
+    ki = initializers.lecun_normal()
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(ks[3], (H,))
+    dt_init = jnp.log(jnp.expm1(jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))))
+    return {
+        "in_proj": {"kernel": ki(ks[0], (d, 2 * d_inner + 2 * G * N + H), dtype)},
+        "conv": {
+            "kernel": initializers.normal(0.1)(ks[1], (cfg.ssm_conv_width, conv_ch), dtype),
+            "bias": jnp.zeros((conv_ch,), dtype),
+        },
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": {"kernel": ki(ks[2], (d_inner, d), dtype)},
+    }
+
+
+# ------------------------------------------------------------------ conv1d
+def causal_conv1d(x, kernel, bias, *, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over [B, S, C]; kernel [W, C].
+
+    With ``state`` [B, W-1, C] (decode) the input is prepended instead of
+    zero-padded; returns (y, new_state).
+    """
+    W = kernel.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    new_state = x_pad[:, -(W - 1):, :]
+    y = sum(x_pad[:, i : x_pad.shape[1] - (W - 1 - i), :] * kernel[i].astype(x.dtype)
+            for i in range(W))
+    return y + bias.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------------ SSD core
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None):
+    """SSD over a full sequence.
+
+    x: [b, s, h, p]   (already dt-scaled NOT applied; we apply inside)
+    dt: [b, s, h]     (post-softplus)
+    A: [h]            (negative decay rates)
+    B, C: [b, s, g, n]
+    Returns (y [b, s, h, p], final_state [b, h, p, n]).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[-2], B.shape[-1]
+    L = chunk
+    nc = -(-s // L)
+    pad = nc * L - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    rep = h // g
+    xs = x.reshape(b, nc, L, h, p)
+    dts = dt.reshape(b, nc, L, h)
+    Bs = B.reshape(b, nc, L, g, n)
+    Cs = C.reshape(b, nc, L, g, n)
+
+    dA = dts * A[None, None, None, :]                    # [b,nc,L,h] (negative)
+    la = jnp.cumsum(dA, axis=2)                          # cumulative log-decay
+    x_dt = xs * dts[..., None]
+
+    # intra-chunk (diagonal block): scores[l, m] = (C_l·B_m) exp(la_l - la_m)
+    cb = jnp.einsum("bclgn,bcmgn->bcglm", Cs, Bs)        # [b,nc,g,L,L]
+    # decay[b,c,h,l,m] = exp(la[l] - la[m]); exponent clamped at 0 so the
+    # (masked) m>l entries never overflow and poison gradients through where.
+    log_decay = (la[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+                 - la[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
+    decay = jnp.exp(jnp.minimum(log_decay, 0.0))
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    cbg = jnp.repeat(cb, rep, axis=2)                    # [b,nc,h,L,L]
+    scores = jnp.where(mask, cbg * decay, 0.0)
+    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", scores.astype(x.dtype), x_dt)
+
+    # chunk-final states: S_c = sum_m B_m x_m exp(la_last - la_m)
+    seg = jnp.exp(la[:, :, -1:, :] - la)                 # [b,nc,L,h]
+    Bg = jnp.repeat(Bs, rep, axis=3)                     # [b,nc,L,h,n]
+    chunk_states = jnp.einsum("bclhn,bclhp->bchpn", Bg, x_dt * seg[..., None])
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))           # [b,nc,h]
+
+    def scan_fn(carry, inp):
+        st_prev = carry
+        dec, st_c = inp
+        st = st_prev * dec[:, :, None, None] + st_c
+        return st, st_prev
+
+    init = (initial_state if initial_state is not None
+            else jnp.zeros((b, h, p, n), x.dtype))
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (chunk_decay.transpose(1, 0, 2), chunk_states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # [b,nc,h,p,n]
+
+    # inter-chunk contribution: y_off[l] = (C_l · S_prev) * exp(la_l)
+    Cg = jnp.repeat(Cs, rep, axis=3)                     # [b,nc,L,h,n]
+    y_off = jnp.einsum("bclhn,bchpn->bclhp", Cg, prev_states) * jnp.exp(la)[..., None]
+
+    y = (y_diag + y_off).reshape(b, nc * L, h, p)[:, :s]
+    return y, final_state
+
+
+def ssd_step(x_t, dt_t, A, B_t, C_t, state):
+    """Single decode step. x_t: [b,h,p], dt_t: [b,h], B_t/C_t: [b,g,n],
+    state: [b,h,p,n] → (y [b,h,p], new_state)."""
+    b, h, p = x_t.shape
+    g, n = B_t.shape[-2], B_t.shape[-1]
+    rep = h // g
+    a = jnp.exp(dt_t * A[None, :])                       # [b,h]
+    Bg = B_t[:, :, None, :].repeat(rep, axis=2).reshape(b, h, n)
+    Cg = C_t[:, :, None, :].repeat(rep, axis=2).reshape(b, h, n)
+    dBx = jnp.einsum("bhn,bhp->bhpn", Bg, x_t * dt_t[..., None])
+    new_state = state * a[:, :, None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cg)
+    return y, new_state
+
+
+# ------------------------------------------------------------------ block
+def _split_proj(z, cfg):
+    d_inner, H, P, N, G = ssm_dims(cfg)
+    sizes = [d_inner, d_inner, G * N, G * N, H]
+    zs = []
+    ofs = 0
+    for sz in sizes:
+        zs.append(z[..., ofs:ofs + sz])
+        ofs += sz
+    return zs  # gate z, conv-input x, B, C, dt
+
+
+def mamba2_apply(params, x, *, cfg, initial_state=None, return_state: bool = False,
+                 return_cache: bool = False):
+    """Full-sequence Mamba-2 block. x: [B, S, D] → [B, S, D].
+
+    ``return_cache=True`` (prefill) additionally returns the decode cache
+    {"conv": last W-1 pre-conv activations, "state": final SSD state}.
+    """
+    Bsz, S, _ = x.shape
+    d_inner, H, P, N, G = ssm_dims(cfg)
+    zproj = x @ params["in_proj"]["kernel"].astype(x.dtype)
+    z, xc, Bx, Cx, dt = _split_proj(zproj, cfg)
+
+    conv_in = jnp.concatenate([xc, Bx, Cx], axis=-1)
+    W = cfg.ssm_conv_width
+    pad_front = max(0, (W - 1) - S)
+    conv_tail = jnp.pad(conv_in, ((0, 0), (pad_front, 0), (0, 0)))[:, -(W - 1):]
+    conv_out, _ = causal_conv1d(conv_in, params["conv"]["kernel"], params["conv"]["bias"])
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :d_inner].reshape(Bsz, S, H, P)
+    Bm = conv_out[..., d_inner:d_inner + G * N].reshape(Bsz, S, G, N)
+    Cm = conv_out[..., d_inner + G * N:].reshape(Bsz, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd_chunked(xc, dt.astype(x.dtype), A.astype(x.dtype),
+                                 Bm, Cm, chunk=cfg.ssm_chunk,
+                                 initial_state=initial_state)
+    y = y + xc * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z), zero_centered=False)
+    out = y @ params["out_proj"]["kernel"].astype(x.dtype)
+    if return_cache:
+        return out, {"conv": conv_tail, "state": final_state}
+    if return_state:
+        return out, final_state
+    return out
+
+
+def mamba2_init_cache(batch: int, cfg, *, dtype=jnp.float32):
+    d_inner, H, P, N, G = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, P, N), dtype),
+    }
+
+
+def mamba2_decode(params, x, cache, *, cfg):
+    """Single-token step. x: [B, 1, D] → ([B, 1, D], new_cache)."""
+    Bsz = x.shape[0]
+    d_inner, H, P, N, G = ssm_dims(cfg)
+    zproj = x @ params["in_proj"]["kernel"].astype(x.dtype)
+    z, xc, Bx, Cx, dt = _split_proj(zproj, cfg)
+
+    conv_in = jnp.concatenate([xc, Bx, Cx], axis=-1)
+    conv_out, conv_state = causal_conv1d(conv_in, params["conv"]["kernel"],
+                                         params["conv"]["bias"], state=cache["conv"])
+    conv_out = jax.nn.silu(conv_out)[:, 0]
+    xc = conv_out[..., :d_inner].reshape(Bsz, H, P)
+    Bm = conv_out[..., d_inner:d_inner + G * N].reshape(Bsz, G, N)
+    Cm = conv_out[..., d_inner + G * N:].reshape(Bsz, G, N)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(params["A_log"]).astype(x.dtype)
+    y, new_state = ssd_step(xc, dt, A, Bm, Cm, cache["state"].astype(x.dtype))
+    y = y + xc * params["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(Bsz, 1, d_inner)
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z), zero_centered=False)
+    out = y @ params["out_proj"]["kernel"].astype(x.dtype)
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "state": new_state}

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    adafactor,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine, warmup_linear

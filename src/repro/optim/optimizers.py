@@ -1,0 +1,179 @@
+"""Optimizers from scratch (no optax): functional (init, update) pairs.
+
+An ``Optimizer`` holds ``init(params) -> state`` and
+``update(grads, state, params, step) -> (new_params, new_state)``. States are
+pytrees mirroring the parameter tree, so they inherit parameter sharding
+under pjit (ZeRO-1 for free once params are model-sharded).
+
+``state_dtype`` lets giant-MoE configs (arctic-480b) keep Adam moments in
+bf16 so the optimizer fits the per-chip HBM budget — see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (params, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def _as_sched(lr) -> Callable:
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_sched(lr)
+
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False,
+             state_dtype=jnp.float32) -> Optimizer:
+    sched = _as_sched(lr)
+
+    def init(params):
+        return {"m": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=state_dtype), params)}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32)
+            m32 = beta * m.astype(jnp.float32) + g32
+            d = g32 + beta * m32 if nesterov else m32
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype), m32.astype(state_dtype)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"])
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    """Adam; with ``weight_decay > 0`` this is AdamW (decoupled decay)."""
+    sched = _as_sched(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=state_dtype)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        t = step.astype(jnp.float32) + 1.0 if hasattr(step, "astype") else float(step) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / c1
+            vhat = v32 / c2
+            p32 = p.astype(jnp.float32)
+            step_vec = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32
+            return ((p32 - lr_t * step_vec).astype(p.dtype),
+                    m32.astype(state_dtype), v32.astype(state_dtype))
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+        is_t = lambda x: isinstance(x, tuple)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_t)
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_t)
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=is_t)
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, state_dtype=state_dtype)
+
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern) — O(n+m) state for an
+    (n, m) matrix instead of O(nm). The memory-safe choice for the 236B/480B
+    MoE configs on 16 GB/chip v5e (DESIGN.md §6)."""
+    sched = _as_sched(lr)
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def z(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        t = step.astype(jnp.float32) + 1.0 if hasattr(step, "astype") else float(step) + 1.0
+        beta2t = 1.0 - t ** (-decay)
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p.shape):
+                vr = beta2t * v["vr"] + (1 - beta2t) * jnp.mean(g2, axis=-1)
+                vc = beta2t * v["vc"] + (1 - beta2t) * jnp.mean(g2, axis=-2)
+                rfac = jnp.reciprocal(jnp.sqrt(vr / (jnp.mean(vr, axis=-1, keepdims=True) + eps)))
+                cfac = jnp.reciprocal(jnp.sqrt(vc))
+                u = g32 * rfac[..., None] * cfac[..., None, :]
+                newv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2t * v["v"] + (1 - beta2t) * g2
+                u = g32 * jnp.reciprocal(jnp.sqrt(vv))
+                newv = {"v": vv}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), newv
+
+        is_param = lambda x: isinstance(x, jnp.ndarray) or hasattr(x, "shape")
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        return new_params, {"v": new_v}
+
+    return Optimizer(init, update)

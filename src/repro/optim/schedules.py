@@ -1,0 +1,39 @@
+"""Learning-rate schedules as step -> lr callables (jnp-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return sched
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step / max(1, decay_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * ((1 - alpha) * cos + alpha)
+
+    return sched
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int, alpha: float = 0.0):
+    cos = cosine_decay(lr, max(1, decay_steps - warmup_steps), alpha)
+
+    def sched(step):
+        warm = lr * step / max(1, warmup_steps)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return sched
+
+
+def warmup_linear(lr: float, warmup_steps: int, total_steps: int):
+    def sched(step):
+        warm = lr * step / max(1, warmup_steps)
+        frac = 1.0 - (step - warmup_steps) / max(1, total_steps - warmup_steps)
+        return jnp.where(step < warmup_steps, warm, lr * jnp.clip(frac, 0.0, 1.0))
+
+    return sched

@@ -1,0 +1,106 @@
+"""Unit + property tests for the acquisition functions (paper Eqs. 2-4)."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import acquisition as acq
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _logp(T=6, N=8, C=5, seed=0, scale=1.0):
+    logits = scale * jax.random.normal(jax.random.key(seed), (T, N, C))
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def test_entropy_bounds():
+    lp = _logp()
+    ent = acq.entropy(lp)
+    assert (np.asarray(ent) >= -1e-6).all()
+    assert (np.asarray(ent) <= np.log(lp.shape[-1]) + 1e-5).all()
+
+
+def test_bald_nonnegative_and_below_entropy():
+    lp = _logp(scale=3.0)
+    ent, bald = np.asarray(acq.entropy(lp)), np.asarray(acq.bald(lp))
+    assert (bald >= -1e-5).all()          # mutual information >= 0
+    assert (bald <= ent + 1e-5).all()     # I[y;w] <= H[y]
+
+
+def test_vr_bounds_and_consistency():
+    lp = _logp()
+    vr = np.asarray(acq.variational_ratio(lp))
+    assert (vr >= -1e-6).all() and (vr <= 1.0).all()
+    np.testing.assert_allclose(vr, np.asarray(acq.least_confidence(lp)), rtol=1e-6)
+
+
+def test_deterministic_onehot_scores_zero():
+    """A confident, T-consistent model has ~zero uncertainty everywhere."""
+    C = 4
+    logits = jnp.full((5, 7, C), -30.0).at[:, :, 1].set(30.0)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    assert np.asarray(acq.entropy(lp)).max() < 1e-3
+    assert np.asarray(acq.bald(lp)).max() < 1e-3
+    assert np.asarray(acq.variational_ratio(lp)).max() < 1e-3
+
+
+def test_disagreement_maximizes_bald():
+    """T samples each confident in a different class: expected per-sample
+    entropy ~0 but mean posterior uniform → BALD ≈ H ≈ log C."""
+    T = C = 4
+    logits = jnp.full((T, 1, C), -30.0)
+    for t in range(T):
+        logits = logits.at[t, 0, t].set(30.0)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    bald = float(acq.bald(lp)[0])
+    assert abs(bald - np.log(C)) < 1e-2
+
+
+def test_select_topk_returns_argmax_set():
+    scores = jnp.asarray([0.1, 5.0, 3.0, 4.0, 0.2])
+    idx = set(np.asarray(acq.select_topk(scores, 3)).tolist())
+    assert idx == {1, 3, 2}
+
+
+def test_random_scores_need_rng():
+    lp = _logp()
+    try:
+        acq.acquisition_scores("random", lp)
+        raised = False
+    except ValueError:
+        raised = True
+    assert raised
+    s = acq.acquisition_scores("random", lp, rng=jax.random.key(0))
+    assert s.shape == (lp.shape[1],)
+
+
+def test_batch_bald_lite_no_duplicates():
+    lp = _logp(T=4, N=12, C=3, scale=2.0)
+    picks = np.asarray(acq.batch_bald_lite(lp, 5))
+    assert len(set(picks.tolist())) == 5
+
+
+@settings(max_examples=20, deadline=None)
+@given(hnp.arrays(np.float64, (4, 6, 5), elements=st.floats(-10, 10)))
+def test_property_entropy_vs_bald_any_logits(raw):
+    lp = jax.nn.log_softmax(jnp.asarray(raw), axis=-1)
+    ent = np.asarray(acq.entropy(lp))
+    bald = np.asarray(acq.bald(lp))
+    vr = np.asarray(acq.variational_ratio(lp))
+    assert (bald <= ent + 1e-4).all()
+    assert (bald >= -1e-4).all()
+    assert (vr <= 1.0 + 1e-6).all() and (vr >= -1e-6).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(2, 10), st.integers(2, 6))
+def test_property_permutation_equivariance(T, N, C):
+    lp = _logp(T, N, C, seed=42)
+    perm = np.random.RandomState(0).permutation(N)
+    for fn in (acq.entropy, acq.bald, acq.variational_ratio, acq.margin):
+        a = np.asarray(fn(lp))[perm]
+        b = np.asarray(fn(lp[:, perm]))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

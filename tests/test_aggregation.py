@@ -1,0 +1,81 @@
+"""Fog-node aggregation invariants (paper Eq. 1) — unit + property tests."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.aggregation import (ensemble_logits, fedavg, opt_model,
+                                    stack_models, weighted_average)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _models(n, seed=0, shape=(3, 4)):
+    ks = jax.random.split(jax.random.key(seed), n)
+    return [{"layer": {"w": jax.random.normal(k, shape), "b": jax.random.normal(k, shape[1:])}}
+            for k in ks]
+
+
+def test_fedavg_identity_on_copies():
+    m = _models(1)[0]
+    out = fedavg([m, m, m])
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(m)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_fedavg_equals_mean():
+    ms = _models(4)
+    out = fedavg(ms)
+    expected = np.mean([np.asarray(m["layer"]["w"]) for m in ms], axis=0)
+    np.testing.assert_allclose(np.asarray(out["layer"]["w"]), expected, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=5))
+def test_property_weighted_average_is_convex(ws):
+    ms = _models(len(ws), seed=7)
+    out = weighted_average(ms, ws)
+    stack = np.stack([np.asarray(m["layer"]["w"]) for m in ms])
+    lo, hi = stack.min(axis=0), stack.max(axis=0)
+    w = np.asarray(out["layer"]["w"])
+    assert (w >= lo - 1e-5).all() and (w <= hi + 1e-5).all()
+
+
+def test_weighted_average_normalizes():
+    ms = _models(2, seed=3)
+    a = weighted_average(ms, [1.0, 1.0])
+    b = weighted_average(ms, [10.0, 10.0])
+    np.testing.assert_allclose(np.asarray(a["layer"]["w"]),
+                               np.asarray(b["layer"]["w"]), rtol=1e-5)
+
+
+def test_exclude_keeps_first_model_leaf():
+    ms = _models(3, seed=9)
+    out = weighted_average(ms, [1, 1, 1], exclude=lambda p: p.endswith("b"))
+    np.testing.assert_allclose(np.asarray(out["layer"]["b"]),
+                               np.asarray(ms[0]["layer"]["b"]), rtol=1e-6)
+    assert not np.allclose(np.asarray(out["layer"]["w"]),
+                           np.asarray(ms[0]["layer"]["w"]))
+
+
+def test_opt_model_selects_argmax():
+    ms = _models(3)
+    best, idx = opt_model(ms, [0.1, 0.9, 0.3])
+    assert idx == 1 and best is ms[1]
+
+
+def test_stack_models_shape():
+    ms = _models(4)
+    stacked = stack_models(ms)
+    assert stacked["layer"]["w"].shape == (4, 3, 4)
+
+
+def test_ensemble_logits_is_log_mean_prob():
+    ms = _models(3, shape=(4, 5))
+    x = jax.random.normal(jax.random.key(1), (2, 4))
+    apply_fn = lambda p, xx: xx @ p["layer"]["w"] + p["layer"]["b"]
+    stacked = stack_models(ms)
+    out = ensemble_logits(apply_fn, stacked, x)
+    probs = np.mean([jax.nn.softmax(apply_fn(m, x), -1) for m in ms], axis=0)
+    np.testing.assert_allclose(np.exp(np.asarray(out)), probs, rtol=1e-4)

@@ -1,0 +1,54 @@
+"""Checkpoint roundtrip + federated round snapshot tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (latest_round, load_pytree, load_round,
+                              save_pytree, save_round)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_roundtrip_mixed_tree(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "step": 123,
+        "nested": {"list": [jnp.zeros((2,)), "tag", 7],
+                   "tup": (1.5, jnp.asarray([True, False]))},
+    }
+    path = str(tmp_path / "ck.msgpack")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert back["params"]["b"].dtype == jnp.bfloat16
+    assert back["step"] == 123
+    assert back["nested"]["list"][1] == "tag"
+    assert isinstance(back["nested"]["tup"], tuple)
+    assert back["nested"]["tup"][0] == 1.5
+
+
+def test_atomic_overwrite(tmp_path):
+    path = str(tmp_path / "ck.msgpack")
+    save_pytree(path, {"v": jnp.asarray([1.0])})
+    save_pytree(path, {"v": jnp.asarray([2.0])})
+    assert float(load_pytree(path)["v"][0]) == 2.0
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_round_snapshots(tmp_path):
+    d = str(tmp_path / "rounds")
+    fog = {"w": jnp.ones((2, 2))}
+    devs = [{"w": jnp.full((2, 2), i)} for i in range(3)]
+    save_round(d, 0, fog_model=fog, device_models=devs, metadata={"acc": 0.5})
+    save_round(d, 3, fog_model=fog, metadata={"acc": 0.7})
+    assert latest_round(d) == 3
+    back = load_round(d, 0)
+    assert len(back["device_models"]) == 3
+    np.testing.assert_array_equal(np.asarray(back["device_models"][2]["w"]),
+                                  np.full((2, 2), 2.0))
+    assert back["metadata"]["acc"] == 0.5
+    assert latest_round(str(tmp_path / "missing")) is None

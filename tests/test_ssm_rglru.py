@@ -1,0 +1,117 @@
+"""SSD (mamba2) and RG-LRU recurrence equivalence tests."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.nn.rglru import rglru_apply, rglru_init, rglru_step
+from repro.nn.ssm import causal_conv1d, ssd_chunked, ssd_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ssd_inputs(b, s, h, p, g, n, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+    return x, dt, A, B, C
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 2), st.integers(3, 40), st.sampled_from([1, 2, 4]),
+       st.sampled_from([4, 8]), st.sampled_from([8, 16]),
+       st.sampled_from([8, 16, 64]))
+def test_property_ssd_chunked_equals_sequential(b, s, h, p, n, chunk):
+    g = 1
+    x, dt, A, B, C = _ssd_inputs(b, s, h, p, g, n, seed=s)
+    y_chunk, st_chunk = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y_t, state = ssd_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], state)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(state),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_initial_state_threading():
+    """Splitting a sequence in two with state carry == one pass."""
+    b, s, h, p, g, n = 1, 24, 2, 4, 1, 8
+    x, dt, A, B, C = _ssd_inputs(b, s, h, p, g, n, seed=9)
+    y_full, st_full = ssd_chunked(x, dt, A, B, C, chunk=8)
+    cut = 16
+    y1, st1 = ssd_chunked(x[:, :cut], dt[:, :cut], A, B[:, :cut], C[:, :cut], chunk=8)
+    y2, st2 = ssd_chunked(x[:, cut:], dt[:, cut:], A, B[:, cut:], C[:, cut:],
+                          chunk=8, initial_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), atol=1e-4)
+
+
+def test_causal_conv1d_matches_explicit():
+    x = jax.random.normal(jax.random.key(0), (2, 10, 3))
+    k = jax.random.normal(jax.random.key(1), (4, 3))
+    b = jax.random.normal(jax.random.key(2), (3,))
+    y, state = causal_conv1d(x, k, b)
+    # explicit: y[t] = sum_i k[i] * x[t - (W-1) + i]
+    xp = np.pad(np.asarray(x), ((0, 0), (3, 0), (0, 0)))
+    expect = np.stack([(xp[:, t:t + 4] * np.asarray(k)).sum(1) for t in range(10)], 1)
+    np.testing.assert_allclose(np.asarray(y), expect + np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(x)[:, -3:], atol=1e-6)
+
+
+def test_causal_conv1d_decode_stream_equals_batch():
+    """Streaming one token at a time through the conv state == full pass."""
+    x = jax.random.normal(jax.random.key(3), (1, 8, 2))
+    k = jax.random.normal(jax.random.key(4), (4, 2))
+    b = jnp.zeros((2,))
+    y_full, _ = causal_conv1d(x, k, b)
+    state = jnp.zeros((1, 3, 2))
+    outs = []
+    for t in range(8):
+        y_t, state = causal_conv1d(x[:, t:t + 1], k, b, state=state)
+        outs.append(y_t)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(y_full), atol=1e-5)
+
+
+def test_rglru_scan_equals_step():
+    width = 8
+    params = rglru_init(jax.random.key(0), width)
+    x = jax.random.normal(jax.random.key(1), (2, 12, width))
+    y_scan, last = rglru_apply(params, x, return_state=True)
+    state = jnp.zeros((2, width))
+    outs = []
+    for t in range(12):
+        y_t, state = rglru_step(params, x[:, t:t + 1], state)
+        outs.append(y_t)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(state), atol=1e-4)
+
+
+def test_rglru_initial_state():
+    width = 4
+    params = rglru_init(jax.random.key(0), width)
+    x = jax.random.normal(jax.random.key(1), (1, 6, width))
+    _, st1 = rglru_apply(params, x[:, :3], return_state=True)
+    y2 = rglru_apply(params, x[:, 3:], initial_state=st1)
+    y_full = rglru_apply(params, x)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full)[:, 3:], atol=1e-4)
+
+
+def test_rglru_decay_bounded():
+    """|h_t| stays bounded for bounded inputs (sqrt(1-a^2) normalization)."""
+    width = 16
+    params = rglru_init(jax.random.key(5), width)
+    x = jnp.ones((1, 200, width))
+    y = rglru_apply(params, x)
+    assert float(jnp.max(jnp.abs(y))) < 50.0
