@@ -1,0 +1,153 @@
+"""Edge AL hot-loop benchmark: the seed repo's per-device Python loop vs the
+compile-once vectorized engine (``repro.core.engine``) at 4 / 16 / 64
+simulated devices.
+
+Three execution models of the SAME round (D devices × R acquisitions, each:
+draw window → MC-dropout score → top-k → masked retrain):
+
+  * legacy      — the seed repo's loop: numpy pool, one jitted dispatch PER
+    TRAIN STEP plus one per scoring call (D × R × (steps + 2) dispatches per
+    round).  Reconstructed here verbatim from the pre-engine code so the
+    payload documents what the engine replaced.
+  * device_loop — the engine's traced acquisition step (scan-fused training,
+    fused scoring) dispatched per device per acquisition (D × R dispatches).
+  * engine      — lax.scan over acquisitions, vmap over devices, one jitted
+    call (1 dispatch per round).
+
+Compile time is excluded (one warmup round per path per fleet size); wall
+clock and dispatch counts land in the JSON payload.  Dispatch counts tally
+compiled-callable invocations (see ``core.counters``) — a lower bound for
+the Python-loop paths, exact for the engine.
+
+    PYTHONPATH=src python -m benchmarks.run --only edge_loop [--quick]
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acquisition as acq
+from repro.core import counters
+from repro.core.engine import EdgeEngine
+from repro.core.federated import FederatedALConfig, Trainer
+from repro.core.pool import ActivePool
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+
+Row = Tuple[str, float, str]
+
+
+def _bench_cfg(num_devices: int) -> FederatedALConfig:
+    return FederatedALConfig(
+        num_devices=num_devices, initial_train=20, acquisitions=3,
+        k_per_acquisition=5, pool_window=64, mc_samples=4,
+        train_steps_per_acq=10, initial_train_steps=10, seed=0)
+
+
+def _seed_style_round(trainer: Trainer, cfg: FederatedALConfig, shards,
+                      seed_set, params0):
+    """The pre-engine hot loop, dispatch-for-dispatch: per-device numpy pool,
+    per-acquisition scoring call, per-step train dispatch (the old
+    ``Trainer.fit`` Python loop)."""
+    for d, data in enumerate(shards):
+        pool = ActivePool.create(len(data), seed=cfg.seed + 101 * d)
+        rng = jax.random.key(cfg.seed + 7919 * (d + 1))
+        params, opt_state = params0, None
+        for _ in range(cfg.acquisitions):
+            window = pool.draw_window(cfg.pool_window)
+            x_win = jnp.asarray(data.images[window])
+            rng, k_score, k_fit = jax.random.split(rng, 3)
+            pad = cfg.pool_window - len(window)
+            x_pad = jnp.pad(x_win, [(0, pad), (0, 0), (0, 0), (0, 0)])
+            logp = trainer.score_logprobs(params, x_pad, k_score,
+                                          cfg.mc_samples)[:, : len(window)]
+            scores = acq.acquisition_scores(cfg.acquisition_fn, logp)
+            chosen = np.asarray(acq.select_topk(
+                scores, min(cfg.k_per_acquisition, len(window))))
+            pool.acquire(window, chosen)
+
+            labeled = pool.labeled
+            imgs = np.concatenate([seed_set.images, data.images[labeled]])
+            lbls = np.concatenate([seed_set.labels, data.labels[labeled]])
+            n = len(lbls)
+            cap = trainer.capacity
+            x = jnp.asarray(np.pad(imgs, [(0, cap - n)] + [(0, 0)] * 3))
+            y = jnp.asarray(np.pad(lbls, (0, cap - n)).astype(np.int32))
+            m = jnp.asarray((np.arange(cap) < n).astype(np.float32))
+            opt_state = opt_state if opt_state is not None else trainer.opt.init(params)
+            for i in range(cfg.train_steps_per_acq):
+                k_fit, k = jax.random.split(k_fit)
+                params, opt_state = trainer.train_step(
+                    params, opt_state, x, y, m, k, jnp.asarray(i, jnp.int32))
+        jax.block_until_ready(params)
+
+
+def _timed(fn, reps: int = 1) -> Tuple[float, int]:
+    """Best-of-``reps`` wall clock (min filters scheduler noise on multi-second
+    rounds); dispatch count from the last rep."""
+    best = float("inf")
+    for _ in range(reps):
+        counters.reset_dispatches()
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, counters.dispatch_count()
+
+
+def bench_edge_loop(quick: bool = False) -> Tuple[List[Row], Dict]:
+    rows: List[Row] = []
+    payload: Dict = {"device_counts": {}}
+    sizes = [4, 16] if quick else [4, 16, 64]
+    per_device = 96
+
+    for D in sizes:
+        cfg = _bench_cfg(D)
+        full = make_digit_dataset(per_device * D, seed=0)
+        seed_set = make_digit_dataset(cfg.initial_train, seed=1)
+        shards = federated_split(full, D, seed=2)
+
+        trainer = Trainer(cfg)
+        params0 = trainer.init_params(jax.random.key(0))
+        eng = EdgeEngine(trainer, cfg, shards, seed_set)
+
+        def run_legacy():
+            _seed_style_round(trainer, cfg, shards, seed_set, params0)
+
+        def run_device_loop():
+            state, _ = eng.run_round_legacy(eng.init_state(params0),
+                                            record_curves=False)
+            jax.block_until_ready(state.params)
+
+        def run_engine():
+            state, _ = eng.run_round(eng.init_state(params0),
+                                     record_curves=False)
+            jax.block_until_ready(state.params)
+
+        results = {}
+        for name, fn in [("legacy", run_legacy),
+                         ("device_loop", run_device_loop),
+                         ("engine", run_engine)]:
+            _timed(fn)                       # warmup: compile
+            secs, disp = _timed(fn, reps=2)  # steady state
+            results[name] = {"ms": secs * 1e3, "dispatches_per_round": disp}
+
+        speedup = results["legacy"]["ms"] / results["engine"]["ms"]
+        disp_reduction = (results["legacy"]["dispatches_per_round"]
+                          / max(results["engine"]["dispatches_per_round"], 1))
+        payload["device_counts"][D] = {
+            **{f"{n}_{k}": v for n, r in results.items() for k, v in r.items()},
+            "wall_clock_speedup_vs_legacy": speedup,
+            "dispatch_reduction_vs_legacy": disp_reduction,
+        }
+        for name, r in results.items():
+            rows.append((f"edge_loop/{name}_D{D}", r["ms"] * 1e3,
+                         f"dispatches={r['dispatches_per_round']}"))
+        rows.append((f"edge_loop/engine_vs_legacy_D{D}", 0.0,
+                     f"speedup={speedup:.1f}x,"
+                     f"dispatch_reduction={disp_reduction:.0f}x"))
+    return rows, payload

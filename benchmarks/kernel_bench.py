@@ -23,11 +23,12 @@ Row = Tuple[str, float, str]
 
 
 def _time_call(fn, *args, reps=3):
-    fn(*args)  # compile
-    t0 = time.time()
+    jax.block_until_ready(fn(*args))  # compile AND finish the async warmup,
+    # so compile time can't leak into the timed region below
+    t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def bench_kernels(quick: bool = False) -> Tuple[List[Row], Dict]:

@@ -71,7 +71,8 @@ def bench_table2(quick: bool = False) -> Tuple[List[Row], Dict]:
         seed_set = make_digit_dataset(cfg.initial_train, seed=R + 2)
 
         (_, rep_avg), us = _timed(lambda: run_federated_round(
-            cfg, shards, seed_set, test, trainer=trainer, record_curves=False))
+            cfg, shards, seed_set, test, trainer=trainer, record_curves=False,
+            engine="classic"))  # paper-protocol timing: no engine (re)compile in _timed
         accs = rep_avg["aggregation"]["device_accs"]
         acc_opt = float(np.max(accs))
         acc_avg = rep_avg["aggregated_acc"]
@@ -153,7 +154,8 @@ def bench_massive_cascade(quick: bool = False) -> Tuple[List[Row], Dict]:
 
     # independent devices + FedAvg (paper: accuracy collapses)
     (_, rep), us = _timed(lambda: run_federated_round(
-        cfg, shards, seed_set, test, trainer=trainer, record_curves=False))
+        cfg, shards, seed_set, test, trainer=trainer, record_curves=False,
+        engine="classic"))  # paper-protocol timing: no engine (re)compile in _timed
     payload["federated_avg"] = rep["aggregated_acc"]
     rows.append((f"massive/federated_{n_dev}dev", us,
                  f"{rep['aggregated_acc']:.3f}"))
@@ -209,7 +211,8 @@ def bench_acquisition_strategies(quick: bool = False) -> Tuple[List[Row], Dict]:
         shards = federated_split(full, cfg.num_devices, seed=23)
         seed_set = make_digit_dataset(cfg.initial_train, seed=24)
         (_, rep), us = _timed(lambda: run_federated_round(
-            cfg, shards, seed_set, test, trainer=trainer, record_curves=False))
+            cfg, shards, seed_set, test, trainer=trainer, record_curves=False,
+            engine="classic"))  # paper-protocol timing: no engine (re)compile in _timed
         payload[strat] = rep["aggregated_acc"]
         rows.append((f"acquisition/{strat}/acq{R}", us,
                      f"{rep['aggregated_acc']:.3f}"))

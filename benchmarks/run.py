@@ -22,6 +22,7 @@ BENCHES = [
     ("acquisition", "benchmarks.paper_experiments", "bench_acquisition_strategies"),
     ("massive", "benchmarks.paper_experiments", "bench_massive_cascade"),
     ("kernels", "benchmarks.kernel_bench", "bench_kernels"),
+    ("edge_loop", "benchmarks.edge_loop_bench", "bench_edge_loop"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

@@ -14,7 +14,10 @@ from repro.core.acquisition import (
 )
 from repro.core.aggregation import fedavg, opt_model, stack_models, weighted_average
 from repro.core.pool import ActivePool
+from repro.core.vpool import VPool, vpool_init
 from repro.core.federated import (EdgeDevice, FederatedALConfig, FogNode,
                                   run_federated_round, run_federated_rounds,
                                   run_experiment)
+from repro.core.engine import EdgeEngine, EngineState, stack_device_data
 from repro.core.cascade import cascade_train, pipelined_cascade_schedule
+from repro.core.counters import dispatch_count, reset_dispatches

@@ -93,6 +93,8 @@ def batch_bald_lite(log_probs, k: int):
     moderate T.  Returns indices [k].
     """
     T, N, C = log_probs.shape
+    # hoisted invariants: p and the conditional entropy are reused by every
+    # greedy iteration — never recomputed inside the loop
     p = jnp.exp(log_probs)                                   # [T, N, C]
     cond_ent = -jnp.mean(jnp.sum(p * log_probs, axis=-1), axis=0)  # [N]
 
@@ -110,7 +112,9 @@ def batch_bald_lite(log_probs, k: int):
         chosen_mask = chosen_mask.at[nxt].set(True)
         joint = (joint[:, :, None] * p[:, nxt, None, :]).reshape(T, -1)
         if joint.shape[1] > 128:                             # bound memory: keep top bins
-            top_idx = jnp.argsort(joint.mean(0))[-128:]
-            joint = joint[:, top_idx]
+            # top_k is O(J log 128) vs a full O(J log J) argsort over the
+            # joint matrix; column order does not matter downstream
+            _, top_idx = jax.lax.top_k(joint.mean(0), 128)
+            joint = jnp.take(joint, top_idx, axis=1)
             joint = joint / (joint.sum(1, keepdims=True) + _EPS)
     return jnp.stack(picks)

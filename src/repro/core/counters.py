@@ -1,0 +1,39 @@
+"""Host→device dispatch accounting.
+
+Every Python-level invocation of a compiled callable (one ``jax.jit``
+executable call) is one host→device dispatch.  The edge-loop benchmark uses
+this to compare the legacy per-device driver (hundreds of small dispatches
+per round) against the vectorized engine (one dispatch per round).  Eager
+jnp ops are not counted, so legacy numbers are a *lower bound* — the real
+gap is larger.
+"""
+from __future__ import annotations
+
+import functools
+
+_DISPATCHES = 0
+
+
+def count_dispatch(n: int = 1) -> None:
+    global _DISPATCHES
+    _DISPATCHES += n
+
+
+def reset_dispatches() -> None:
+    global _DISPATCHES
+    _DISPATCHES = 0
+
+
+def dispatch_count() -> int:
+    return _DISPATCHES
+
+
+def counted(fn):
+    """Wrap a compiled callable so each invocation counts one dispatch."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        count_dispatch()
+        return fn(*args, **kwargs)
+
+    return wrapper

@@ -1,0 +1,84 @@
+"""Jit-friendly fixed-capacity active pool (the traced twin of ``pool.ActivePool``).
+
+``ActivePool`` keeps ragged numpy index arrays and draws windows with a host
+RNG — fine for one device in a Python loop, fatal for a vmapped compile-once
+engine.  ``VPool`` is a pytree of fixed-shape arrays so that window draw and
+acquisition become pure traced index ops:
+
+  * ``labeled_mask [n_pad] bool``  — True = already labeled OR padding slot.
+  * ``labeled_idx  [capacity] i32``— global dataset indices in acquisition
+    order (-1 where unused), so the training gather is a single fixed-shape
+    ``images[labeled_idx]`` with ``labeled_valid`` as the loss mask.
+  * ``n_filled``                   — slots consumed so far (k per acquisition,
+    invalid picks are appended masked-out to keep shapes static).
+
+Window draw uses the Gumbel-free variant of sampling without replacement:
+uniform scores on unlabeled points, -1 on labeled/pad, ``lax.top_k`` — a
+uniform random W-subset of the unlabeled pool, fully traceable and
+vmappable over a device axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VPool(NamedTuple):
+    labeled_mask: jax.Array   # bool [n_pad]
+    labeled_idx: jax.Array    # int32 [capacity]
+    labeled_valid: jax.Array  # bool [capacity]
+    n_filled: jax.Array       # int32 scalar
+
+
+def vpool_init(valid: jax.Array, capacity: int) -> VPool:
+    """``valid [n_pad] bool`` marks real (non-padding) dataset slots."""
+    return VPool(
+        labeled_mask=~valid,
+        labeled_idx=jnp.full((capacity,), -1, jnp.int32),
+        labeled_valid=jnp.zeros((capacity,), bool),
+        n_filled=jnp.zeros((), jnp.int32),
+    )
+
+
+def n_labeled(pool: VPool) -> jax.Array:
+    return jnp.sum(pool.labeled_valid.astype(jnp.int32))
+
+
+def n_unlabeled(pool: VPool) -> jax.Array:
+    return jnp.sum((~pool.labeled_mask).astype(jnp.int32))
+
+
+def draw_window(pool: VPool, key, window: int):
+    """Uniform random subsample of the unlabeled pool.
+
+    Returns ``(indices [window] i32, valid [window] bool)``; when fewer than
+    ``window`` points remain unlabeled the tail is marked invalid.
+    """
+    u = jax.random.uniform(key, pool.labeled_mask.shape)
+    scores = jnp.where(pool.labeled_mask, -1.0, 1.0 + u)
+    k = min(window, scores.shape[0])
+    top, idx = jax.lax.top_k(scores, k)
+    pad = window - k
+    if pad > 0:  # window larger than the whole dataset: tail is invalid
+        top = jnp.pad(top, (0, pad), constant_values=-1.0)
+        idx = jnp.pad(idx, (0, pad))
+    return idx.astype(jnp.int32), top > 0.0
+
+
+def acquire(pool: VPool, window_idx, selected, selected_valid) -> VPool:
+    """Mark ``window_idx[selected]`` as labeled (where ``selected_valid``).
+
+    Always appends ``len(selected)`` slots so every acquisition advances
+    ``n_filled`` by the same static amount; invalid picks land masked-out.
+    """
+    chosen = jnp.take(window_idx, selected).astype(jnp.int32)
+    # out-of-bounds index for invalid picks → dropped by the scatter
+    n_pad = pool.labeled_mask.shape[0]
+    safe = jnp.where(selected_valid, chosen, n_pad)
+    mask = pool.labeled_mask.at[safe].set(True, mode="drop")
+    idx = jax.lax.dynamic_update_slice(pool.labeled_idx, chosen, (pool.n_filled,))
+    val = jax.lax.dynamic_update_slice(pool.labeled_valid, selected_valid,
+                                       (pool.n_filled,))
+    return VPool(mask, idx, val, pool.n_filled + selected.shape[0])

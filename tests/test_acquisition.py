@@ -1,4 +1,8 @@
 """Unit + property tests for the acquisition functions (paper Eqs. 2-4)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

@@ -1,4 +1,8 @@
 """Fog-node aggregation invariants (paper Eq. 1) — unit + property tests."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

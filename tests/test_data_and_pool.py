@@ -1,4 +1,8 @@
 """Data pipeline + active-pool tests (synthetic digits, federated splits)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import numpy as np
 from hypothesis import given, settings

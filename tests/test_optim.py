@@ -1,4 +1,8 @@
 """Optimizer unit + property tests (built from scratch, no optax)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,8 @@
 """SSD (mamba2) and RG-LRU recurrence equivalence tests."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
