@@ -1,6 +1,7 @@
 """Edge AL hot-loop benchmark: the seed repo's per-device Python loop vs the
 compile-once vectorized engine (``repro.core.engine``) at 4 / 16 / 64
-simulated devices.
+simulated devices, plus the massively-distributed fleet benchmark
+(``bench_massive_fleet``) that isolates the fog-node aggregation tail.
 
 Three execution models of the SAME round (D devices × R acquisitions, each:
 draw window → MC-dropout score → top-k → masked retrain):
@@ -34,7 +35,8 @@ import jax.numpy as jnp
 from repro.core import acquisition as acq
 from repro.core import counters
 from repro.core.engine import EdgeEngine
-from repro.core.federated import FederatedALConfig, Trainer
+from repro.core.federated import (FederatedALConfig, FogNode, Trainer,
+                                  massive_config, MASSIVE_SAMPLES_PER_DEVICE)
 from repro.core.pool import ActivePool
 from repro.data.digits import make_digit_dataset
 from repro.data.federated_split import federated_split
@@ -150,4 +152,96 @@ def bench_edge_loop(quick: bool = False) -> Tuple[List[Row], Dict]:
         rows.append((f"edge_loop/engine_vs_legacy_D{D}", 0.0,
                      f"speedup={speedup:.1f}x,"
                      f"dispatch_reduction={disp_reduction:.0f}x"))
+    return rows, payload
+
+
+def bench_massive_fleet(quick: bool = False) -> Tuple[List[Row], Dict]:
+    """Massively-distributed rounds (the ``massive`` scenario preset):
+    per-PHASE wall clock for one full federated round at D ∈ {64, 256, 1024}
+    (~40 samples/device), exposing the fog-node aggregation tail.
+
+      * ``host_agg`` — the list-of-pytrees path: unstack the engine's
+        ``[D, ...]`` params into D pytrees, D per-device accuracy dispatches,
+        host-side Eq. 1 fold (O(D) Python + dispatch tail per round).
+      * ``fused`` — ``EdgeEngine.run_rounds_fused``: device AL + vmapped
+        validation + stacked Eq. 1 + re-dispatch in ONE compiled dispatch.
+
+    The JSON payload carries each phase separately so the tail is visible:
+    ``device_al_ms`` (engine round alone), ``host_agg_ms`` (unstack +
+    validate + average), ``fused_total_ms`` (everything, one dispatch).
+
+        PYTHONPATH=src python -m benchmarks.run --only massive_fleet [--quick]
+    """
+    rows: List[Row] = []
+    payload: Dict = {"device_counts": {},
+                     "samples_per_device": MASSIVE_SAMPLES_PER_DEVICE}
+    sizes = [64] if quick else [64, 256, 1024]
+
+    for D in sizes:
+        cfg = massive_config(D)
+        full = make_digit_dataset(MASSIVE_SAMPLES_PER_DEVICE * D, seed=0)
+        test = make_digit_dataset(256, seed=1)
+        seed_set = make_digit_dataset(cfg.initial_train, seed=2)
+        shards = federated_split(full, D, seed=3)
+
+        trainer = Trainer(cfg)
+        params0 = trainer.init_params(jax.random.key(0))
+        eng = EdgeEngine(trainer, cfg, shards, seed_set, test)
+        fog = FogNode(trainer, cfg, seed_set)
+
+        def run_device_al():
+            state, _ = eng.run_round(eng.init_state(params0),
+                                     record_curves=False)
+            jax.block_until_ready(state.params)
+            return state
+
+        def run_host_agg(state):
+            models = eng.device_params_list(state)
+            agg, _ = fog.aggregate(models, val_set=test,
+                                   counts=eng.labeled_counts(state))
+            jax.block_until_ready(agg)
+
+        def run_fused():
+            _, recs, final = eng.run_rounds_fused(eng.init_state(params0), 1)
+            jax.block_until_ready(final)
+
+        # warmup (compile both programs + one host-agg pass)
+        state = run_device_al()
+        run_host_agg(state)
+        run_fused()
+
+        counters.reset_dispatches()
+        t0 = time.perf_counter()
+        state = run_device_al()
+        t1 = time.perf_counter()
+        run_host_agg(state)
+        t2 = time.perf_counter()
+        host_disp = counters.dispatch_count()
+
+        counters.reset_dispatches()
+        t3 = time.perf_counter()
+        run_fused()
+        t4 = time.perf_counter()
+        fused_disp = counters.dispatch_count()
+
+        device_al_ms = (t1 - t0) * 1e3
+        host_agg_ms = (t2 - t1) * 1e3
+        fused_ms = (t4 - t3) * 1e3
+        tail_frac = host_agg_ms / max(device_al_ms + host_agg_ms, 1e-9)
+        payload["device_counts"][D] = {
+            "device_al_ms": device_al_ms,
+            "host_agg_ms": host_agg_ms,
+            "host_total_ms": device_al_ms + host_agg_ms,
+            "host_dispatches_per_round": host_disp,
+            "fused_total_ms": fused_ms,
+            "fused_dispatches_per_round": fused_disp,
+            "host_agg_tail_fraction": tail_frac,
+            "round_speedup_fused_vs_host": (device_al_ms + host_agg_ms)
+            / max(fused_ms, 1e-9),
+        }
+        rows.append((f"massive_fleet/device_al_D{D}", device_al_ms * 1e3, ""))
+        rows.append((f"massive_fleet/host_agg_D{D}", host_agg_ms * 1e3,
+                     f"dispatches={host_disp},tail={tail_frac:.0%}"))
+        rows.append((f"massive_fleet/fused_round_D{D}", fused_ms * 1e3,
+                     f"dispatches={fused_disp}"))
     return rows, payload

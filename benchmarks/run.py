@@ -23,6 +23,7 @@ BENCHES = [
     ("massive", "benchmarks.paper_experiments", "bench_massive_cascade"),
     ("kernels", "benchmarks.kernel_bench", "bench_kernels"),
     ("edge_loop", "benchmarks.edge_loop_bench", "bench_edge_loop"),
+    ("massive_fleet", "benchmarks.edge_loop_bench", "bench_massive_fleet"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

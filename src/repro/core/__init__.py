@@ -12,12 +12,17 @@ from repro.core.acquisition import (
     select_topk,
     variational_ratio,
 )
-from repro.core.aggregation import fedavg, opt_model, stack_models, weighted_average
+from repro.core.aggregation import (fedavg, fedavg_n, fedavg_stacked,
+                                    normalize_weights, opt_model,
+                                    opt_model_stacked, stack_models,
+                                    stacked_accuracy, unstack_models,
+                                    weighted_average, weighted_average_stacked)
 from repro.core.pool import ActivePool
 from repro.core.vpool import VPool, vpool_init
 from repro.core.federated import (EdgeDevice, FederatedALConfig, FogNode,
-                                  run_federated_round, run_federated_rounds,
-                                  run_experiment)
+                                  massive_config, run_federated_round,
+                                  run_federated_rounds, run_experiment,
+                                  upload_mask_schedule)
 from repro.core.engine import EdgeEngine, EngineState, stack_device_data
 from repro.core.cascade import cascade_train, pipelined_cascade_schedule
 from repro.core.counters import dispatch_count, reset_dispatches

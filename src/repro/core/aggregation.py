@@ -1,10 +1,27 @@
 """Fog-node aggregation strategies (paper §III-B, Eq. 1).
 
-All strategies operate on a list of parameter pytrees (one per edge device)
-and return a single aggregated pytree. ``exclude`` is a predicate on the
-flattened key path used to keep per-device state (e.g. recurrent states,
-batch statistics) out of the average — relevant for the hybrid/SSM
-architectures (DESIGN.md §4).
+Two families:
+
+* **List variants** (``fedavg`` / ``weighted_average`` / ``opt_model``) take a
+  Python list of per-device parameter pytrees — the legacy fog-node path, one
+  pytree per upload.
+* **Stacked variants** (``fedavg_stacked`` / ``weighted_average_stacked`` /
+  ``opt_model_stacked``) operate directly on the engine's ``[D, ...]`` stacked
+  state, so Eq. 1 is a handful of fused reductions instead of a D-long
+  Python fold — and, crucially, they are pure traced functions that the
+  vectorized engine can compile *into* the round program
+  (``EdgeEngine.run_rounds_fused``), eliminating the O(D) host-side
+  aggregation tail entirely.
+
+``exclude`` is a predicate on the flattened key path used to keep per-device
+state (e.g. recurrent states, batch statistics) out of the average —
+relevant for the hybrid/SSM architectures (DESIGN.md §4).
+
+Weight hygiene (paper Eq. 1 writes W ← Σ_i α_i W_i with Σα = 1):
+``normalize_weights`` restricts the raw weights to the participation mask
+and guards the Σw = 0 corner (all device val-accs zero in an early round
+used to propagate NaN into every parameter) by falling back to a uniform
+average over participants.
 """
 from __future__ import annotations
 
@@ -26,14 +43,38 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def weighted_average(models: Sequence, weights: Sequence[float], *,
-                     exclude: Optional[Callable[[str], bool]] = None):
-    """W ← Σ_i α_i W_i (paper Eq. 1). ``weights`` are normalized here.
+def normalize_weights(weights, mask=None) -> jax.Array:
+    """Raw per-device weights → convex combination coefficients α (Eq. 1).
 
-    Excluded leaves take the first model's value (the fog node's own copy).
+    ``mask`` (optional, [D] bool/float) zeroes out non-participants (the
+    paper's asynchronization tolerance: devices that did not upload this
+    round).  Degenerate cases fall back instead of producing NaN:
+
+    * Σ(w·mask) = 0 (e.g. every uploaded model scored 0 validation accuracy
+      in an early untrained round) → uniform over participants;
+    * no participants at all → uniform over every device.
+
+    Fully traced — safe under jit/vmap/shard_map.
     """
     w = jnp.asarray(weights, jnp.float32)
-    w = w / jnp.sum(w)
+    m = jnp.ones_like(w) if mask is None else jnp.asarray(mask, jnp.float32)
+    w = w * m
+    wsum = jnp.sum(w)
+    msum = jnp.sum(m)
+    uniform = jnp.where(msum > 0, m / jnp.maximum(msum, 1.0),
+                        jnp.full_like(w, 1.0 / w.shape[0]))
+    return jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), uniform)
+
+
+def weighted_average(models: Sequence, weights: Sequence[float], *,
+                     exclude: Optional[Callable[[str], bool]] = None):
+    """W ← Σ_i α_i W_i (paper Eq. 1) over a list of pytrees.
+
+    ``weights`` are normalized here (zero-sum guarded — see
+    ``normalize_weights``).  Excluded leaves take the first model's value
+    (the fog node's own copy).
+    """
+    w = normalize_weights(jnp.asarray(weights, jnp.float32))
 
     def agg(path, *leaves):
         if exclude is not None and exclude(_path_str(path)):
@@ -49,16 +90,93 @@ def fedavg(models: Sequence, *, exclude: Optional[Callable[[str], bool]] = None)
     return weighted_average(models, [1.0] * len(models), exclude=exclude)
 
 
+def fedavg_n(models: Sequence, counts: Sequence[float], *,
+             exclude: Optional[Callable[[str], bool]] = None):
+    """Size-aware Eq. 1: α_i ∝ n_i, the device's labeled-sample count.
+
+    The correct weighting for the unbalanced shards ``federated_split``
+    produces (cf. hierarchical fog aggregation in Kumar & Srirama 2024,
+    Hussain 2022); uniform ``fedavg`` over-weights small shards.
+    """
+    return weighted_average(models, counts, exclude=exclude)
+
+
 def opt_model(models: Sequence, scores: Sequence[float]):
     """Paper's 'choosing the best-trained model': argmax validation score."""
     best = int(jnp.argmax(jnp.asarray(scores)))
     return models[best], best
 
 
+# --------------------------------------------------------------- stacked axis
+def weighted_sum_stacked(stacked, w, *,
+                         exclude: Optional[Callable[[str], bool]] = None):
+    """Σ_i w_i · leaf[i] over the leading device axis; ``w`` [D] is applied
+    as-is (already normalized — see ``normalize_weights``).  Excluded leaves
+    take device 0's slice.  The building block the engine psum-reduces under
+    ``shard_map`` (each shard contributes its local partial sum).
+
+    CAVEAT: ``exclude`` composes with the single-host stacked path only —
+    inside a shard_map'd program a psum over the result would SUM each
+    shard's local device-0 slice of an excluded leaf instead of selecting
+    global device 0's.  The engine's fused path never passes ``exclude``."""
+
+    def agg(path, leaf):
+        if exclude is not None and exclude(_path_str(path)):
+            return leaf[0]
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(wb * leaf.astype(jnp.float32), axis=0).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(agg, stacked)
+
+
+def weighted_average_stacked(stacked, weights, *, mask=None,
+                             exclude: Optional[Callable[[str], bool]] = None):
+    """Eq. 1 directly on ``[D, ...]`` stacked params: normalize (mask-aware,
+    zero-sum guarded) then reduce the device axis — one fused reduction per
+    leaf, no per-device dispatches."""
+    return weighted_sum_stacked(stacked, normalize_weights(weights, mask),
+                                exclude=exclude)
+
+
+def fedavg_stacked(stacked, *, mask=None,
+                   exclude: Optional[Callable[[str], bool]] = None):
+    """Uniform federated averaging over the stacked device axis (optionally
+    restricted to the ``mask`` participants)."""
+    D = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    return weighted_average_stacked(stacked, jnp.ones((D,), jnp.float32),
+                                    mask=mask, exclude=exclude)
+
+
+def opt_model_stacked(stacked, scores, *, mask=None):
+    """'Best-trained model' on stacked params: argmax of (masked) scores,
+    returned as ``(params_of_best, best_index)``; traced-friendly (the index
+    is a traced scalar, the gather is one dynamic slice per leaf)."""
+    s = jnp.asarray(scores, jnp.float32)
+    if mask is not None:
+        s = jnp.where(jnp.asarray(mask, bool), s, -jnp.inf)
+    best = jnp.argmax(s)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.take(l, best, axis=0), stacked), best
+
+
+def stacked_accuracy(eval_logits_fn, stacked_params, x, y) -> jax.Array:
+    """Per-device validation accuracy ``[D]`` in ONE vmapped forward pass —
+    replaces the fog node's D separate ``trainer.accuracy`` dispatches."""
+    preds = jax.vmap(lambda p: jnp.argmax(eval_logits_fn(p, x), -1))(
+        stacked_params)                                   # [D, N]
+    return jnp.mean((preds == y[None, :]).astype(jnp.float32), axis=1)
+
+
 def stack_models(models: Sequence):
     """Stack device models along a new leading axis (paper's 'stacking the
     weights by decomposition' — useful for ensembling / later analysis)."""
     return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *models)
+
+
+def unstack_models(stacked) -> List:
+    """Inverse of ``stack_models``: ``[D, ...]`` pytree → list of D pytrees."""
+    D = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    return [jax.tree_util.tree_map(lambda a: a[d], stacked) for d in range(D)]
 
 
 def ensemble_logits(apply_fn, stacked_params, x):

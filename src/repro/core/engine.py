@@ -23,6 +23,23 @@ HBM sweeps over the [T, W, C] log-prob tensor.  On CPU the default is the
 pure-jnp oracle (same math, XLA-fused); ``scorer="pallas_interpret"`` forces
 the kernel in interpret mode for parity testing inside the loop.
 
+Two extensions take the engine from "one dispatch per device round" to
+"massively distributed" scale (paper §IV's many-devices/few-labels regime):
+
+  * ``run_rounds_fused`` compiles the FOG NODE into the program: whole
+    rounds — device AL, per-device validation accuracy (one vmapped pass),
+    Eq. 1 aggregation with participation-mask-aware weights, and re-dispatch
+    of the aggregated model — chain through an outer ``lax.scan``, so T
+    rounds over D devices cost ONE dispatch total.  The old path (unstack
+    [D, ...] params into D pytrees, D accuracy dispatches, host-side
+    average) left an O(D) Python tail per round that dwarfed the round
+    itself at D ≥ 256 (measured in ``benchmarks/edge_loop_bench.py``).
+  * ``EdgeEngine(..., mesh=...)`` shards the device axis across a JAX mesh
+    via ``shard_map`` (``launch.mesh.make_device_mesh``): each accelerator
+    simulates D/shards devices; the fused aggregation turns into
+    all_gather of [D] scalars + a local weighted partial sum + one psum.
+    On CPU, test with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 The legacy per-device path survives behind ``EdgeEngine.run_round_legacy``
 (same step function, eagerly dispatched per device per acquisition) for
 equivalence testing and as the benchmark baseline.
@@ -35,10 +52,16 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import acquisition as acq
+from repro.core import aggregation as agg_mod
 from repro.core import counters, vpool
 from repro.kernels.acquisition_scores import acquisition_scores_fused
+from repro.launch.mesh import DEVICE_AXIS
+
+_AGGREGATIONS = ("average", "weighted", "optimal", "fedavg_n")
 
 _FUSED_SCORES = ("entropy", "bald", "vr")
 
@@ -115,9 +138,21 @@ class EdgeEngine:
 
     def __init__(self, trainer, cfg, device_data: Sequence, seed_data,
                  test_set=None, *, total_acquisitions: Optional[int] = None,
-                 scorer: Optional[str] = None, unroll: Optional[bool] = None):
+                 scorer: Optional[str] = None, unroll: Optional[bool] = None,
+                 mesh=None):
         self.trainer = trainer
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            if DEVICE_AXIS not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh must carry a {DEVICE_AXIS!r} axis "
+                    f"(launch.mesh.make_device_mesh); got {mesh.axis_names}")
+            shards = mesh.shape[DEVICE_AXIS]
+            if len(device_data) % shards:
+                raise ValueError(
+                    f"num_devices={len(device_data)} must divide evenly over "
+                    f"the {shards}-way {DEVICE_AXIS!r} mesh axis")
         # XLA:CPU loses intra-op threading inside while-loop bodies (~3x on
         # the conv train step), so on CPU both scans are unrolled into a
         # straight-line program; on TPU the rolled while-loop compiles faster
@@ -125,6 +160,11 @@ class EdgeEngine:
         self.unroll = (jax.default_backend() == "cpu") if unroll is None else unroll
         self.num_devices = len(device_data)
         self.images, self.labels, self.valid = stack_device_data(device_data)
+        if mesh is not None:
+            # commit the fleet data to its shards once, not per dispatch
+            sharding = NamedSharding(mesh, P(DEVICE_AXIS))
+            self.images = jax.device_put(self.images, sharding)
+            self.labels = jax.device_put(self.labels, sharding)
         n_pad = self.images.shape[1]
         self.window = min(cfg.pool_window, n_pad)
         self.k = min(cfg.k_per_acquisition, self.window)
@@ -149,11 +189,19 @@ class EdgeEngine:
 
     # ------------------------------------------------------------ state
     def device_keys(self, round_idx: int = 0) -> jax.Array:
-        """Mirrors the legacy driver's per-device key schedule."""
+        """Mirrors the legacy driver's per-device key schedule.  Vectorized
+        (vmapped key construction is bit-identical to the Python loop) so a
+        D=1024 fleet doesn't pay 1024 tiny host dispatches per round."""
         cfg = self.cfg
-        return jnp.stack([
-            jax.random.key(cfg.seed + 7919 * (d + 1) + 104729 * round_idx)
-            for d in range(self.num_devices)])
+        return jax.vmap(lambda d: jax.random.key(
+            cfg.seed + 7919 * (d + 1) + 104729 * round_idx))(
+                jnp.arange(self.num_devices))
+
+    def _shard_state(self, state: EngineState) -> EngineState:
+        if self.mesh is None:
+            return state
+        from repro.launch.sharding import shard_engine_state
+        return shard_engine_state(self.mesh, state)
 
     def init_state(self, params0, *, round_idx: int = 0) -> EngineState:
         D = self.num_devices
@@ -166,7 +214,8 @@ class EdgeEngine:
             labeled_valid=jnp.zeros((D, self.capacity), bool),
             n_filled=jnp.zeros((D,), jnp.int32),
         )
-        return EngineState(params, opt_state, pool, self.device_keys(round_idx))
+        return self._shard_state(
+            EngineState(params, opt_state, pool, self.device_keys(round_idx)))
 
     def set_params(self, state: EngineState, params0, *,
                    round_idx: int = 0) -> EngineState:
@@ -175,12 +224,19 @@ class EdgeEngine:
         D = self.num_devices
         params = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (D,) + a.shape), params0)
-        return EngineState(params, self.trainer.opt.init(params), state.pool,
-                           self.device_keys(round_idx))
+        return self._shard_state(
+            EngineState(params, self.trainer.opt.init(params), state.pool,
+                        self.device_keys(round_idx)))
 
     def device_params_list(self, state: EngineState) -> List:
-        return [jax.tree_util.tree_map(lambda a: a[d], state.params)
-                for d in range(self.num_devices)]
+        return agg_mod.unstack_models(state.params)
+
+    def labeled_counts(self, state: EngineState) -> List[int]:
+        """Per-device labeled-sample counts n_i (the fedavg_n / Eq. 1
+        weights) — the single source the host aggregation path, benchmarks,
+        and tests share."""
+        return [int(n) for n in
+                np.asarray(jax.vmap(vpool.n_labeled)(state.pool))]
 
     # ------------------------------------------------------------ the step
     def _acquisition_step(self, record_curves: bool):
@@ -255,13 +311,14 @@ class EdgeEngine:
                 self.images.shape, self.capacity, self.window, self.k,
                 self.scorer, self.unroll, self.seed_images.shape,
                 None if self.test_images is None else self.test_images.shape,
-                record)
+                record, self.mesh)
 
     def _get_round_jit(self, record_curves: bool):
         def build():
             step = self._acquisition_step(record_curves)
             R = self.cfg.acquisitions
             round_unroll = R if self.unroll else 1  # local: no self in closure
+            mesh = self.mesh
 
             def round_all(state, images, labels, seed_x, seed_y,
                           test_x=None, test_y=None):
@@ -274,6 +331,16 @@ class EdgeEngine:
                 carry = (state.params, state.opt_state, state.pool, state.rng)
                 carry, recs = jax.vmap(device_round)(carry, images, labels)
                 return EngineState(*carry), recs
+
+            if mesh is not None:
+                # Shard the device axis: each mesh shard vmaps its D/shards
+                # local devices; no collectives needed for a plain round.
+                dev = P(DEVICE_AXIS)
+                n_extra = 4 if record_curves else 2
+                round_all = shard_map(
+                    round_all, mesh=mesh,
+                    in_specs=(dev, dev, dev) + (P(),) * n_extra,
+                    out_specs=(dev, dev), check_rep=False)
 
             from repro.core.federated import _donate_argnums
             return jax.jit(round_all, donate_argnums=_donate_argnums(0))
@@ -296,17 +363,215 @@ class EdgeEngine:
             args += (self.test_images, self.test_labels)
         return args
 
-    def _check_capacity(self, state: EngineState):
+    def _check_capacity(self, state: EngineState, *, rounds: int = 1):
         """A round appends R·k slots per device; dynamic_update_slice would
         silently clamp-and-overwrite past capacity, so fail loudly instead.
         Size the pool with ``total_acquisitions`` for multi-round use."""
         need = int(np.max(np.asarray(state.pool.n_filled))) \
-            + self.cfg.acquisitions * self.k
+            + rounds * self.cfg.acquisitions * self.k
         if need > self.capacity:
             raise ValueError(
-                f"pool capacity {self.capacity} cannot absorb this round "
-                f"(would need {need} slots); construct EdgeEngine with "
-                f"total_acquisitions covering all rounds")
+                f"pool capacity {self.capacity} cannot absorb {rounds} "
+                f"round(s) (would need {need} slots); construct EdgeEngine "
+                f"with total_acquisitions covering all rounds")
+
+    # ----------------------------------------------------- fused fog rounds
+    def _get_rounds_fused_jit(self, rounds: int, aggregation: str,
+                              mask_mode: str):
+        """T whole rounds — device AL + Eq. 1 aggregation + re-dispatch — as
+        ONE compiled program (an outer scan over rounds).
+
+        ``mask_mode``:
+          * ``"given"``     — participation mask arrives as a traced
+            ``[rounds, D]`` float array (1 = uploaded);
+          * ``"bernoulli"`` — the mask is DRAWN INSIDE the program,
+            Bernoulli(upload_fraction) per device per round from a
+            per-round key (the paper's §III-B asynchronization tolerance
+            as a traced knob — the fraction is a traced scalar, so sweeping
+            it reuses the executable).
+
+        Weights are normalized over actual participants
+        (``aggregation.normalize_weights``): a device that skipped the round
+        contributes nothing, zero-weight-sum rounds fall back to uniform.
+        """
+
+        def build():
+            step = self._acquisition_step(False)
+            R = self.cfg.acquisitions
+            round_unroll = R if self.unroll else 1
+            has_val = self.test_images is not None
+            mesh = self.mesh
+            axis = DEVICE_AXIS if mesh is not None else None
+            D = self.num_devices
+            D_local = D // (1 if mesh is None else mesh.shape[DEVICE_AXIS])
+            trainer = self.trainer
+            eval_fn = trainer.eval_logits_raw
+
+            def gather(v):  # local [D_local] per-device scalar → global [D]
+                return v if axis is None else jax.lax.all_gather(
+                    v, axis, tiled=True)
+
+            def local(v):   # global [D] → this shard's [D_local] slice
+                if axis is None:
+                    return v
+                off = jax.lax.axis_index(axis) * D_local
+                return jax.lax.dynamic_slice(v, (off,), (D_local,))
+
+            def rounds_all(state, images, labels, seed_x, seed_y,
+                           val_x, val_y, keys_all, mask_arg, fraction):
+                def one_round(carry, xs):
+                    params, opt_state, pool, _ = carry
+                    if mask_mode == "bernoulli":
+                        keys_r, mask_key = xs
+                        # same key on every shard → consistent global draw
+                        mask_g = jax.random.bernoulli(
+                            mask_key, fraction, (D,)).astype(jnp.float32)
+                        mask_l = local(mask_g)
+                    else:
+                        keys_r, mask_l = xs
+                        mask_g = gather(mask_l)
+
+                    def device_round(c, images_d, labels_d):
+                        return jax.lax.scan(
+                            lambda cc, _: step(cc, images_d, labels_d,
+                                               seed_x, seed_y, None, None),
+                            c, None, length=R, unroll=round_unroll)
+
+                    (params, opt_state, pool, rng), _ = jax.vmap(device_round)(
+                        (params, opt_state, pool, keys_r), images, labels)
+
+                    # ---- in-compile fog node: Eq. 1 over the stacked axis
+                    counts_g = gather(
+                        jax.vmap(vpool.n_labeled)(pool).astype(jnp.float32))
+                    if has_val:
+                        accs_g = gather(agg_mod.stacked_accuracy(
+                            eval_fn, params, val_x, val_y))
+                    else:
+                        accs_g = jnp.zeros_like(counts_g)
+                    if aggregation == "average":
+                        raw = jnp.ones((D,), jnp.float32)
+                    elif aggregation == "weighted":
+                        raw = accs_g
+                    elif aggregation == "fedavg_n":
+                        raw = counts_g
+                    else:  # optimal: one-hot at the best participant
+                        masked = jnp.where(mask_g > 0, accs_g, -jnp.inf)
+                        raw = jax.nn.one_hot(jnp.argmax(masked), D)
+                    w_g = agg_mod.normalize_weights(raw, mask_g)
+                    agg = agg_mod.weighted_sum_stacked(params, local(w_g))
+                    if axis is not None:
+                        agg = jax.lax.psum(agg, axis)
+
+                    rec = {"weights": w_g, "upload_mask": mask_g,
+                           "n_labeled": counts_g}
+                    if has_val:
+                        rec["device_accs"] = accs_g
+                        preds = jnp.argmax(eval_fn(agg, val_x), -1)
+                        rec["agg_acc"] = jnp.mean(
+                            (preds == val_y).astype(jnp.float32))
+
+                    # ---- re-dispatch: fresh optimizer, pools persist
+                    params = jax.tree_util.tree_map(
+                        lambda a: jnp.broadcast_to(
+                            a[None], (D_local,) + a.shape), agg)
+                    opt_state = trainer.opt.init(params)
+                    return (params, opt_state, pool, rng), rec
+
+                carry = (state.params, state.opt_state, state.pool, state.rng)
+                carry, recs = jax.lax.scan(one_round, carry,
+                                           (keys_all, mask_arg))
+                params, opt_state, pool, rng = carry
+                final = jax.tree_util.tree_map(lambda a: a[0], params)
+                return (EngineState(params, opt_state, pool, rng),
+                        recs, final)
+
+            if mesh is not None:
+                dev = P(DEVICE_AXIS)
+                keys_spec = P(None, DEVICE_AXIS)
+                mask_spec = (P() if mask_mode == "bernoulli"
+                             else P(None, DEVICE_AXIS))
+                rounds_all = shard_map(
+                    rounds_all, mesh=mesh,
+                    in_specs=(dev, dev, dev, P(), P(), P(), P(),
+                              keys_spec, mask_spec, P()),
+                    # recs and the aggregated model are replicated
+                    # (all_gather / psum results), state stays sharded
+                    out_specs=(dev, P(), P()), check_rep=False)
+
+            from repro.core.federated import _donate_argnums
+            return jax.jit(rounds_all, donate_argnums=_donate_argnums(0))
+
+        key = self._cache_key("rounds_fused", False) + (
+            rounds, aggregation, mask_mode)
+        return _compiled(key, build)
+
+    def run_rounds_fused(self, state: EngineState, rounds: int, *,
+                         upload_mask=None, upload_fraction: float = 1.0,
+                         aggregation: str = "fedavg_n", start_round: int = 0):
+        """T federated rounds (device AL + fog aggregation + re-dispatch) in
+        ONE dispatch.
+
+        ``aggregation`` ∈ average | weighted | optimal | fedavg_n; the
+        default weights Eq. 1 by per-device labeled counts (α_i ∝ n_i, the
+        correct weighting for ``federated_split``'s unbalanced shards).
+        ``upload_mask`` (``[rounds, D]`` or ``[D]``, truthy = uploaded)
+        models partial participation; ``upload_fraction < 1`` instead draws
+        a Bernoulli mask inside the compiled program.  Weights normalize
+        over actual participants; non-participants still receive the
+        aggregated model (the fog node dispatches to everyone).
+
+        Returns ``(state, recs, aggregated_params)`` where ``recs`` holds
+        per-round ``weights / upload_mask / n_labeled`` (+ ``device_accs`` /
+        ``agg_acc`` when the engine has a validation set) and
+        ``aggregated_params`` is the last round's fog-node model.
+
+        When chaining calls (continue training on the returned state), pass
+        ``start_round`` = rounds completed so far: round 0 of any call
+        consumes the state's own (evolved) keys, but the later-round key
+        schedule and the Bernoulli mask keys derive from the ABSOLUTE round
+        index — without the offset a second call would replay the first
+        call's randomness (the same stale-seed bug class ``_select_uploads``
+        had).
+        """
+        if aggregation not in _AGGREGATIONS:
+            raise ValueError(f"unknown aggregation {aggregation!r}: "
+                             f"use {' | '.join(_AGGREGATIONS)}")
+        if aggregation in ("weighted", "optimal") and self.test_images is None:
+            raise ValueError(
+                f"aggregation={aggregation!r} scores devices on a validation "
+                "set; construct EdgeEngine with test_set")
+        self._check_capacity(state, rounds=rounds)
+        D = self.num_devices
+        # round 0 consumes the incoming state's keys; later rounds follow
+        # the legacy set_params schedule (device_keys at the absolute index)
+        later = [self.device_keys(start_round + t) for t in range(1, rounds)]
+        keys_all = (jnp.stack([state.rng] + later) if later
+                    else state.rng[None])
+        fraction = jnp.float32(1.0)
+        if upload_mask is not None:
+            m = np.asarray(upload_mask, np.float32)
+            if m.ndim == 1:
+                m = np.broadcast_to(m, (rounds, D))
+            if m.shape != (rounds, D):
+                raise ValueError(f"upload_mask shape {m.shape} != "
+                                 f"{(rounds, D)}")
+            mask_mode, mask_arg = "given", jnp.asarray(m)
+        elif upload_fraction < 1.0:
+            mask_mode = "bernoulli"
+            base = jax.random.key(self.cfg.seed + 0x6D61)
+            mask_arg = jax.vmap(lambda t: jax.random.fold_in(base, t))(
+                jnp.arange(start_round, start_round + rounds))
+            fraction = jnp.float32(upload_fraction)
+        else:
+            mask_mode = "given"
+            mask_arg = jnp.ones((rounds, D), jnp.float32)
+        fn = self._get_rounds_fused_jit(rounds, aggregation, mask_mode)
+        counters.count_dispatch()
+        state, recs, final = fn(state, self.images, self.labels,
+                                self.seed_images, self.seed_labels,
+                                self.test_images, self.test_labels,
+                                keys_all, mask_arg, fraction)
+        return state, recs, final
 
     # ------------------------------------------------------------ drivers
     def run_round(self, state: EngineState, *, record_curves: bool = True):

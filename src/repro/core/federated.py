@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 from repro.core import acquisition as acq
 from repro.core import counters
-from repro.core.aggregation import fedavg, opt_model, weighted_average
+from repro.core.aggregation import (fedavg, fedavg_n, opt_model,
+                                    weighted_average)
 from repro.core.mc_dropout import mc_logprobs
 from repro.core.pool import ActivePool
 from repro.data.digits import SyntheticDigits
@@ -41,7 +42,7 @@ class FederatedALConfig:
     pool_window: int = 200           # paper: 200-image scored window
     mc_samples: int = 16             # T in Eq. 13
     acquisition_fn: str = "entropy"  # entropy | bald | vr | random | margin | ...
-    aggregation: str = "average"     # average | optimal | weighted
+    aggregation: str = "average"     # average | optimal | weighted | fedavg_n
     train_steps_per_acq: int = 30
     initial_train_steps: int = 60
     lr: float = 1e-3
@@ -239,7 +240,12 @@ class FogNode:
                 steps=self.cfg.initial_train_steps, rng=k_fit)
         return params
 
-    def aggregate(self, device_models: List, *, val_set: SyntheticDigits):
+    def aggregate(self, device_models: List, *, val_set: SyntheticDigits,
+                  counts: Optional[List[int]] = None):
+        """Eq. 1 over a list of uploaded models (the legacy O(D) host path;
+        the fused engine compiles the same math into the round program —
+        see ``EdgeEngine.run_rounds_fused``).  ``counts`` are per-upload
+        labeled-sample counts, required for ``aggregation="fedavg_n"``."""
         cfg = self.cfg
         accs = [self.trainer.accuracy(m, val_set.images, val_set.labels)
                 for m in device_models]
@@ -251,17 +257,44 @@ class FogNode:
         if cfg.aggregation == "weighted":
             model = weighted_average(device_models, accs)
             return model, {"device_accs": accs, "strategy": "weighted"}
+        if cfg.aggregation == "fedavg_n":
+            if counts is None:
+                raise ValueError("aggregation='fedavg_n' needs per-device "
+                                 "labeled counts")
+            model = fedavg_n(device_models, counts)
+            return model, {"device_accs": accs, "strategy": "fedavg_n",
+                           "counts": [int(c) for c in counts]}
         raise ValueError(cfg.aggregation)
 
 
-def _select_uploads(num_devices: int, upload_fraction: float, seed: int):
+def _select_uploads(num_devices: int, upload_fraction: float, seed: int,
+                    round_idx: int = 0):
+    """Random upload subset for one round.
+
+    The subset RNG is seeded with the SEQUENCE ``[seed, round_idx]``: the
+    old scalar mix (``seed + 13 * round_idx``) collided across
+    (seed, round) pairs and — with the default ``round_seed=0`` — made
+    every successive ``run_federated_round`` call pick the *identical*
+    subset, silently starving the never-chosen devices.
+    """
     uploaded_ids = list(range(num_devices))
     if upload_fraction < 1.0:
         k = max(1, int(round(upload_fraction * num_devices)))
-        rs = np.random.default_rng(seed)
+        rs = np.random.default_rng([seed, round_idx])
         uploaded_ids = sorted(rs.choice(num_devices, size=k,
                                         replace=False).tolist())
     return uploaded_ids
+
+
+def upload_mask_schedule(num_devices: int, upload_fraction: float, seed: int,
+                         rounds: int) -> np.ndarray:
+    """``[rounds, D]`` float mask matching ``_select_uploads`` round by round
+    — the host-side twin the fused engine accepts as ``upload_mask`` (used
+    by the fused-vs-legacy equivalence tests)."""
+    mask = np.zeros((rounds, num_devices), np.float32)
+    for t in range(rounds):
+        mask[t, _select_uploads(num_devices, upload_fraction, seed, t)] = 1.0
+    return mask
 
 
 def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigits],
@@ -283,7 +316,9 @@ def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigit
     ``upload_fraction < 1`` models the paper's asynchronization tolerance
     (§III-B: "If less devices upload in one round ... no fatal problem"):
     only a random subset of devices uploads; the FN aggregates what arrived.
-    Returns (aggregated_params, report dict).
+    ``round_seed`` is the round index — pass it when driving rounds from
+    outside so each round draws a FRESH upload subset (see
+    ``_select_uploads``).  Returns (aggregated_params, report dict).
     """
     if engine not in ("vmap", "legacy", "classic"):
         raise ValueError(f"unknown engine {engine!r}: use vmap | legacy | classic")
@@ -300,6 +335,7 @@ def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigit
             refined.append(dev.run_active_learning(
                 params0, eval_set=test_set if record_curves else None, rng=rng))
         histories = [dev.history for dev in devices]
+        counts = [len(dev.pool.labeled) for dev in devices]
     else:
         from repro.core.engine import EdgeEngine
         eng = EdgeEngine(trainer, cfg, device_data, seed_data,
@@ -309,12 +345,15 @@ def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigit
         state, recs = run(state, record_curves=record_curves)
         refined = eng.device_params_list(state)
         histories = eng.histories(recs)
+        counts = eng.labeled_counts(state)
 
     uploaded_ids = _select_uploads(len(device_data), upload_fraction,
-                                   cfg.seed + 13 * round_seed)
+                                   cfg.seed, round_seed)
     uploaded = [refined[i] for i in uploaded_ids]
 
-    agg_params, agg_info = fog.aggregate(uploaded, val_set=test_set)
+    agg_params, agg_info = fog.aggregate(
+        uploaded, val_set=test_set,
+        counts=[counts[i] for i in uploaded_ids])
     agg_info["uploaded_devices"] = uploaded_ids
     report = {
         "initial_acc": trainer.accuracy(params0, test_set.images, test_set.labels),
@@ -328,18 +367,26 @@ def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigit
 def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigits],
                          seed_data: SyntheticDigits, test_set: SyntheticDigits,
                          *, rounds: int = 2, trainer: Optional[Trainer] = None,
-                         upload_fraction: float = 1.0, engine: str = "vmap"):
+                         upload_fraction: float = 1.0, engine: str = "vmap",
+                         mesh=None):
     """Iterated rounds (paper: "the learning process can be iteratively
     carried out"): each round re-dispatches the aggregated model; devices
     keep their pools (labels accumulate across rounds).
+
+    ``engine="fused"`` compiles the fog node INTO the program
+    (``EdgeEngine.run_rounds_fused``): all rounds × devices × acquisitions
+    *plus* aggregation in one dispatch, optionally sharded over ``mesh``
+    (``launch.mesh.make_device_mesh``).  The other engines aggregate on the
+    host (one accuracy dispatch per uploaded device per round).
 
     NOTE: each round acquires ``cfg.acquisitions`` more images per device, so
     the Trainer capacity must cover rounds·acquisitions — handled here.  The
     engine paths build the pool with the same total capacity, and the
     compiled round program is reused for every round (compile-once).
     """
-    if engine not in ("vmap", "legacy", "classic"):
-        raise ValueError(f"unknown engine {engine!r}: use vmap | legacy | classic")
+    if engine not in ("vmap", "legacy", "classic", "fused"):
+        raise ValueError(
+            f"unknown engine {engine!r}: use vmap | legacy | classic | fused")
     total_cfg = replace(cfg, acquisitions=cfg.acquisitions * rounds)
     trainer = trainer or Trainer(total_cfg)
     fog = FogNode(trainer, cfg, seed_data)
@@ -358,9 +405,10 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                     params, eval_set=test_set, rng=rng,
                     acquisitions=cfg.acquisitions))
             uploaded_ids = _select_uploads(len(devices), upload_fraction,
-                                           cfg.seed + 13 * t)
-            params, agg_info = fog.aggregate([refined[i] for i in uploaded_ids],
-                                             val_set=test_set)
+                                           cfg.seed, t)
+            params, agg_info = fog.aggregate(
+                [refined[i] for i in uploaded_ids], val_set=test_set,
+                counts=[len(devices[i].pool.labeled) for i in uploaded_ids])
             agg_info["uploaded_devices"] = uploaded_ids
             reports.append({
                 "round": t,
@@ -371,10 +419,44 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
         return params, reports
 
     from repro.core.engine import EdgeEngine
+
+    if engine == "fused":
+        # the whole multi-round experiment — device AL, per-round Eq. 1
+        # aggregation, re-dispatch — is ONE compiled program
+        eng = EdgeEngine(trainer, cfg, device_data, seed_data, test_set,
+                         total_acquisitions=cfg.acquisitions * rounds,
+                         mesh=mesh)
+        mask = None
+        if upload_fraction < 1.0:
+            mask = upload_mask_schedule(len(device_data), upload_fraction,
+                                        cfg.seed, rounds)
+        _, recs, params = eng.run_rounds_fused(
+            eng.init_state(params), rounds, upload_mask=mask,
+            aggregation=cfg.aggregation)
+        weights = np.asarray(recs["weights"])
+        mask_out = np.asarray(recs["upload_mask"])
+        accs = np.asarray(recs["device_accs"])
+        agg_accs = np.asarray(recs["agg_acc"])
+        for t in range(rounds):
+            uploaded = np.nonzero(mask_out[t])[0]
+            reports.append({
+                "round": t,
+                "aggregated_acc": float(agg_accs[t]),
+                "aggregation": {
+                    "strategy": cfg.aggregation,
+                    # device_accs matches the host paths' schema: one entry
+                    # per UPLOADED device, zip-able with uploaded_devices
+                    "device_accs": accs[t][uploaded].tolist(),
+                    "weights": weights[t].tolist(),     # full [D] Eq.1 alphas
+                    "uploaded_devices": uploaded.tolist(),
+                },
+            })
+        return params, reports
+
     # reports carry aggregate metrics only (matching the classic path), so
     # skip compiling per-acquisition test evaluation into the round program
     eng = EdgeEngine(trainer, cfg, device_data, seed_data,
-                     total_acquisitions=cfg.acquisitions * rounds)
+                     total_acquisitions=cfg.acquisitions * rounds, mesh=mesh)
     state = eng.init_state(params)
     run = eng.run_round if engine == "vmap" else eng.run_round_legacy
     for t in range(rounds):
@@ -382,10 +464,12 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
             state = eng.set_params(state, params, round_idx=t)
         state, _ = run(state, record_curves=False)
         refined = eng.device_params_list(state)
+        counts = eng.labeled_counts(state)
         uploaded_ids = _select_uploads(len(device_data), upload_fraction,
-                                       cfg.seed + 13 * t)
-        params, agg_info = fog.aggregate([refined[i] for i in uploaded_ids],
-                                         val_set=test_set)
+                                       cfg.seed, t)
+        params, agg_info = fog.aggregate(
+            [refined[i] for i in uploaded_ids], val_set=test_set,
+            counts=[counts[i] for i in uploaded_ids])
         agg_info["uploaded_devices"] = uploaded_ids
         reports.append({
             "round": t,
@@ -396,11 +480,49 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
     return params, reports
 
 
-def run_experiment(cfg: FederatedALConfig, *, n_train: int = 4000, n_test: int = 1000,
-                   repeats: int = 1):
-    """End-to-end experiment harness (used by benchmarks + examples)."""
+# Paper §IV's "massively distributed" regime: many devices, few labels each.
+MASSIVE_DEVICE_COUNTS = (64, 256, 1024)
+MASSIVE_SAMPLES_PER_DEVICE = 40
+
+
+def massive_config(num_devices: int = 256, *, seed: int = 0,
+                   **overrides) -> FederatedALConfig:
+    """Preset for the massively-distributed regime (D ∈ {64, 256, 1024},
+    ~40 samples/device): small windows, few acquisitions, and size-aware
+    Eq. 1 weighting (``fedavg_n`` — with this many unbalanced tiny shards,
+    uniform averaging measurably over-weights the small ones)."""
+    base = dict(num_devices=num_devices, initial_train=20, acquisitions=2,
+                k_per_acquisition=5, pool_window=32, mc_samples=4,
+                train_steps_per_acq=10, initial_train_steps=20,
+                aggregation="fedavg_n", seed=seed)
+    base.update(overrides)
+    return FederatedALConfig(**base)
+
+
+def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
+                   n_train: int = 4000, n_test: int = 1000, repeats: int = 1,
+                   scenario: Optional[str] = None, num_devices: int = 256,
+                   rounds: int = 1, engine: Optional[str] = None, mesh=None):
+    """End-to-end experiment harness (used by benchmarks + examples).
+
+    ``scenario="massive"`` builds a ``massive_config(num_devices)`` (any
+    explicit ``cfg`` fields win), sizes the pool at ~40 samples/device, and
+    defaults to the fused engine so aggregation stays in-compile; an
+    explicit ``engine=`` always wins (e.g. to benchmark the host-aggregation
+    path at massive scale).
+    """
     from repro.data.digits import make_digit_dataset
     from repro.data.federated_split import federated_split
+
+    if scenario == "massive":
+        cfg = massive_config(num_devices) if cfg is None else cfg
+        n_train = MASSIVE_SAMPLES_PER_DEVICE * cfg.num_devices
+        engine = "fused" if engine is None else engine
+    elif scenario not in (None, "paper"):
+        raise ValueError(f"unknown scenario {scenario!r}: use paper | massive")
+    if cfg is None:
+        raise ValueError("pass cfg or scenario='massive'")
+    engine = "vmap" if engine is None else engine
 
     reports = []
     for rep in range(repeats):
@@ -410,7 +532,14 @@ def run_experiment(cfg: FederatedALConfig, *, n_train: int = 4000, n_test: int =
         seed_set = make_digit_dataset(cfg.initial_train, seed=seed + 11)
         shards = federated_split(full, cfg.num_devices, seed=seed)
         cfg_rep = replace(cfg, seed=seed)
-        trainer = Trainer(cfg_rep)
-        _, rep_report = run_federated_round(cfg_rep, shards, seed_set, test, trainer=trainer)
+        if engine == "fused" or rounds > 1 or mesh is not None:
+            _, rep_report = run_federated_rounds(
+                cfg_rep, shards, seed_set, test, rounds=rounds,
+                engine=engine, mesh=mesh)
+        else:
+            trainer = Trainer(cfg_rep)
+            _, rep_report = run_federated_round(cfg_rep, shards, seed_set,
+                                                test, trainer=trainer,
+                                                engine=engine)
         reports.append(rep_report)
     return reports

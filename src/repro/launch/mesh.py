@@ -22,6 +22,24 @@ def make_debug_mesh(devices: int | None = None):
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+# Mesh axis name the edge engine shards its fleet over.
+DEVICE_AXIS = "device"
+
+
+def make_device_mesh(shards: int | None = None):
+    """1-D mesh for the federated fleet's device axis (``EdgeEngine(mesh=...)``).
+
+    The engine's ``[D, ...]`` stacked state is shard_map-ed over the single
+    ``"device"`` axis: each accelerator simulates D/shards edge devices and
+    the in-compile fog aggregation psum-reduces across the axis.  On CPU,
+    force multiple host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* any jax
+    import (see tests/test_shard_engine.py and the CI sharded job).
+    """
+    n = shards or len(jax.devices())
+    return jax.make_mesh((n,), (DEVICE_AXIS,))
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes a batch dimension shards over."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

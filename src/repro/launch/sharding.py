@@ -113,6 +113,22 @@ def param_shardings(mesh, params_or_shapes):
     return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
 
 
+# ----------------------------------------------------- federated device axis
+def device_axis_spec() -> P:
+    """Partial spec sharding a leading ``[D, ...]`` device axis over the
+    fleet mesh (``launch.mesh.make_device_mesh``); trailing dims replicate."""
+    from repro.launch.mesh import DEVICE_AXIS
+    return P(DEVICE_AXIS)
+
+
+def shard_engine_state(mesh, state):
+    """Place an ``EngineState`` (or any ``[D, ...]``-stacked pytree) so every
+    leaf's leading device axis is split across ``mesh``.  Keeps shard_map from
+    re-laying-out the fleet on every dispatch; D must divide by mesh size."""
+    sharding = NamedSharding(mesh, device_axis_spec())
+    return jax.tree_util.tree_map(lambda a: jax.device_put(a, sharding), state)
+
+
 # --------------------------------------------------------------- activations
 def batch_spec(mesh, ndim: int, *, batch_dim: int = 0) -> P:
     """Shard dim ``batch_dim`` over (pod, data)."""

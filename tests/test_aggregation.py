@@ -1,16 +1,28 @@
-"""Fog-node aggregation invariants (paper Eq. 1) — unit + property tests."""
+"""Fog-node aggregation invariants (paper Eq. 1) — unit + property tests.
+
+Only the hypothesis property test is skipped when hypothesis is missing;
+the unit tests (including the stacked-variant and NaN-guard regressions)
+always run.
+"""
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
 
-from repro.core.aggregation import (ensemble_logits, fedavg, opt_model,
-                                    stack_models, weighted_average)
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:           # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+from repro.core.aggregation import (ensemble_logits, fedavg, fedavg_n,
+                                    fedavg_stacked, normalize_weights,
+                                    opt_model, opt_model_stacked, stack_models,
+                                    stacked_accuracy, unstack_models,
+                                    weighted_average, weighted_average_stacked,
+                                    weighted_sum_stacked)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -35,15 +47,16 @@ def test_fedavg_equals_mean():
     np.testing.assert_allclose(np.asarray(out["layer"]["w"]), expected, rtol=1e-5)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=5))
-def test_property_weighted_average_is_convex(ws):
-    ms = _models(len(ws), seed=7)
-    out = weighted_average(ms, ws)
-    stack = np.stack([np.asarray(m["layer"]["w"]) for m in ms])
-    lo, hi = stack.min(axis=0), stack.max(axis=0)
-    w = np.asarray(out["layer"]["w"])
-    assert (w >= lo - 1e-5).all() and (w <= hi + 1e-5).all()
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=5))
+    def test_property_weighted_average_is_convex(ws):
+        ms = _models(len(ws), seed=7)
+        out = weighted_average(ms, ws)
+        stack = np.stack([np.asarray(m["layer"]["w"]) for m in ms])
+        lo, hi = stack.min(axis=0), stack.max(axis=0)
+        w = np.asarray(out["layer"]["w"])
+        assert (w >= lo - 1e-5).all() and (w <= hi + 1e-5).all()
 
 
 def test_weighted_average_normalizes():
@@ -73,6 +86,109 @@ def test_stack_models_shape():
     ms = _models(4)
     stacked = stack_models(ms)
     assert stacked["layer"]["w"].shape == (4, 3, 4)
+
+
+def test_weighted_average_zero_weights_no_nan():
+    """Regression: all-zero weights (every device val-acc 0 in an early
+    untrained round) used to propagate NaN into every parameter; the guard
+    must fall back to a uniform average instead."""
+    ms = _models(3, seed=5)
+    out = weighted_average(ms, [0.0, 0.0, 0.0])
+    for leaf in jax.tree_util.tree_leaves(out):
+        assert np.isfinite(np.asarray(leaf)).all()
+    expected = np.mean([np.asarray(m["layer"]["w"]) for m in ms], axis=0)
+    np.testing.assert_allclose(np.asarray(out["layer"]["w"]), expected,
+                               rtol=1e-5)
+
+
+def test_normalize_weights_mask_and_fallbacks():
+    w = normalize_weights(jnp.asarray([1.0, 3.0, 0.0, 4.0]),
+                          mask=jnp.asarray([1.0, 1.0, 1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(w), [0.25, 0.75, 0.0, 0.0],
+                               atol=1e-6)
+    # zero weight-sum among participants -> uniform over participants
+    w = normalize_weights(jnp.zeros(4), mask=jnp.asarray([0.0, 1.0, 1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(w), [0.0, 0.5, 0.5, 0.0], atol=1e-6)
+    # nobody participated -> uniform over everyone (never NaN)
+    w = normalize_weights(jnp.zeros(4), mask=jnp.zeros(4))
+    np.testing.assert_allclose(np.asarray(w), [0.25] * 4, atol=1e-6)
+
+
+def test_fedavg_n_weights_by_counts():
+    ms = _models(2, seed=11)
+    out = fedavg_n(ms, [30, 10])
+    expected = 0.75 * np.asarray(ms[0]["layer"]["w"]) \
+        + 0.25 * np.asarray(ms[1]["layer"]["w"])
+    np.testing.assert_allclose(np.asarray(out["layer"]["w"]), expected,
+                               rtol=1e-5)
+
+
+def test_stacked_variants_match_list_variants():
+    ms = _models(4, seed=13)
+    stacked = stack_models(ms)
+    ws = [0.5, 1.5, 0.0, 2.0]
+    for a, b in zip(jax.tree_util.tree_leaves(weighted_average(ms, ws)),
+                    jax.tree_util.tree_leaves(
+                        weighted_average_stacked(stacked, jnp.asarray(ws)))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(fedavg(ms)),
+                    jax.tree_util.tree_leaves(fedavg_stacked(stacked))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_stacked_mask_restricts_participants():
+    ms = _models(3, seed=17)
+    stacked = stack_models(ms)
+    out = fedavg_stacked(stacked, mask=jnp.asarray([1.0, 0.0, 1.0]))
+    expected = fedavg([ms[0], ms[2]])
+    for a, b in zip(jax.tree_util.tree_leaves(expected),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_opt_model_stacked_matches_list_and_respects_mask():
+    ms = _models(3, seed=19)
+    stacked = stack_models(ms)
+    best, idx = opt_model_stacked(stacked, jnp.asarray([0.1, 0.9, 0.3]))
+    assert int(idx) == 1
+    for a, b in zip(jax.tree_util.tree_leaves(best),
+                    jax.tree_util.tree_leaves(ms[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the best device did not upload -> best participant wins
+    _, idx = opt_model_stacked(stacked, jnp.asarray([0.1, 0.9, 0.3]),
+                               mask=jnp.asarray([1.0, 0.0, 1.0]))
+    assert int(idx) == 2
+
+
+def test_weighted_sum_stacked_is_jit_and_vmap_safe():
+    ms = _models(3, seed=23)
+    stacked = stack_models(ms)
+    w = normalize_weights(jnp.asarray([1.0, 2.0, 3.0]))
+    out = jax.jit(lambda s, w: weighted_sum_stacked(s, w))(stacked, w)
+    ref = weighted_average(ms, [1.0, 2.0, 3.0])
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_unstack_roundtrip():
+    ms = _models(3, seed=29)
+    back = unstack_models(stack_models(ms))
+    for m, b in zip(ms, back):
+        for a, c in zip(jax.tree_util.tree_leaves(m),
+                        jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_stacked_accuracy_matches_per_model_eval():
+    ms = _models(3, shape=(4, 5), seed=31)
+    x = jax.random.normal(jax.random.key(2), (16, 4))
+    y = jax.random.randint(jax.random.key(3), (16,), 0, 5)
+    apply_fn = lambda p, xx: xx @ p["layer"]["w"] + p["layer"]["b"]
+    accs = stacked_accuracy(apply_fn, stack_models(ms), x, y)
+    for i, m in enumerate(ms):
+        ref = np.mean(np.argmax(np.asarray(apply_fn(m, x)), -1) == np.asarray(y))
+        np.testing.assert_allclose(np.asarray(accs[i]), ref, atol=1e-6)
 
 
 def test_ensemble_logits_is_log_mean_prob():

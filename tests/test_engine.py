@@ -69,6 +69,7 @@ def setup():
     return cfg, shards, seed_set, test
 
 
+@pytest.mark.slow
 def test_vmapped_engine_matches_legacy_loop(setup):
     """The tentpole's correctness contract: one vmapped dispatch computes
     exactly what the per-device Python loop computes — same selected pool
@@ -86,6 +87,7 @@ def test_vmapped_engine_matches_legacy_loop(setup):
     assert rep_v["aggregation"]["strategy"] == rep_l["aggregation"]["strategy"]
 
 
+@pytest.mark.slow
 def test_pallas_scored_engine_matches_jnp_oracle(setup):
     """Routing the hot loop's scoring through the fused Pallas kernel
     (interpret mode on CPU) must not change what gets acquired."""
@@ -103,6 +105,7 @@ def test_pallas_scored_engine_matches_jnp_oracle(setup):
     assert abs(rep_p["aggregated_acc"] - rep_j["aggregated_acc"]) <= 1e-5
 
 
+@pytest.mark.slow
 def test_engine_multi_round_accumulates_labels(setup):
     cfg, shards, seed_set, test = setup
     params, reports = run_federated_rounds(cfg, shards, seed_set, test,

@@ -41,6 +41,7 @@ def test_full_upload_includes_all(setup):
     assert rep["aggregation"]["uploaded_devices"] == [0, 1, 2]
 
 
+@pytest.mark.slow
 def test_multi_round_accumulates_labels(setup):
     cfg, shards, seed_set, test = setup
     params, reports = run_federated_rounds(cfg, shards, seed_set, test,
@@ -60,3 +61,23 @@ def test_multi_round_with_dropout(setup):
                                       rounds=2, upload_fraction=0.5)
     for rep in reports:
         assert len(rep["aggregation"]["uploaded_devices"]) == 2  # ceil(0.5*3)
+
+
+def test_successive_rounds_draw_fresh_upload_subsets(setup):
+    """Regression: with upload_fraction < 1, round t must not re-pick round
+    0's subset forever (the old round_seed=0 default did exactly that)."""
+    cfg, shards, seed_set, test = setup
+    _, rep0 = run_federated_round(cfg, shards, seed_set, test,
+                                  record_curves=False, upload_fraction=0.67,
+                                  round_seed=0)
+    _, rep1 = run_federated_round(cfg, shards, seed_set, test,
+                                  record_curves=False, upload_fraction=0.67,
+                                  round_seed=1)
+    subsets = {tuple(rep0["aggregation"]["uploaded_devices"]),
+               tuple(rep1["aggregation"]["uploaded_devices"])}
+    # 3-choose-2: a fresh draw per round; over the rounds driver every
+    # device must eventually upload
+    from repro.core.federated import _select_uploads
+    seen = {d for t in range(12) for d in _select_uploads(3, 0.67, cfg.seed, t)}
+    assert seen == {0, 1, 2}
+    assert all(len(s) == 2 for s in subsets)

@@ -1,0 +1,226 @@
+"""Fused fog-aggregation equivalence (the tentpole's correctness contract):
+``EdgeEngine.run_rounds_fused`` — whole rounds, aggregation in-compile —
+must reproduce the host-side ``FogNode.aggregate`` list-of-pytrees path to
+~1e-5 for every strategy, including partial participation, at ONE dispatch
+per fused run."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counters
+from repro.core.engine import EdgeEngine
+from repro.core.federated import (FederatedALConfig, FogNode, Trainer,
+                                  massive_config, run_federated_rounds,
+                                  upload_mask_schedule, _select_uploads)
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROUNDS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = FederatedALConfig(num_devices=3, acquisitions=2, mc_samples=4,
+                            k_per_acquisition=4, pool_window=24,
+                            train_steps_per_acq=4, initial_train=12,
+                            initial_train_steps=8, seed=9)
+    full = make_digit_dataset(180, seed=1)
+    test = make_digit_dataset(60, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def _python_path(cfg, shards, seed_set, test, params0, *, mask=None):
+    """The legacy host-side fog node: engine rounds + unstack + D accuracy
+    dispatches + list-pytree aggregation, mirroring run_federated_rounds."""
+    total = replace(cfg, acquisitions=cfg.acquisitions * ROUNDS)
+    trainer = Trainer(total)
+    fog = FogNode(trainer, cfg, seed_set)
+    eng = EdgeEngine(trainer, cfg, shards, seed_set,
+                     total_acquisitions=cfg.acquisitions * ROUNDS)
+    state = eng.init_state(params0)
+    params = params0
+    for t in range(ROUNDS):
+        if t > 0:
+            state = eng.set_params(state, params, round_idx=t)
+        state, _ = eng.run_round(state, record_curves=False)
+        refined = eng.device_params_list(state)
+        counts = eng.labeled_counts(state)
+        ids = (list(range(cfg.num_devices)) if mask is None
+               else np.nonzero(mask[t])[0].tolist())
+        params, info = fog.aggregate([refined[i] for i in ids], val_set=test,
+                                     counts=[counts[i] for i in ids])
+    return params
+
+
+def _fused_path(cfg, shards, seed_set, test, params0, *, mask=None):
+    total_acq = cfg.acquisitions * ROUNDS
+    trainer = Trainer(replace(cfg, acquisitions=total_acq))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total_acq)
+    _, _, final = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                       upload_mask=mask,
+                                       aggregation=cfg.aggregation)
+    return final
+
+
+def _assert_params_close(a, b, atol=5e-5):
+    # ~1e-5 contract; the slack above 1e-5 is float32 summation-order noise
+    # between the host list-fold and the stacked in-compile reduction
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("aggregation", ["average", "weighted", "optimal",
+                                         "fedavg_n"])
+def test_fused_matches_host_aggregation(setup, aggregation):
+    cfg, shards, seed_set, test = setup
+    cfg = replace(cfg, aggregation=aggregation)
+    trainer = Trainer(cfg)
+    params0 = trainer.init_params(jax.random.key(0))
+    _assert_params_close(
+        _python_path(cfg, shards, seed_set, test, params0),
+        _fused_path(cfg, shards, seed_set, test, params0))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("aggregation", ["average", "weighted"])
+def test_fused_matches_host_aggregation_partial_participation(setup,
+                                                              aggregation):
+    cfg, shards, seed_set, test = setup
+    cfg = replace(cfg, aggregation=aggregation)
+    mask = upload_mask_schedule(cfg.num_devices, 0.67, cfg.seed, ROUNDS)
+    assert mask.sum(axis=1).tolist() == [2.0, 2.0]
+    trainer = Trainer(cfg)
+    params0 = trainer.init_params(jax.random.key(1))
+    _assert_params_close(
+        _python_path(cfg, shards, seed_set, test, params0, mask=mask),
+        _fused_path(cfg, shards, seed_set, test, params0, mask=mask))
+
+
+def test_fused_rounds_single_dispatch_including_aggregation(setup):
+    cfg, shards, seed_set, test = setup
+    total_acq = cfg.acquisitions * ROUNDS
+    trainer = Trainer(replace(cfg, acquisitions=total_acq))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total_acq)
+    state = eng.init_state(trainer.init_params(jax.random.key(2)))
+    eng.run_rounds_fused(state, ROUNDS)          # warmup/compile
+    state = eng.init_state(trainer.init_params(jax.random.key(2)))
+    counters.reset_dispatches()
+    _, recs, final = eng.run_rounds_fused(state, ROUNDS)
+    assert counters.dispatch_count() == 1        # AL + aggregation, one go
+    assert np.asarray(recs["agg_acc"]).shape == (ROUNDS,)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(final))
+
+
+def test_fused_bernoulli_mask_varies_and_normalizes(setup):
+    cfg, shards, seed_set, test = setup
+    cfg = replace(cfg, num_devices=3)
+    total_acq = cfg.acquisitions * ROUNDS
+    trainer = Trainer(replace(cfg, acquisitions=total_acq))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total_acq)
+    _, recs, _ = eng.run_rounds_fused(
+        eng.init_state(trainer.init_params(jax.random.key(3))), ROUNDS,
+        upload_fraction=0.5, aggregation="average")
+    mask = np.asarray(recs["upload_mask"])
+    w = np.asarray(recs["weights"])
+    assert mask.shape == (ROUNDS, cfg.num_devices)
+    # weights live on participants only and sum to 1 (or uniform fallback)
+    for t in range(ROUNDS):
+        np.testing.assert_allclose(w[t].sum(), 1.0, atol=1e-6)
+        if mask[t].sum() > 0:
+            assert np.all(w[t][mask[t] == 0.0] == 0.0)
+
+
+def test_fused_default_weighting_is_labeled_counts(setup):
+    """The stacked path defaults to paper-Eq.-1 size-aware weights
+    (alpha_i ~ n_i); with equal counts they collapse to uniform."""
+    cfg, shards, seed_set, test = setup
+    total_acq = cfg.acquisitions
+    trainer = Trainer(replace(cfg, acquisitions=total_acq))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total_acq)
+    _, recs, _ = eng.run_rounds_fused(
+        eng.init_state(trainer.init_params(jax.random.key(4))), 1)
+    w = np.asarray(recs["weights"])[0]
+    n = np.asarray(recs["n_labeled"])[0]
+    np.testing.assert_allclose(w, n / n.sum(), atol=1e-6)
+
+
+def test_fused_chained_calls_draw_fresh_randomness(setup):
+    """Chained run_rounds_fused calls with start_round offsets must not
+    replay the first call's Bernoulli participation masks (and round 0 of
+    the second call runs on the state's evolved keys, not a stale replay)."""
+    cfg, shards, seed_set, test = setup
+    total_acq = cfg.acquisitions * 4
+    trainer = Trainer(replace(cfg, acquisitions=total_acq))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total_acq)
+    state = eng.init_state(trainer.init_params(jax.random.key(6)))
+    state, r1, _ = eng.run_rounds_fused(state, 2, upload_fraction=0.5)
+    _, r2, _ = eng.run_rounds_fused(state, 2, upload_fraction=0.5,
+                                    start_round=2)
+    m1, m2 = np.asarray(r1["upload_mask"]), np.asarray(r2["upload_mask"])
+    assert not np.array_equal(m1, m2)
+
+
+def test_fused_weighted_requires_val_set(setup):
+    cfg, shards, seed_set, test = setup
+    trainer = Trainer(cfg)
+    eng = EdgeEngine(trainer, cfg, shards, seed_set)      # no test_set
+    state = eng.init_state(trainer.init_params(jax.random.key(5)))
+    with pytest.raises(ValueError, match="validation"):
+        eng.run_rounds_fused(state, 1, aggregation="weighted")
+
+
+def test_fused_engine_in_run_federated_rounds(setup):
+    cfg, shards, seed_set, test = setup
+    params, reports = run_federated_rounds(cfg, shards, seed_set, test,
+                                           rounds=ROUNDS, engine="fused")
+    assert len(reports) == ROUNDS
+    for rep in reports:
+        assert 0.0 <= rep["aggregated_acc"] <= 1.0
+        assert len(rep["aggregation"]["weights"]) == cfg.num_devices
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(params))
+
+
+# ------------------------------------------------- upload-seed regression
+def test_select_uploads_varies_across_rounds():
+    """Regression: the old scalar seed mix (seed + 13*t) with the default
+    round_seed=0 made every call draw the IDENTICAL subset; rounds must
+    draw fresh subsets (and stay reproducible per round)."""
+    subsets = [_select_uploads(16, 0.5, seed=0, round_idx=t)
+               for t in range(6)]
+    assert len({tuple(s) for s in subsets}) > 1
+    assert subsets[2] == _select_uploads(16, 0.5, seed=0, round_idx=2)
+    # every device is eventually picked over enough rounds
+    seen = {d for s in (_select_uploads(16, 0.5, 0, t) for t in range(40))
+            for d in s}
+    assert seen == set(range(16))
+
+
+def test_upload_mask_schedule_matches_select_uploads():
+    mask = upload_mask_schedule(8, 0.5, seed=3, rounds=4)
+    for t in range(4):
+        ids = np.nonzero(mask[t])[0].tolist()
+        assert ids == _select_uploads(8, 0.5, 3, t)
+
+
+def test_massive_config_preset():
+    cfg = massive_config(64)
+    assert cfg.num_devices == 64
+    assert cfg.aggregation == "fedavg_n"
+    cfg = massive_config(256, acquisitions=3)
+    assert (cfg.num_devices, cfg.acquisitions) == (256, 3)

@@ -1,7 +1,13 @@
-"""End-to-end behaviour tests for the paper's system (fog/edge federated AL)."""
+"""End-to-end behaviour tests for the paper's system (fog/edge federated AL).
+
+The whole module is ``slow`` (multi-minute engine compiles + full rounds on
+CPU): the default CI job skips it, the dedicated slow job runs it.
+"""
 import jax
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.core.federated import FederatedALConfig, Trainer, run_federated_round
 from repro.data.digits import make_digit_dataset
