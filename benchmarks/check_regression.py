@@ -1,0 +1,152 @@
+"""CI wall-clock regression gate against a committed baseline.
+
+Compares the wall-clock metrics named in ``benchmarks/baseline.json``
+against the fresh payloads ``benchmarks.run --quick`` left under
+``experiments/results/``; any metric above ``baseline × threshold``
+(default 1.3×, per the CI contract) fails the gate with exit code 1.
+Missing current results also fail — a bench that silently stopped running
+is itself a regression.
+
+The verdict is written to ``experiments/results/BENCH_regression.json``
+(uploaded as a CI artifact next to the bench payloads).
+
+Baseline format::
+
+    {
+      "threshold": 1.3,
+      "host": "free-form provenance note",
+      "metrics": {
+        "<metric name>": {
+          "file": "<payload under experiments/results/>",
+          "path": ["json", "path", "segments"],
+          "value": <baseline milliseconds>
+        }
+      }
+    }
+
+Wall-clock gates are host-sensitive: re-seed the baseline on the reference
+runner with ``--update`` after intentional perf changes (or on first
+deploy), and widen ``threshold`` via ``BENCH_BASELINE_TOLERANCE`` if the CI
+fleet is noisy.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run --quick
+    python -m benchmarks.check_regression [--update] [--baseline PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+RESULTS_DIR = "experiments/results"
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+DEFAULT_THRESHOLD = 1.3
+
+
+def _extract(payload, path):
+    node = payload
+    for seg in path:
+        if not isinstance(node, dict) or seg not in node:
+            return None
+        node = node[seg]
+    return float(node) if isinstance(node, (int, float)) else None
+
+
+def _current_value(metric, results_dir):
+    fpath = os.path.join(results_dir, metric["file"])
+    if not os.path.exists(fpath):
+        return None
+    with open(fpath) as f:
+        return _extract(json.load(f), metric["path"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--results", default=RESULTS_DIR)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="re-seed baseline values from the current results",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    threshold = float(
+        os.environ.get(
+            "BENCH_BASELINE_TOLERANCE",
+            baseline.get("threshold", DEFAULT_THRESHOLD),
+        )
+    )
+
+    if args.update:
+        missing = []
+        for name, metric in baseline["metrics"].items():
+            cur = _current_value(metric, args.results)
+            if cur is None:
+                missing.append(name)
+            else:
+                metric["value"] = round(cur, 3)
+        if missing:
+            print(
+                f"cannot update, missing current results for: {missing}",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"baseline re-seeded: {args.baseline}")
+        return
+
+    verdicts = []
+    failed = []
+    for name, metric in baseline["metrics"].items():
+        cur = _current_value(metric, args.results)
+        ref = float(metric["value"])
+        entry = {
+            "metric": name,
+            "baseline_ms": ref,
+            "current_ms": cur,
+            "limit_ms": round(ref * threshold, 3),
+        }
+        if cur is None:
+            entry["status"] = "missing"
+            failed.append(name)
+        elif cur > ref * threshold:
+            entry.update(status="regression", ratio=round(cur / ref, 3))
+            failed.append(name)
+        else:
+            entry.update(status="ok", ratio=round(cur / ref, 3))
+        verdicts.append(entry)
+        print(
+            f"{entry['status']:>10}  {name}: "
+            f"{'n/a' if cur is None else f'{cur:.1f}ms'} "
+            f"(baseline {ref:.1f}ms, limit {entry['limit_ms']:.1f}ms)"
+        )
+
+    os.makedirs(args.results, exist_ok=True)
+    with open(os.path.join(args.results, "BENCH_regression.json"), "w") as f:
+        json.dump(
+            {"threshold": threshold, "failed": failed, "verdicts": verdicts},
+            f,
+            indent=2,
+        )
+
+    if failed:
+        print(
+            f"REGRESSION GATE FAILED (> {threshold:.2f}x): {failed}",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print(
+        f"regression gate passed ({len(verdicts)} metrics, "
+        f"threshold {threshold:.2f}x)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,8 @@ the Python-loop paths, exact for the engine.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, List, Tuple
 
@@ -33,7 +35,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import acquisition as acq
+from repro.core import comms as comms_mod
 from repro.core import counters
+from repro.core.comms import CommsConfig
 from repro.core.engine import EdgeEngine
 from repro.core.federated import (FederatedALConfig, FogNode, Trainer,
                                   massive_config, MASSIVE_SAMPLES_PER_DEVICE)
@@ -244,4 +248,112 @@ def bench_massive_fleet(quick: bool = False) -> Tuple[List[Row], Dict]:
                      f"dispatches={host_disp},tail={tail_frac:.0%}"))
         rows.append((f"massive_fleet/fused_round_D{D}", fused_ms * 1e3,
                      f"dispatches={fused_disp}"))
+    return rows, payload
+
+
+# Upload codecs swept by bench_comms_sweep: the uncompressed reference plus
+# the two in-compile codecs at their default operating points.
+COMMS_SWEEP_MODES = (
+    ("none", None),
+    ("int8", CommsConfig(compression="int8")),
+    ("topk", CommsConfig(compression="topk", topk_fraction=0.15)),
+)
+
+
+def bench_comms_sweep(quick: bool = False) -> Tuple[List[Row], Dict]:
+    """Accuracy-vs-uplink sweep over the upload codecs (``core.comms``):
+    none / int8 / top-k fused multi-round runs at D ∈ {64, 256} (quick:
+    D=16, CI-sized), same fleet/seed/participation per mode, so the only
+    difference between curves is the uplink codec.
+
+    Per (D, mode) the payload records the final aggregated accuracy, the
+    byte-exact uplink total, the uplink reduction and accuracy delta vs the
+    uncompressed reference, steady-state wall clock, and the full
+    accuracy-vs-cumulative-MB trajectory — the measurements behind the
+    paper's "reduces the communication cost" claim.  Also written as the
+    machine-readable ``experiments/results/BENCH_comms.json`` (the CI bench
+    artifact).
+
+        PYTHONPATH=src python -m benchmarks.run --only comms [--quick]
+    """
+    rows: List[Row] = []
+    sizes = [16] if quick else [64, 256]
+    # error feedback needs a few rounds to re-inject what the codec dropped;
+    # 5 is where the top-k curve re-joins the uncompressed one (<2pp)
+    rounds = 5
+    payload: Dict = {"device_counts": {}, "rounds": rounds,
+                     "modes": [name for name, _ in COMMS_SWEEP_MODES]}
+
+    for D in sizes:
+        cfg = massive_config(D)
+        full = make_digit_dataset(MASSIVE_SAMPLES_PER_DEVICE * D, seed=0)
+        test = make_digit_dataset(512, seed=1)
+        seed_set = make_digit_dataset(cfg.initial_train, seed=2)
+        shards = federated_split(full, D, seed=3)
+
+        trainer = Trainer(cfg)
+        params0 = trainer.init_params(jax.random.key(0))
+        eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                         total_acquisitions=cfg.acquisitions * rounds)
+        image_shape = shards[0].images.shape[1:]
+
+        results: Dict[str, Dict] = {}
+        for name, comms in COMMS_SWEEP_MODES:
+            def run():
+                state = eng.init_state(params0)
+                counters.reset_dispatches()
+                _, recs, final = eng.run_rounds_fused(state, rounds,
+                                                      comms=comms)
+                jax.block_until_ready(final)
+                return recs
+
+            run()                                  # warmup: compile
+            t0 = time.perf_counter()
+            recs = run()                           # steady state
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            dispatches = counters.dispatch_count()
+
+            report = comms_mod.comms_report(
+                comms, params0, recs["upload_mask"],
+                agg_accs=recs["agg_acc"], n_labeled=recs["n_labeled"],
+                image_shape=image_shape)
+            results[name] = {
+                "final_acc": float(np.asarray(recs["agg_acc"])[-1]),
+                "wall_ms": wall_ms,
+                "dispatches": dispatches,
+                "compression_ratio": report["compression_ratio"],
+                "uplink_bytes_total": report["uplink_bytes_total"],
+                "uplink_mb_total": report["uplink_mb_total"],
+                "accuracy_vs_bytes": report["accuracy_vs_bytes"],
+            }
+
+        ref = results["none"]
+        for name, r in results.items():
+            r["uplink_reduction_vs_none"] = (ref["uplink_bytes_total"]
+                                             / r["uplink_bytes_total"])
+            r["acc_delta_pp_vs_none"] = (r["final_acc"]
+                                         - ref["final_acc"]) * 100.0
+            rows.append((
+                f"comms/{name}_D{D}", r["wall_ms"] * 1e3,
+                f"acc={r['final_acc']:.3f},"
+                f"uplink_mb={r['uplink_mb_total']:.2f},"
+                f"reduction={r['uplink_reduction_vs_none']:.1f}x"))
+        payload["device_counts"][D] = {"modes": results}
+
+    # acceptance summary: a lossy codec giving ≥4× uplink reduction within
+    # 2pp of the uncompressed accuracy, at the smallest swept fleet
+    d0 = payload["device_counts"][sizes[0]]["modes"]
+    ok = {name: (r["uplink_reduction_vs_none"] >= 4.0
+                 and r["acc_delta_pp_vs_none"] >= -2.0)
+          for name, r in d0.items() if name != "none"}
+    payload["acceptance"] = {
+        "criterion": ">=4x uplink reduction at <=2pp accuracy loss",
+        "device_count": sizes[0],
+        "modes_meeting": [n for n, v in ok.items() if v],
+        "met": any(ok.values()),
+    }
+
+    os.makedirs("experiments/results", exist_ok=True)
+    with open("experiments/results/BENCH_comms.json", "w") as f:
+        json.dump(payload, f, indent=2, default=str)
     return rows, payload

@@ -17,6 +17,8 @@ from repro.core.aggregation import (fedavg, fedavg_n, fedavg_stacked,
                                     opt_model_stacked, stack_models,
                                     stacked_accuracy, unstack_models,
                                     weighted_average, weighted_average_stacked)
+from repro.core.comms import (CommsConfig, comms_report, compression_ratio,
+                              param_bytes, upload_bytes)
 from repro.core.pool import ActivePool
 from repro.core.vpool import VPool, vpool_init
 from repro.core.federated import (EdgeDevice, FederatedALConfig, FogNode,

@@ -22,6 +22,12 @@ Weight hygiene (paper Eq. 1 writes W ← Σ_i α_i W_i with Σα = 1):
 and guards the Σw = 0 corner (all device val-accs zero in an early round
 used to propagate NaN into every parameter) by falling back to a uniform
 average over participants.
+
+The Σα = 1 guarantee is LOAD-BEARING beyond hygiene: it makes Eq. 1 exact
+in DELTA form, W ← W_prev + Σ_i α_i (W_i − W_prev), which is how the fused
+engine aggregates compressed uploads (``core.comms``: each device ships a
+quantized/sparsified Δ_i, never full weights).  Any change that lets
+normalized weights sum to ≠ 1 silently corrupts every compressed round.
 """
 from __future__ import annotations
 

@@ -57,6 +57,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import acquisition as acq
 from repro.core import aggregation as agg_mod
+from repro.core import comms as comms_mod
 from repro.core import counters, vpool
 from repro.kernels.acquisition_scores import acquisition_scores_fused
 from repro.launch.mesh import DEVICE_AXIS
@@ -80,11 +81,17 @@ def _compiled(key, build):
 
 
 class EngineState(NamedTuple):
-    """Per-device state, stacked along a leading device axis D."""
+    """Per-device state, stacked along a leading device axis D.
+
+    ``residual`` is the comms error-feedback buffer (``[D, ...]`` pytree
+    mirroring ``params``), populated only by ``run_rounds_fused`` when a
+    lossy ``CommsConfig`` with ``error_feedback`` is active; it defaults to
+    an empty pytree so every other path ignores it at zero cost."""
     params: Any          # [D, ...] pytree
     opt_state: Any       # [D, ...] pytree
     pool: vpool.VPool    # [D, ...] fields
     rng: jax.Array       # [D] PRNG keys
+    residual: Any = ()   # [D, ...] pytree (comms error feedback) or ()
 
 
 def stack_device_data(device_data: Sequence):
@@ -226,7 +233,7 @@ class EdgeEngine:
             lambda a: jnp.broadcast_to(a, (D,) + a.shape), params0)
         return self._shard_state(
             EngineState(params, self.trainer.opt.init(params), state.pool,
-                        self.device_keys(round_idx)))
+                        self.device_keys(round_idx), state.residual))
 
     def device_params_list(self, state: EngineState) -> List:
         return agg_mod.unstack_models(state.params)
@@ -377,7 +384,7 @@ class EdgeEngine:
 
     # ----------------------------------------------------- fused fog rounds
     def _get_rounds_fused_jit(self, rounds: int, aggregation: str,
-                              mask_mode: str):
+                              mask_mode: str, comms_key=None):
         """T whole rounds — device AL + Eq. 1 aggregation + re-dispatch — as
         ONE compiled program (an outer scan over rounds).
 
@@ -393,9 +400,23 @@ class EdgeEngine:
         Weights are normalized over actual participants
         (``aggregation.normalize_weights``): a device that skipped the round
         contributes nothing, zero-weight-sum rounds fall back to uniform.
+
+        ``comms_key`` is the static ``(compression, topk_fraction,
+        error_feedback)`` triple (or None): with a lossy codec the round
+        compresses per-device DELTAS w_i − w_dispatched (plus the carried
+        error-feedback residual) inside the program and aggregates
+        BASE + Σ αᵢ·C(Δᵢ + eᵢ) — exact for C = identity because Σα = 1 —
+        so compressed rounds stay one dispatch and shard unchanged (the
+        codec is per-device-local; only the weighted delta sum is psum'd).
         """
 
         def build():
+            compress = comms_key is not None and comms_key[0] != "none"
+            use_ef = compress and comms_key[2]
+            cc = (comms_mod.CommsConfig(compression=comms_key[0],
+                                        topk_fraction=comms_key[1],
+                                        error_feedback=comms_key[2])
+                  if compress else None)
             step = self._acquisition_step(False)
             R = self.cfg.acquisitions
             round_unroll = R if self.unroll else 1
@@ -420,7 +441,7 @@ class EdgeEngine:
             def rounds_all(state, images, labels, seed_x, seed_y,
                            val_x, val_y, keys_all, mask_arg, fraction):
                 def one_round(carry, xs):
-                    params, opt_state, pool, _ = carry
+                    params, opt_state, pool, _, residual = carry
                     if mask_mode == "bernoulli":
                         keys_r, mask_key = xs
                         # same key on every shard → consistent global draw
@@ -430,6 +451,11 @@ class EdgeEngine:
                     else:
                         keys_r, mask_l = xs
                         mask_g = gather(mask_l)
+
+                    # the model every device starts this round from (all rows
+                    # identical — the previous round's / init's re-dispatch);
+                    # the comms path compresses deltas against it
+                    params_prev = params
 
                     def device_round(c, images_d, labels_d):
                         return jax.lax.scan(
@@ -458,9 +484,44 @@ class EdgeEngine:
                         masked = jnp.where(mask_g > 0, accs_g, -jnp.inf)
                         raw = jax.nn.one_hot(jnp.argmax(masked), D)
                     w_g = agg_mod.normalize_weights(raw, mask_g)
-                    agg = agg_mod.weighted_sum_stacked(params, local(w_g))
-                    if axis is not None:
-                        agg = jax.lax.psum(agg, axis)
+                    if compress:
+                        # uplink codec on the per-device update: each device
+                        # ships C(Δᵢ + eᵢ); the fog node reconstructs
+                        # BASE + Σ αᵢ·C(Δᵢ + eᵢ)  (exact when C = identity
+                        # since Σα = 1).  Everything is device-local except
+                        # the weighted delta sum, so the mesh path only adds
+                        # the same psum the uncompressed path already does.
+                        tmap = jax.tree_util.tree_map
+                        delta = tmap(jnp.subtract, params, params_prev)
+                        if use_ef:
+                            delta = tmap(jnp.add, delta, residual)
+                        qkeys = jax.vmap(
+                            lambda k: jax.random.fold_in(k, 0x636F6D))(rng)
+                        sent = jax.vmap(
+                            lambda k, d: comms_mod.compress_tree(cc, k, d))(
+                                qkeys, delta)
+                        if use_ef:
+                            # EF updates on actual communication only
+                            # (Karimireddy et al.): a device masked out of
+                            # this round transmitted nothing, so its
+                            # residual stays frozen — overwriting it would
+                            # delete error mass a REAL earlier upload still
+                            # owes the fog node.  (Its local Δ is discarded
+                            # by the re-dispatch, same as uncompressed.)
+                            def _ef(s, d, r):
+                                m = mask_l.reshape(
+                                    (-1,) + (1,) * (s.ndim - 1))
+                                return jnp.where(m > 0, d - s, r)
+                            residual = tmap(_ef, sent, delta, residual)
+                        agg = agg_mod.weighted_sum_stacked(sent, local(w_g))
+                        if axis is not None:
+                            agg = jax.lax.psum(agg, axis)
+                        agg = tmap(jnp.add,
+                                   tmap(lambda a: a[0], params_prev), agg)
+                    else:
+                        agg = agg_mod.weighted_sum_stacked(params, local(w_g))
+                        if axis is not None:
+                            agg = jax.lax.psum(agg, axis)
 
                     rec = {"weights": w_g, "upload_mask": mask_g,
                            "n_labeled": counts_g}
@@ -475,14 +536,15 @@ class EdgeEngine:
                         lambda a: jnp.broadcast_to(
                             a[None], (D_local,) + a.shape), agg)
                     opt_state = trainer.opt.init(params)
-                    return (params, opt_state, pool, rng), rec
+                    return (params, opt_state, pool, rng, residual), rec
 
-                carry = (state.params, state.opt_state, state.pool, state.rng)
+                carry = (state.params, state.opt_state, state.pool, state.rng,
+                         state.residual)
                 carry, recs = jax.lax.scan(one_round, carry,
                                            (keys_all, mask_arg))
-                params, opt_state, pool, rng = carry
+                params, opt_state, pool, rng, residual = carry
                 final = jax.tree_util.tree_map(lambda a: a[0], params)
-                return (EngineState(params, opt_state, pool, rng),
+                return (EngineState(params, opt_state, pool, rng, residual),
                         recs, final)
 
             if mesh is not None:
@@ -502,12 +564,13 @@ class EdgeEngine:
             return jax.jit(rounds_all, donate_argnums=_donate_argnums(0))
 
         key = self._cache_key("rounds_fused", False) + (
-            rounds, aggregation, mask_mode)
+            rounds, aggregation, mask_mode, comms_key)
         return _compiled(key, build)
 
     def run_rounds_fused(self, state: EngineState, rounds: int, *,
                          upload_mask=None, upload_fraction: float = 1.0,
-                         aggregation: str = "fedavg_n", start_round: int = 0):
+                         aggregation: str = "fedavg_n", start_round: int = 0,
+                         comms=None):
         """T federated rounds (device AL + fog aggregation + re-dispatch) in
         ONE dispatch.
 
@@ -532,6 +595,17 @@ class EdgeEngine:
         index — without the offset a second call would replay the first
         call's randomness (the same stale-seed bug class ``_select_uploads``
         had).
+
+        ``comms`` (``core.comms.CommsConfig``) compresses each device's
+        upload IN-COMPILE: the per-device delta w_i − w_dispatched (plus the
+        error-feedback residual carried in ``state.residual``) goes through
+        the configured codec (``int8`` stochastic quantization or ``topk``
+        magnitude sparsification) before the stacked aggregation, so
+        compressed rounds remain one dispatch and work unchanged under the
+        shard_map mesh path.  Byte accounting stays on the host — see
+        ``core.comms.comms_report`` over the returned ``recs``.  The delta
+        formulation assumes ``state.params`` rows start the call identical
+        (the init/re-dispatch protocol every driver follows).
         """
         if aggregation not in _AGGREGATIONS:
             raise ValueError(f"unknown aggregation {aggregation!r}: "
@@ -541,6 +615,20 @@ class EdgeEngine:
                 f"aggregation={aggregation!r} scores devices on a validation "
                 "set; construct EdgeEngine with test_set")
         self._check_capacity(state, rounds=rounds)
+        comms_key = None
+        if comms is not None and comms.compression != "none":
+            comms_key = (comms.compression, comms.topk_fraction,
+                         comms.error_feedback)
+            if comms.error_feedback and not jax.tree_util.tree_leaves(
+                    state.residual):
+                # fresh error-feedback buffer, mirroring params (inherits
+                # the device-axis sharding from the stacked params)
+                state = state._replace(residual=jax.tree_util.tree_map(
+                    jnp.zeros_like, state.params))
+        if comms_key is None or not comms_key[2]:
+            # codec off (or EF off): drop any stale residual so the compiled
+            # carry structure matches and old buffers can't leak in
+            state = state._replace(residual=())
         D = self.num_devices
         # round 0 consumes the incoming state's keys; later rounds follow
         # the legacy set_params schedule (device_keys at the absolute index)
@@ -565,7 +653,8 @@ class EdgeEngine:
         else:
             mask_mode = "given"
             mask_arg = jnp.ones((rounds, D), jnp.float32)
-        fn = self._get_rounds_fused_jit(rounds, aggregation, mask_mode)
+        fn = self._get_rounds_fused_jit(rounds, aggregation, mask_mode,
+                                        comms_key)
         counters.count_dispatch()
         state, recs, final = fn(state, self.images, self.labels,
                                 self.seed_images, self.seed_labels,

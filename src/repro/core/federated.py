@@ -23,9 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import acquisition as acq
+from repro.core import comms as comms_mod
 from repro.core import counters
 from repro.core.aggregation import (fedavg, fedavg_n, opt_model,
                                     weighted_average)
+from repro.core.comms import CommsConfig
 from repro.core.mc_dropout import mc_logprobs
 from repro.core.pool import ActivePool
 from repro.data.digits import SyntheticDigits
@@ -297,12 +299,23 @@ def upload_mask_schedule(num_devices: int, upload_fraction: float, seed: int,
     return mask
 
 
+def _check_comms_engine(comms: Optional[CommsConfig], engine: str) -> None:
+    """Lossy upload codecs exist only inside the fused program; accounting
+    (compression='none') works on every path."""
+    if comms is not None and comms.compression != "none" and engine != "fused":
+        raise ValueError(
+            f"comms compression={comms.compression!r} requires "
+            f"engine='fused' (got engine={engine!r}); host-side paths "
+            "support byte accounting only")
+
+
 def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigits],
                         seed_data: SyntheticDigits, test_set: SyntheticDigits,
                         *, trainer: Optional[Trainer] = None,
                         initial_params=None, record_curves: bool = True,
                         upload_fraction: float = 1.0, round_seed: int = 0,
-                        engine: str = "vmap"):
+                        engine: str = "vmap",
+                        comms: Optional[CommsConfig] = None):
     """One full paper round: FN init → dispatch → per-device AL → aggregate.
 
     ``engine`` selects the execution path:
@@ -318,10 +331,14 @@ def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigit
     only a random subset of devices uploads; the FN aggregates what arrived.
     ``round_seed`` is the round index — pass it when driving rounds from
     outside so each round draws a FRESH upload subset (see
-    ``_select_uploads``).  Returns (aggregated_params, report dict).
+    ``_select_uploads``).  Returns (aggregated_params, report dict); the
+    report carries a byte-exact ``"comms"`` entry (``core.comms``) — pass
+    ``comms=CommsConfig(...)`` to change the accounting policy (upload
+    compression itself needs the fused multi-round engine).
     """
     if engine not in ("vmap", "legacy", "classic"):
         raise ValueError(f"unknown engine {engine!r}: use vmap | legacy | classic")
+    _check_comms_engine(comms, engine)
     trainer = trainer or Trainer(cfg)
     fog = FogNode(trainer, cfg, seed_data)
     params0 = initial_params if initial_params is not None else fog.initial_model()
@@ -360,6 +377,10 @@ def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigit
         "aggregated_acc": trainer.accuracy(agg_params, test_set.images, test_set.labels),
         "aggregation": agg_info,
         "device_histories": histories,
+        "comms": comms_mod.single_round_report(
+            comms, params0, uploaded_ids, len(device_data),
+            new_labels=int(sum(counts)),
+            image_shape=device_data[0].images.shape[1:]),
     }
     return agg_params, report
 
@@ -368,7 +389,7 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                          seed_data: SyntheticDigits, test_set: SyntheticDigits,
                          *, rounds: int = 2, trainer: Optional[Trainer] = None,
                          upload_fraction: float = 1.0, engine: str = "vmap",
-                         mesh=None):
+                         mesh=None, comms: Optional[CommsConfig] = None):
     """Iterated rounds (paper: "the learning process can be iteratively
     carried out"): each round re-dispatches the aggregated model; devices
     keep their pools (labels accumulate across rounds).
@@ -383,15 +404,32 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
     the Trainer capacity must cover rounds·acquisitions — handled here.  The
     engine paths build the pool with the same total capacity, and the
     compiled round program is reused for every round (compile-once).
+
+    Every round report carries a byte-exact ``"comms"`` entry.  With
+    ``comms=CommsConfig(compression="int8"|"topk")`` the fused engine
+    additionally compresses device uploads IN-COMPILE (error-feedback
+    residuals carried in engine state) — the other engines accept
+    accounting-only configs.
     """
     if engine not in ("vmap", "legacy", "classic", "fused"):
         raise ValueError(
             f"unknown engine {engine!r}: use vmap | legacy | classic | fused")
+    _check_comms_engine(comms, engine)
+    image_shape = device_data[0].images.shape[1:]
     total_cfg = replace(cfg, acquisitions=cfg.acquisitions * rounds)
     trainer = trainer or Trainer(total_cfg)
     fog = FogNode(trainer, cfg, seed_data)
     params = fog.initial_model()
     reports = []
+
+    mask_rows: List[np.ndarray] = []    # [D] participation per round
+    count_rows: List[List[int]] = []    # [D] cumulative labeled per round
+
+    def _attach_comms(reports_list, agg_accs):
+        summary = comms_mod.comms_report(
+            comms, params, np.stack(mask_rows), agg_accs=agg_accs,
+            n_labeled=np.asarray(count_rows), image_shape=image_shape)
+        comms_mod.attach_round_comms(reports_list, summary)
 
     if engine == "classic":
         devices = [EdgeDevice(i, d, trainer, cfg, seed_data=seed_data)
@@ -406,16 +444,22 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                     acquisitions=cfg.acquisitions))
             uploaded_ids = _select_uploads(len(devices), upload_fraction,
                                            cfg.seed, t)
+            all_counts = [len(dev.pool.labeled) for dev in devices]
             params, agg_info = fog.aggregate(
                 [refined[i] for i in uploaded_ids], val_set=test_set,
-                counts=[len(devices[i].pool.labeled) for i in uploaded_ids])
+                counts=[all_counts[i] for i in uploaded_ids])
             agg_info["uploaded_devices"] = uploaded_ids
+            mask = np.zeros((len(devices),), np.float32)
+            mask[uploaded_ids] = 1.0
+            mask_rows.append(mask)
+            count_rows.append(all_counts)
             reports.append({
                 "round": t,
                 "aggregated_acc": trainer.accuracy(params, test_set.images,
                                                    test_set.labels),
                 "aggregation": agg_info,
             })
+        _attach_comms(reports, [r["aggregated_acc"] for r in reports])
         return params, reports
 
     from repro.core.engine import EdgeEngine
@@ -432,7 +476,7 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                                         cfg.seed, rounds)
         _, recs, params = eng.run_rounds_fused(
             eng.init_state(params), rounds, upload_mask=mask,
-            aggregation=cfg.aggregation)
+            aggregation=cfg.aggregation, comms=comms)
         weights = np.asarray(recs["weights"])
         mask_out = np.asarray(recs["upload_mask"])
         accs = np.asarray(recs["device_accs"])
@@ -451,6 +495,10 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                     "uploaded_devices": uploaded.tolist(),
                 },
             })
+        summary = comms_mod.comms_report(
+            comms, params, mask_out, agg_accs=agg_accs,
+            n_labeled=recs["n_labeled"], image_shape=image_shape)
+        comms_mod.attach_round_comms(reports, summary)
         return params, reports
 
     # reports carry aggregate metrics only (matching the classic path), so
@@ -471,12 +519,17 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
             [refined[i] for i in uploaded_ids], val_set=test_set,
             counts=[counts[i] for i in uploaded_ids])
         agg_info["uploaded_devices"] = uploaded_ids
+        mask = np.zeros((len(device_data),), np.float32)
+        mask[uploaded_ids] = 1.0
+        mask_rows.append(mask)
+        count_rows.append(counts)
         reports.append({
             "round": t,
             "aggregated_acc": trainer.accuracy(params, test_set.images,
                                                test_set.labels),
             "aggregation": agg_info,
         })
+    _attach_comms(reports, [r["aggregated_acc"] for r in reports])
     return params, reports
 
 
@@ -502,7 +555,8 @@ def massive_config(num_devices: int = 256, *, seed: int = 0,
 def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
                    n_train: int = 4000, n_test: int = 1000, repeats: int = 1,
                    scenario: Optional[str] = None, num_devices: int = 256,
-                   rounds: int = 1, engine: Optional[str] = None, mesh=None):
+                   rounds: int = 1, engine: Optional[str] = None, mesh=None,
+                   comms: Optional[CommsConfig] = None):
     """End-to-end experiment harness (used by benchmarks + examples).
 
     ``scenario="massive"`` builds a ``massive_config(num_devices)`` (any
@@ -510,6 +564,13 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     defaults to the fused engine so aggregation stays in-compile; an
     explicit ``engine=`` always wins (e.g. to benchmark the host-aggregation
     path at massive scale).
+
+    Every repeat emits a comms telemetry dict (bytes/round, cumulative MB,
+    compression ratio, accuracy-vs-bytes trajectory): multi-round repeats
+    return ``{"rounds": [...], "comms": telemetry}``, single-round repeats
+    carry it as the round report's ``"comms"`` entry.  Pass
+    ``comms=CommsConfig(compression="int8"|"topk")`` to compress uploads
+    in-compile (fused engine) — the bandwidth-constrained scenario family.
     """
     from repro.data.digits import make_digit_dataset
     from repro.data.federated_split import federated_split
@@ -533,13 +594,17 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
         shards = federated_split(full, cfg.num_devices, seed=seed)
         cfg_rep = replace(cfg, seed=seed)
         if engine == "fused" or rounds > 1 or mesh is not None:
-            _, rep_report = run_federated_rounds(
+            _, round_reports = run_federated_rounds(
                 cfg_rep, shards, seed_set, test, rounds=rounds,
-                engine=engine, mesh=mesh)
+                engine=engine, mesh=mesh, comms=comms)
+            rep_report = {
+                "rounds": round_reports,
+                "comms": comms_mod.experiment_telemetry(round_reports),
+            }
         else:
             trainer = Trainer(cfg_rep)
             _, rep_report = run_federated_round(cfg_rep, shards, seed_set,
                                                 test, trainer=trainer,
-                                                engine=engine)
+                                                engine=engine, comms=comms)
         reports.append(rep_report)
     return reports

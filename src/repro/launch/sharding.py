@@ -124,9 +124,17 @@ def device_axis_spec() -> P:
 def shard_engine_state(mesh, state):
     """Place an ``EngineState`` (or any ``[D, ...]``-stacked pytree) so every
     leaf's leading device axis is split across ``mesh``.  Keeps shard_map from
-    re-laying-out the fleet on every dispatch; D must divide by mesh size."""
-    sharding = NamedSharding(mesh, device_axis_spec())
-    return jax.tree_util.tree_map(lambda a: jax.device_put(a, sharding), state)
+    re-laying-out the fleet on every dispatch; D must divide by mesh size.
+
+    Covers every state field including the comms error-feedback ``residual``
+    buffer (a ``[D, ...]`` mirror of params — see ``core.comms``); rank-0
+    leaves (none today, but cheap future-proofing) replicate instead of
+    taking the device-axis spec they cannot carry."""
+    dev = NamedSharding(mesh, device_axis_spec())
+    rep = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(
+        lambda a: jax.device_put(a, dev if getattr(a, "ndim", 0) else rep),
+        state)
 
 
 # --------------------------------------------------------------- activations

@@ -1,0 +1,347 @@
+"""Communication-cost subsystem contracts (``core.comms``):
+
+* byte accounting is EXACT — analytic per-leaf arithmetic over the LeNet
+  tree must reproduce the reported counts at D ∈ {4, 8};
+* the int8 stochastic quantizer round-trips within one quantization step;
+* top-k keeps exactly its byte budget's worth of entries;
+* compressed fused rounds stay ONE dispatch, match the uncompressed path at
+  compression ratio 1.0, and (with compression disabled) match the host-side
+  fog aggregation to the PR-2 ~1e-5 tolerances;
+* error-feedback residuals live in engine state and survive chained calls.
+"""
+import math
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comms as comms_mod
+from repro.core import counters
+from repro.core.comms import (CommsConfig, comms_report, compression_ratio,
+                              index_bytes, param_bytes,
+                              quantize_int8_stochastic, dequantize_int8,
+                              topk_k, topk_mask, upload_bytes)
+from repro.core.engine import EdgeEngine
+from repro.core.federated import (FederatedALConfig, FogNode, Trainer,
+                                  run_experiment, run_federated_rounds)
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.nn.lenet import LeNet
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROUNDS = 2
+
+
+def _tiny_cfg(num_devices: int) -> FederatedALConfig:
+    return FederatedALConfig(num_devices=num_devices, acquisitions=1,
+                             mc_samples=2, k_per_acquisition=3,
+                             pool_window=12, train_steps_per_acq=3,
+                             initial_train=8, initial_train_steps=4, seed=7)
+
+
+def _fleet(cfg):
+    full = make_digit_dataset(30 * cfg.num_devices, seed=1)
+    test = make_digit_dataset(40, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return shards, seed_set, test
+
+
+def _engine(cfg, shards, seed_set, test):
+    trainer = Trainer(replace(cfg, acquisitions=cfg.acquisitions * ROUNDS))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=cfg.acquisitions * ROUNDS)
+    return eng, trainer.init_params(jax.random.key(0))
+
+
+def _leaves_close(a, b, atol):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+# ---------------------------------------------------------------- config
+def test_comms_config_validation():
+    with pytest.raises(ValueError, match="unknown compression"):
+        CommsConfig(compression="fp4")
+    with pytest.raises(ValueError, match="topk_fraction"):
+        CommsConfig(compression="topk", topk_fraction=0.0)
+    CommsConfig(compression="topk", topk_fraction=1.0)  # boundary ok
+
+
+# ---------------------------------------------------------- byte counts
+def test_param_bytes_lenet_analytic():
+    """LeNet-5 (paper Table I): 156 + 2416 + 48120 + 10164 + 850 = 61706
+    float32 parameters = 246824 bytes, counted leaf-by-leaf."""
+    params = LeNet.init(jax.random.key(0))
+    n_analytic = ((5 * 5 * 1 * 6 + 6) + (5 * 5 * 6 * 16 + 16)
+                  + (5 * 5 * 16 * 120 + 120) + (120 * 84 + 84)
+                  + (84 * 10 + 10))
+    assert n_analytic == 61706
+    assert param_bytes(params) == 4 * n_analytic
+
+
+@pytest.mark.parametrize("fraction", [0.05, 0.1, 1.0])
+def test_upload_bytes_analytic(fraction):
+    params = LeNet.init(jax.random.key(0))
+    sizes = [int(np.prod(l.shape))
+             for l in jax.tree_util.tree_leaves(params)]
+    assert upload_bytes(None, params) == 4 * sum(sizes)
+    assert (upload_bytes(CommsConfig(compression="int8"), params)
+            == sum(n + 4 for n in sizes))
+    cfg = CommsConfig(compression="topk", topk_fraction=fraction)
+    assert (upload_bytes(cfg, params)
+            == sum((index_bytes(n) + 4) * max(1, min(n, math.ceil(fraction * n)))
+                   for n in sizes))
+    # every LeNet tensor is < 2^16 elements → uint16 indices on the wire
+    assert all(index_bytes(n) == 2 for n in sizes)
+    assert compression_ratio(CommsConfig(compression="int8"), params) > 3.9
+
+
+@pytest.mark.parametrize("num_devices", [4, 8])
+def test_accounting_matches_reported_lenet(num_devices):
+    """Analytic per-round byte counts vs the counts a real fused run
+    reports, full participation, LeNet at D ∈ {4, 8}."""
+    cfg = _tiny_cfg(num_devices)
+    shards, seed_set, test = _fleet(cfg)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    comms = CommsConfig(compression="int8")
+    _, recs, _ = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                      comms=comms)
+    report = comms_report(comms, params0, recs["upload_mask"],
+                          agg_accs=recs["agg_acc"],
+                          n_labeled=recs["n_labeled"],
+                          image_shape=shards[0].images.shape[1:])
+
+    per_upload = upload_bytes(comms, params0)
+    pbytes = param_bytes(params0)
+    new_per_round = num_devices * cfg.acquisitions * cfg.k_per_acquisition
+    for t, rec in enumerate(report["rounds"]):
+        assert rec["uploads"] == num_devices
+        assert rec["model_upload_bytes"] == num_devices * per_upload
+        assert rec["metadata_bytes"] == num_devices * 12
+        assert rec["uplink_bytes"] == num_devices * (per_upload + 12)
+        assert rec["downlink_bytes"] == num_devices * pbytes
+        assert rec["new_labels"] == new_per_round
+        assert rec["cumulative_uplink_bytes"] == (t + 1) * rec["uplink_bytes"]
+    assert report["uplink_bytes_total"] == ROUNDS * num_devices * (
+        per_upload + 12)
+    assert len(report["accuracy_vs_bytes"]) == ROUNDS
+
+
+def test_upload_samples_accounting():
+    """The 'ship the data' scenario bills image + int32 label per new
+    label: 28·28·1 float32 + 4 = 3140 bytes/sample on digits."""
+    cfg = _tiny_cfg(4)
+    shards, seed_set, test = _fleet(cfg)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    comms = CommsConfig(upload_samples=True)
+    _, recs, _ = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                      comms=comms)
+    report = comms_report(comms, params0, recs["upload_mask"],
+                          n_labeled=recs["n_labeled"],
+                          image_shape=shards[0].images.shape[1:])
+    per_sample = 28 * 28 * 1 * 4 + 4
+    assert comms_mod.sample_bytes((28, 28, 1)) == per_sample
+    for rec in report["rounds"]:
+        assert rec["sample_upload_bytes"] == rec["new_labels"] * per_sample
+        assert rec["sample_upload_bytes"] > 0
+
+
+# ------------------------------------------------------------- codecs
+def test_int8_roundtrip_error_bounds():
+    """|x − dequant(quant(x))| ≤ scale elementwise (one stochastic-rounding
+    step), scale = max|x|/127, and the error is near-zero-mean."""
+    key = jax.random.key(0)
+    for i, sigma in enumerate([1e-4, 1.0, 37.5]):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        x = sigma * jax.random.normal(k1, (257, 33))
+        q, scale = quantize_int8_stochastic(k2, x)
+        np.testing.assert_allclose(float(scale),
+                                   float(jnp.max(jnp.abs(x))) / 127.0,
+                                   rtol=1e-6)
+        err = np.asarray(x - dequantize_int8(q, scale))
+        assert np.max(np.abs(err)) <= float(scale) * (1 + 1e-5)
+        assert abs(err.mean()) < float(scale) * 0.05  # unbiased rounding
+        assert q.dtype == jnp.int8
+
+
+def test_topk_mask_exact_budget():
+    x = jax.random.normal(jax.random.key(1), (31, 17))
+    k = topk_k(x.size, 0.07)
+    assert k == math.ceil(0.07 * 31 * 17)
+    mask = np.asarray(topk_mask(x, k))
+    assert int(mask.sum()) == k
+    kept = np.abs(np.asarray(x))[mask > 0]
+    dropped = np.abs(np.asarray(x))[mask == 0]
+    assert kept.min() >= dropped.max()
+    # degenerate budgets clamp to [1, n]
+    assert topk_k(10, 1e-9) == 1
+    assert topk_k(10, 1.0) == 10
+
+
+# ------------------------------------------------- fused-path contracts
+def test_compressed_rounds_single_dispatch_and_ratio1_equivalence():
+    """CommsConfig(int8|topk) keeps T fused rounds at ONE dispatch, and a
+    ratio-1.0 codec (topk keeping everything) matches the uncompressed
+    aggregation within float tolerance."""
+    cfg = _tiny_cfg(3)
+    shards, seed_set, test = _fleet(cfg)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+
+    finals = {}
+    for name, comms in [("none", None),
+                        ("int8", CommsConfig(compression="int8")),
+                        ("topk1", CommsConfig(compression="topk",
+                                              topk_fraction=1.0)),
+                        ("topk", CommsConfig(compression="topk",
+                                             topk_fraction=0.1))]:
+        eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                             comms=comms)          # warmup/compile
+        counters.reset_dispatches()
+        _, _, finals[name] = eng.run_rounds_fused(
+            eng.init_state(params0), ROUNDS, comms=comms)
+        assert counters.dispatch_count() == 1, name
+
+    _leaves_close(finals["none"], finals["topk1"], atol=5e-5)
+    for leaf in jax.tree_util.tree_leaves(finals["int8"]):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.slow
+def test_fused_matches_host_with_compression_disabled():
+    """With compression off, the comms-threaded fused path must still match
+    the host-side list-of-pytrees fog aggregation (~1e-5, the PR-2
+    contract)."""
+    cfg = _tiny_cfg(3)
+    shards, seed_set, test = _fleet(cfg)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    trainer = eng.trainer
+    fog = FogNode(trainer, cfg, seed_set)
+
+    # host path: engine rounds + unstack + host Eq. 1 (fedavg_n default)
+    host_eng, _ = _engine(cfg, shards, seed_set, test)
+    state = host_eng.init_state(params0)
+    params = params0
+    for t in range(ROUNDS):
+        if t > 0:
+            state = host_eng.set_params(state, params, round_idx=t)
+        state, _ = host_eng.run_round(state, record_curves=False)
+        params, _ = fog.aggregate(host_eng.device_params_list(state),
+                                  val_set=test,
+                                  counts=host_eng.labeled_counts(state))
+
+    _, _, fused = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS, comms=CommsConfig())
+    _leaves_close(params, fused, atol=5e-5)
+
+
+def test_error_feedback_residual_carried_in_state():
+    cfg = _tiny_cfg(3)
+    shards, seed_set, test = _fleet(cfg)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+
+    comms = CommsConfig(compression="int8", error_feedback=True)
+    state = eng.init_state(params0)
+    assert jax.tree_util.tree_leaves(state.residual) == []
+    state, _, _ = eng.run_rounds_fused(state, 1, comms=comms)
+    leaves = jax.tree_util.tree_leaves(state.residual)
+    assert len(leaves) == len(jax.tree_util.tree_leaves(state.params))
+    assert all(l.shape[0] == cfg.num_devices for l in leaves)
+    # a lossy codec leaves a nonzero residual behind
+    assert max(float(jnp.max(jnp.abs(l))) for l in leaves) > 0
+    # chained call consumes and re-emits the buffer (fresh randomness etc.)
+    state2, _, _ = eng.run_rounds_fused(state, 1, comms=comms,
+                                        start_round=1)
+    assert len(jax.tree_util.tree_leaves(state2.residual)) == len(leaves)
+
+    # EF off → no residual is materialized
+    state3, _, _ = eng.run_rounds_fused(
+        eng.init_state(params0), 1,
+        comms=CommsConfig(compression="int8", error_feedback=False))
+    assert jax.tree_util.tree_leaves(state3.residual) == []
+
+
+def test_error_feedback_frozen_for_non_participants():
+    """EF updates on actual communication only: a device masked out of a
+    round transmitted nothing, so its residual must stay bit-frozen (a
+    recompute would delete error mass an earlier real upload still owes)."""
+    cfg = _tiny_cfg(3)
+    shards, seed_set, test = _fleet(cfg)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    comms = CommsConfig(compression="topk", topk_fraction=0.1)
+
+    state1, _, _ = eng.run_rounds_fused(
+        eng.init_state(params0), 1, comms=comms)
+    mask = np.array([[0.0, 1.0, 1.0]], np.float32)  # device 0 skips round 1
+    state2, _, _ = eng.run_rounds_fused(state1, 1, comms=comms,
+                                        upload_mask=mask, start_round=1)
+    changed = False
+    for before, after in zip(jax.tree_util.tree_leaves(state1.residual),
+                             jax.tree_util.tree_leaves(state2.residual)):
+        b, a = np.asarray(before), np.asarray(after)
+        np.testing.assert_array_equal(a[0], b[0])      # skipped: frozen
+        changed = changed or not np.array_equal(a[1:], b[1:])
+    assert changed                                     # uploaded: updated
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (sharded CI job forces 8)")
+def test_compressed_rounds_match_across_mesh():
+    """The codec is device-local, so the shard_map mesh path must agree
+    with the single-host path for compressed rounds too."""
+    from repro.launch.mesh import make_device_mesh
+    D = jax.device_count()
+    cfg = _tiny_cfg(D)
+    shards, seed_set, test = _fleet(cfg)
+    comms = CommsConfig(compression="int8")
+    finals = {}
+    for mesh in [None, make_device_mesh()]:
+        trainer = Trainer(replace(cfg, acquisitions=cfg.acquisitions * ROUNDS))
+        eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                         total_acquisitions=cfg.acquisitions * ROUNDS,
+                         mesh=mesh)
+        params0 = trainer.init_params(jax.random.key(0))
+        _, _, finals[mesh is None] = eng.run_rounds_fused(
+            eng.init_state(params0), ROUNDS, comms=comms)
+    _leaves_close(finals[True], finals[False], atol=1e-4)
+
+
+# ------------------------------------------------------ driver plumbing
+def test_run_federated_rounds_emits_comms_and_guards_engines():
+    cfg = _tiny_cfg(3)
+    shards, seed_set, test = _fleet(cfg)
+    comms = CommsConfig(compression="topk", topk_fraction=0.1)
+    _, reports = run_federated_rounds(cfg, shards, seed_set, test,
+                                      rounds=ROUNDS, engine="fused",
+                                      comms=comms)
+    assert len(reports) == ROUNDS
+    expected_ratio = compression_ratio(comms, LeNet.init(jax.random.key(0)))
+    for t, rep in enumerate(reports):
+        c = rep["comms"]
+        assert c["compression"] == "topk"
+        assert c["compression_ratio"] == pytest.approx(expected_ratio)
+        assert c["uploads"] == cfg.num_devices
+        assert c["cumulative_uplink_bytes"] == (t + 1) * c["uplink_bytes"]
+
+    with pytest.raises(ValueError, match="engine='fused'"):
+        run_federated_rounds(cfg, shards, seed_set, test, rounds=1,
+                             engine="vmap", comms=comms)
+
+
+def test_run_experiment_comms_telemetry():
+    cfg = _tiny_cfg(3)
+    comms = CommsConfig(compression="int8")
+    reports = run_experiment(cfg, n_train=90, n_test=40, rounds=ROUNDS,
+                             engine="fused", comms=comms)
+    tel = reports[0]["comms"]
+    assert tel["compression"] == "int8"
+    assert 3.9 < tel["compression_ratio"] < 4.0
+    assert len(tel["uplink_bytes_per_round"]) == ROUNDS
+    traj = tel["accuracy_vs_bytes"]
+    assert len(traj) == ROUNDS
+    assert traj[-1]["cumulative_uplink_bytes"] == tel["uplink_bytes_total"]
+    assert all(0.0 <= p["accuracy"] <= 1.0 for p in traj)
