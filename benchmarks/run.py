@@ -35,6 +35,7 @@ BENCHES = [
     ("edge_loop", "benchmarks.edge_loop_bench", "bench_edge_loop"),
     ("massive_fleet", "benchmarks.edge_loop_bench", "bench_massive_fleet"),
     ("comms", "benchmarks.edge_loop_bench", "bench_comms_sweep"),
+    ("hetero", "benchmarks.bench_hetero", "bench_hetero"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

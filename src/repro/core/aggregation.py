@@ -72,6 +72,41 @@ def normalize_weights(weights, mask=None) -> jax.Array:
     return jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), uniform)
 
 
+def staleness_decay(staleness, *, kind: str = "exp",
+                    rate: float = 0.5) -> jax.Array:
+    """Per-device staleness discount ``decay(s_i)`` for Eq. 1 weighting.
+
+    ``staleness`` is the [D] age (in rounds) of each device's buffered
+    update (0 = fresh, this round's work).  ``exp``: ``rate**s`` (rate ∈
+    (0, 1], the per-round factor); ``poly``: ``(1 + s)**-rate`` (Xie et
+    al.'s polynomial staleness weighting from async FL); ``none``: 1 —
+    staleness ignored, weights reduce to their synchronous form.  Fully
+    traced; decay(0) == 1 exactly for every kind, which is what makes the
+    zero-straggler hetero round numerically the synchronous round.
+    """
+    s = jnp.asarray(staleness, jnp.float32)
+    if kind == "none":
+        return jnp.ones_like(s)
+    if kind == "exp":
+        return jnp.power(jnp.float32(rate), s)
+    if kind == "poly":
+        return jnp.power(1.0 + s, -jnp.float32(rate))
+    raise ValueError(f"unknown staleness decay {kind!r}: use none | exp | poly")
+
+
+def staleness_weights(raw, staleness, mask=None, *, kind: str = "exp",
+                      rate: float = 0.5) -> jax.Array:
+    """Staleness-aware Eq. 1 coefficients: ``alpha_i ∝ raw_i · decay(s_i)``
+    normalized over the ``mask`` arrivals (zero-sum guarded like
+    ``normalize_weights``).  ``raw`` is the synchronous weight basis —
+    labeled counts n_i for ``fedavg_n``, validation accuracy, or ones —
+    so ``kind="none"`` (or all-zero staleness) reduces exactly to the
+    synchronous weighting over arrivals."""
+    w = jnp.asarray(raw, jnp.float32) * staleness_decay(
+        staleness, kind=kind, rate=rate)
+    return normalize_weights(w, mask)
+
+
 def weighted_average(models: Sequence, weights: Sequence[float], *,
                      exclude: Optional[Callable[[str], bool]] = None):
     """W ← Σ_i α_i W_i (paper Eq. 1) over a list of pytrees.

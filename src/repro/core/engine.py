@@ -59,6 +59,7 @@ from repro.core import acquisition as acq
 from repro.core import aggregation as agg_mod
 from repro.core import comms as comms_mod
 from repro.core import counters, vpool
+from repro.core import hetero as hetero_mod
 from repro.kernels.acquisition_scores import acquisition_scores_fused
 from repro.launch.mesh import DEVICE_AXIS
 
@@ -86,12 +87,21 @@ class EngineState(NamedTuple):
     ``residual`` is the comms error-feedback buffer (``[D, ...]`` pytree
     mirroring ``params``), populated only by ``run_rounds_fused`` when a
     lossy ``CommsConfig`` with ``error_feedback`` is active; it defaults to
-    an empty pytree so every other path ignores it at zero cost."""
+    an empty pytree so every other path ignores it at zero cost.
+
+    ``pending`` / ``staleness`` are the heterogeneous-fleet buffers
+    (``core.hetero``), populated only when a ``HeteroConfig`` is active:
+    ``pending`` holds each straggler's not-yet-delivered delta (a
+    ``[D, ...]`` mirror of params), ``staleness`` its age in rounds
+    (``[D] int32``).  Like ``residual`` they default to empty pytrees and
+    shard over the device mesh axis."""
     params: Any          # [D, ...] pytree
     opt_state: Any       # [D, ...] pytree
     pool: vpool.VPool    # [D, ...] fields
     rng: jax.Array       # [D] PRNG keys
     residual: Any = ()   # [D, ...] pytree (comms error feedback) or ()
+    pending: Any = ()    # [D, ...] pytree (buffered straggler deltas) or ()
+    staleness: Any = ()  # [D] int32 staleness counters or ()
 
 
 def stack_device_data(device_data: Sequence):
@@ -233,7 +243,8 @@ class EdgeEngine:
             lambda a: jnp.broadcast_to(a, (D,) + a.shape), params0)
         return self._shard_state(
             EngineState(params, self.trainer.opt.init(params), state.pool,
-                        self.device_keys(round_idx), state.residual))
+                        self.device_keys(round_idx), state.residual,
+                        state.pending, state.staleness))
 
     def device_params_list(self, state: EngineState) -> List:
         return agg_mod.unstack_models(state.params)
@@ -259,7 +270,12 @@ class EdgeEngine:
         # fleet arrays inside the process-lifetime _COMPILED_CACHE
         train_unroll = steps if self.unroll else 1
 
-        def step(carry, images_d, labels_d, seed_x, seed_y, test_x, test_y):
+        def step(carry, images_d, labels_d, seed_x, seed_y, test_x, test_y,
+                 steps_d=None):
+            # ``steps_d`` (traced per-device scalar, optional) is the hetero
+            # compute profile: local fit steps past it are masked out inside
+            # fit_steps_raw, so slow devices contribute less-trained work
+            # without breaking the static round shape.
             params, opt_state, pool, rng = carry
             rng, k_draw, k_score, k_sel, k_fit = jax.random.split(rng, 5)
 
@@ -283,7 +299,7 @@ class EdgeEngine:
                                  pool.labeled_valid.astype(jnp.float32)])
             params, opt_state = trainer.fit_steps_raw(
                 params, opt_state, x, y, m, k_fit, steps,
-                unroll=train_unroll)
+                unroll=train_unroll, step_limit=steps_d)
 
             rec = {
                 "n_labeled": vpool.n_labeled(pool),
@@ -384,7 +400,8 @@ class EdgeEngine:
 
     # ----------------------------------------------------- fused fog rounds
     def _get_rounds_fused_jit(self, rounds: int, aggregation: str,
-                              mask_mode: str, comms_key=None):
+                              mask_mode: str, comms_key=None,
+                              hetero_key=None):
         """T whole rounds — device AL + Eq. 1 aggregation + re-dispatch — as
         ONE compiled program (an outer scan over rounds).
 
@@ -408,6 +425,20 @@ class EdgeEngine:
         BASE + Σ αᵢ·C(Δᵢ + eᵢ) — exact for C = identity because Σα = 1 —
         so compressed rounds stay one dispatch and shard unchanged (the
         codec is per-device-local; only the weighted delta sum is psum'd).
+
+        ``hetero_key`` is the static ``(decay, decay_rate, buffer_stale,
+        use_step_limits)`` tuple (or None) from a ``core.hetero
+        .HeteroConfig``.  With it, the mask becomes an ARRIVAL mask with
+        straggler-tolerant semantics: a missing device's delta is buffered
+        in the carried ``pending`` pytree (not discarded), its ``staleness``
+        counter increments, and on arrival the backlog folds into the upload
+        weighted by ``alpha_i ∝ raw_i · decay(staleness_i)``
+        (``aggregation.staleness_weights``).  The hetero path always
+        aggregates in delta form (BASE + Σ αᵢ·uᵢ — exact because Σα = 1),
+        composes with the comms codecs (the codec compresses the whole
+        backlog-bearing upload) and with the step-limit compute profile
+        (per-device traced fit budgets), and shards unchanged: staleness is
+        one more all_gather'd [D] scalar, pending is device-local state.
         """
 
         def build():
@@ -417,6 +448,11 @@ class EdgeEngine:
                                         topk_fraction=comms_key[1],
                                         error_feedback=comms_key[2])
                   if compress else None)
+            hetero_on = hetero_key is not None
+            if hetero_on:
+                h_decay, h_rate, h_buffer, h_steps = hetero_key
+            else:
+                h_decay, h_rate, h_buffer, h_steps = "none", 1.0, False, False
             step = self._acquisition_step(False)
             R = self.cfg.acquisitions
             round_unroll = R if self.unroll else 1
@@ -427,6 +463,7 @@ class EdgeEngine:
             D_local = D // (1 if mesh is None else mesh.shape[DEVICE_AXIS])
             trainer = self.trainer
             eval_fn = trainer.eval_logits_raw
+            tmap = jax.tree_util.tree_map
 
             def gather(v):  # local [D_local] per-device scalar → global [D]
                 return v if axis is None else jax.lax.all_gather(
@@ -439,9 +476,11 @@ class EdgeEngine:
                 return jax.lax.dynamic_slice(v, (off,), (D_local,))
 
             def rounds_all(state, images, labels, seed_x, seed_y,
-                           val_x, val_y, keys_all, mask_arg, fraction):
+                           val_x, val_y, keys_all, mask_arg, fraction,
+                           step_limits):
                 def one_round(carry, xs):
-                    params, opt_state, pool, _, residual = carry
+                    (params, opt_state, pool, _, residual, pending,
+                     staleness) = carry
                     if mask_mode == "bernoulli":
                         keys_r, mask_key = xs
                         # same key on every shard → consistent global draw
@@ -454,17 +493,20 @@ class EdgeEngine:
 
                     # the model every device starts this round from (all rows
                     # identical — the previous round's / init's re-dispatch);
-                    # the comms path compresses deltas against it
+                    # the delta paths compress/buffer against it
                     params_prev = params
 
-                    def device_round(c, images_d, labels_d):
+                    def device_round(c, images_d, labels_d, steps_d):
                         return jax.lax.scan(
-                            lambda cc, _: step(cc, images_d, labels_d,
-                                               seed_x, seed_y, None, None),
+                            lambda cc, _: step(
+                                cc, images_d, labels_d, seed_x, seed_y,
+                                None, None,
+                                steps_d if h_steps else None),
                             c, None, length=R, unroll=round_unroll)
 
                     (params, opt_state, pool, rng), _ = jax.vmap(device_round)(
-                        (params, opt_state, pool, keys_r), images, labels)
+                        (params, opt_state, pool, keys_r), images, labels,
+                        step_limits)
 
                     # ---- in-compile fog node: Eq. 1 over the stacked axis
                     counts_g = gather(
@@ -483,48 +525,99 @@ class EdgeEngine:
                     else:  # optimal: one-hot at the best participant
                         masked = jnp.where(mask_g > 0, accs_g, -jnp.inf)
                         raw = jax.nn.one_hot(jnp.argmax(masked), D)
-                    w_g = agg_mod.normalize_weights(raw, mask_g)
-                    if compress:
-                        # uplink codec on the per-device update: each device
-                        # ships C(Δᵢ + eᵢ); the fog node reconstructs
-                        # BASE + Σ αᵢ·C(Δᵢ + eᵢ)  (exact when C = identity
-                        # since Σα = 1).  Everything is device-local except
-                        # the weighted delta sum, so the mesh path only adds
-                        # the same psum the uncompressed path already does.
-                        tmap = jax.tree_util.tree_map
+                    if hetero_on:
+                        # staleness-aware Eq. 1: arrivals weighted by
+                        # raw_i · decay(age of their backlog)
+                        stale_g = gather(staleness)
+                        w_g = agg_mod.staleness_weights(
+                            raw, stale_g, mask_g, kind=h_decay, rate=h_rate)
+                        # a zero-arrival round aggregates NOTHING: the
+                        # no-participant uniform fallback of
+                        # normalize_weights would fold every device's
+                        # banked backlog in now AND re-bank it (the mask-0
+                        # pending branch), double-applying each delta on
+                        # its real arrival.  Zero the weights and keep the
+                        # previous fog model instead (guard below).
+                        arrived_any = jnp.sum(mask_g) > 0
+                        w_g = jnp.where(arrived_any, w_g,
+                                        jnp.zeros_like(w_g))
+                    else:
+                        w_g = agg_mod.normalize_weights(raw, mask_g)
+
+                    def _where_arrived(on_arrival, otherwise):
+                        return tmap(
+                            lambda a, o: jnp.where(
+                                mask_l.reshape(
+                                    (-1,) + (1,) * (a.ndim - 1)) > 0,
+                                a, o),
+                            on_arrival, otherwise)
+
+                    backlog = None
+                    if h_buffer or compress:
+                        # this round's fresh work against the dispatched
+                        # base, plus (hetero) the buffered backlog
                         delta = tmap(jnp.subtract, params, params_prev)
-                        if use_ef:
-                            delta = tmap(jnp.add, delta, residual)
+                        backlog = (tmap(jnp.add, delta, pending)
+                                   if h_buffer else delta)
+                    if compress:
+                        # delta-form Eq. 1: BASE + Σ αᵢ·C(uᵢ) (exact for
+                        # C = identity because Σα = 1).  The upload uᵢ is
+                        # the backlog-bearing delta plus the carried EF
+                        # residual; everything is device-local except the
+                        # weighted sum's psum.
+                        to_send = (tmap(jnp.add, backlog, residual)
+                                   if use_ef else backlog)
                         qkeys = jax.vmap(
                             lambda k: jax.random.fold_in(k, 0x636F6D))(rng)
                         sent = jax.vmap(
                             lambda k, d: comms_mod.compress_tree(cc, k, d))(
-                                qkeys, delta)
+                                qkeys, to_send)
                         if use_ef:
                             # EF updates on actual communication only
                             # (Karimireddy et al.): a device masked out of
                             # this round transmitted nothing, so its
                             # residual stays frozen — overwriting it would
                             # delete error mass a REAL earlier upload still
-                            # owes the fog node.  (Its local Δ is discarded
-                            # by the re-dispatch, same as uncompressed.)
-                            def _ef(s, d, r):
-                                m = mask_l.reshape(
-                                    (-1,) + (1,) * (s.ndim - 1))
-                                return jnp.where(m > 0, d - s, r)
-                            residual = tmap(_ef, sent, delta, residual)
+                            # owes the fog node.
+                            residual = _where_arrived(
+                                tmap(jnp.subtract, to_send, sent), residual)
                         agg = agg_mod.weighted_sum_stacked(sent, local(w_g))
                         if axis is not None:
                             agg = jax.lax.psum(agg, axis)
                         agg = tmap(jnp.add,
                                    tmap(lambda a: a[0], params_prev), agg)
                     else:
+                        # direct Eq. 1 — and, for buffering hetero rounds,
+                        # + Σ αᵢ·pendingᵢ, algebraically identical to the
+                        # delta form (Σα = 1) but BITWISE the synchronous
+                        # program when nothing is pending, which is what
+                        # keeps the zero-straggler equivalence at float
+                        # tolerance instead of drifting round over round
                         agg = agg_mod.weighted_sum_stacked(params, local(w_g))
+                        if h_buffer:
+                            agg = tmap(jnp.add, agg,
+                                       agg_mod.weighted_sum_stacked(
+                                           pending, local(w_g)))
                         if axis is not None:
                             agg = jax.lax.psum(agg, axis)
+                    if hetero_on:
+                        # zero-arrival guard: no uploads → the fog node
+                        # re-dispatches its previous model unchanged
+                        agg = tmap(
+                            lambda a, b: jnp.where(arrived_any, a, b),
+                            agg, tmap(lambda a: a[0], params_prev))
+                    if h_buffer:
+                        # straggler bookkeeping: delivered backlogs clear,
+                        # missed rounds accumulate this round's work
+                        pending = _where_arrived(
+                            tmap(jnp.zeros_like, backlog), backlog)
+                    if hetero_on:
+                        staleness = jnp.where(mask_l > 0, 0, staleness + 1)
 
                     rec = {"weights": w_g, "upload_mask": mask_g,
                            "n_labeled": counts_g}
+                    if hetero_on:
+                        rec["staleness"] = stale_g
                     if has_val:
                         rec["device_accs"] = accs_g
                         preds = jnp.argmax(eval_fn(agg, val_x), -1)
@@ -536,16 +629,15 @@ class EdgeEngine:
                         lambda a: jnp.broadcast_to(
                             a[None], (D_local,) + a.shape), agg)
                     opt_state = trainer.opt.init(params)
-                    return (params, opt_state, pool, rng, residual), rec
+                    return (params, opt_state, pool, rng, residual, pending,
+                            staleness), rec
 
                 carry = (state.params, state.opt_state, state.pool, state.rng,
-                         state.residual)
+                         state.residual, state.pending, state.staleness)
                 carry, recs = jax.lax.scan(one_round, carry,
                                            (keys_all, mask_arg))
-                params, opt_state, pool, rng, residual = carry
-                final = jax.tree_util.tree_map(lambda a: a[0], params)
-                return (EngineState(params, opt_state, pool, rng, residual),
-                        recs, final)
+                final = jax.tree_util.tree_map(lambda a: a[0], carry[0])
+                return EngineState(*carry), recs, final
 
             if mesh is not None:
                 dev = P(DEVICE_AXIS)
@@ -555,7 +647,7 @@ class EdgeEngine:
                 rounds_all = shard_map(
                     rounds_all, mesh=mesh,
                     in_specs=(dev, dev, dev, P(), P(), P(), P(),
-                              keys_spec, mask_spec, P()),
+                              keys_spec, mask_spec, P(), dev),
                     # recs and the aggregated model are replicated
                     # (all_gather / psum results), state stays sharded
                     out_specs=(dev, P(), P()), check_rep=False)
@@ -564,13 +656,13 @@ class EdgeEngine:
             return jax.jit(rounds_all, donate_argnums=_donate_argnums(0))
 
         key = self._cache_key("rounds_fused", False) + (
-            rounds, aggregation, mask_mode, comms_key)
+            rounds, aggregation, mask_mode, comms_key, hetero_key)
         return _compiled(key, build)
 
     def run_rounds_fused(self, state: EngineState, rounds: int, *,
                          upload_mask=None, upload_fraction: float = 1.0,
                          aggregation: str = "fedavg_n", start_round: int = 0,
-                         comms=None):
+                         comms=None, hetero=None):
         """T federated rounds (device AL + fog aggregation + re-dispatch) in
         ONE dispatch.
 
@@ -606,6 +698,23 @@ class EdgeEngine:
         ``core.comms.comms_report`` over the returned ``recs``.  The delta
         formulation assumes ``state.params`` rows start the call identical
         (the init/re-dispatch protocol every driver follows).
+
+        ``hetero`` (``core.hetero.HeteroConfig``) runs straggler-tolerant
+        heterogeneous-fleet rounds, still in ONE dispatch: the mask becomes
+        an ARRIVAL mask — either drawn in-compile as Bernoulli(1 − rate)
+        when ``hetero.straggler_rate > 0``, or an explicit ``upload_mask``
+        host schedule (e.g. ``hetero.straggler_schedule``) with
+        ``straggler_rate == 0``; passing both is an error, not a silent
+        preference.  A missing device's delta is buffered in
+        ``state.pending`` and folded in on arrival weighted by
+        ``alpha_i ∝ raw_i · decay(staleness_i)`` (counters in
+        ``state.staleness``, also in ``recs["staleness"]``), and the
+        compute profile limits per-device local fit steps via a traced step
+        mask.  Composes with ``comms`` (the codec compresses the
+        backlog-bearing upload; bytes are accounted only for devices that
+        actually upload) and with the mesh path.  ``aggregation="optimal"``
+        is argmax selection, not Eq. 1 weighting, so it does not compose
+        with staleness decay and is rejected.
         """
         if aggregation not in _AGGREGATIONS:
             raise ValueError(f"unknown aggregation {aggregation!r}: "
@@ -614,7 +723,13 @@ class EdgeEngine:
             raise ValueError(
                 f"aggregation={aggregation!r} scores devices on a validation "
                 "set; construct EdgeEngine with test_set")
+        if hetero is not None and aggregation == "optimal":
+            raise ValueError(
+                "aggregation='optimal' picks one argmax model and has no "
+                "Eq. 1 weights for staleness decay to act on; use "
+                "average | weighted | fedavg_n with hetero")
         self._check_capacity(state, rounds=rounds)
+        D = self.num_devices
         comms_key = None
         if comms is not None and comms.compression != "none":
             comms_key = (comms.compression, comms.topk_fraction,
@@ -629,7 +744,42 @@ class EdgeEngine:
             # codec off (or EF off): drop any stale residual so the compiled
             # carry structure matches and old buffers can't leak in
             state = state._replace(residual=())
-        D = self.num_devices
+        hetero_key = None
+        step_limits = None
+        if hetero is not None:
+            step_limits = hetero_mod.device_step_limits(
+                hetero, D, self.cfg.train_steps_per_acq)
+            hetero_key = (hetero.decay, float(hetero.decay_rate),
+                          bool(hetero.buffer_stale), step_limits is not None)
+            if hetero.straggler_rate > 0.0:
+                if upload_mask is not None or upload_fraction < 1.0:
+                    # refusing to guess which participation model wins:
+                    # silently preferring one would run e.g. a 30%
+                    # straggler config as a 10% one with telemetry
+                    # (expected_staleness, bench ratios) reporting the
+                    # other
+                    raise ValueError(
+                        "pass either hetero.straggler_rate or an explicit "
+                        "upload_mask/upload_fraction participation model, "
+                        "not both (set straggler_rate=0 to drive hetero "
+                        "rounds from a host schedule)")
+                # the straggler model IS the participation machinery: draw
+                # the arrival mask in-compile at Bernoulli(1 − rate)
+                upload_fraction = 1.0 - hetero.straggler_rate
+            if not jax.tree_util.tree_leaves(state.staleness):
+                state = state._replace(
+                    staleness=jnp.zeros((D,), jnp.int32))
+            if hetero.buffer_stale:
+                if not jax.tree_util.tree_leaves(state.pending):
+                    state = state._replace(pending=jax.tree_util.tree_map(
+                        jnp.zeros_like, state.params))
+            else:
+                state = state._replace(pending=())
+            state = self._shard_state(state)
+        else:
+            # hetero off: drop any carried buffers so the compiled carry
+            # structure matches (mirrors the residual hygiene above)
+            state = state._replace(pending=(), staleness=())
         # round 0 consumes the incoming state's keys; later rounds follow
         # the legacy set_params schedule (device_keys at the absolute index)
         later = [self.device_keys(start_round + t) for t in range(1, rounds)]
@@ -654,12 +804,17 @@ class EdgeEngine:
             mask_mode = "given"
             mask_arg = jnp.ones((rounds, D), jnp.float32)
         fn = self._get_rounds_fused_jit(rounds, aggregation, mask_mode,
-                                        comms_key)
+                                        comms_key, hetero_key)
+        # the compute profile is a traced [D] argument (profile sweeps reuse
+        # the executable); a full-budget fill-in rides along when unused
+        sl = jnp.asarray(
+            step_limits if step_limits is not None
+            else np.full((D,), self.cfg.train_steps_per_acq, np.int32))
         counters.count_dispatch()
         state, recs, final = fn(state, self.images, self.labels,
                                 self.seed_images, self.seed_labels,
                                 self.test_images, self.test_labels,
-                                keys_all, mask_arg, fraction)
+                                keys_all, mask_arg, fraction, sl)
         return state, recs, final
 
     # ------------------------------------------------------------ drivers

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 from repro.core import acquisition as acq
 from repro.core import comms as comms_mod
 from repro.core import counters
+from repro.core import hetero as hetero_mod
 from repro.core.aggregation import (fedavg, fedavg_n, opt_model,
                                     weighted_average)
 from repro.core.comms import CommsConfig
+from repro.core.hetero import HeteroConfig
 from repro.core.mc_dropout import mc_logprobs
 from repro.core.pool import ActivePool
 from repro.data.digits import SyntheticDigits
@@ -94,17 +96,30 @@ class Trainer:
             return LeNet.apply(params, x, cfg=model_cfg, deterministic=True)
 
         def fit_steps_raw(params, opt_state, x, y, mask, rng, steps: int,
-                          unroll: int = 1):
+                          unroll: int = 1, step_limit=None):
             """The whole multi-step fit as ONE compiled program: a lax.scan
             over train steps instead of `steps` Python-dispatched XLA calls.
-            Also the engine's training stage (which unrolls it on CPU)."""
+            Also the engine's training stage (which unrolls it on CPU).
+
+            ``step_limit`` (traced scalar, optional) is the heterogeneous-
+            fleet compute profile (``core.hetero``): updates past
+            ``step_limit`` are masked out, so a slow device's fit is
+            BIT-IDENTICAL to a shorter fit (the kept steps consume the same
+            prefix of the per-step key sequence) while shapes — and the
+            compiled program — stay static across the whole fleet."""
 
             def body(carry, i):
                 params, opt_state, rng = carry
                 rng, k = jax.random.split(rng)
-                params, opt_state = train_step_raw(params, opt_state, x, y,
-                                                   mask, k, i)
-                return (params, opt_state, rng), None
+                new_p, new_o = train_step_raw(params, opt_state, x, y,
+                                              mask, k, i)
+                if step_limit is not None:
+                    keep = i < step_limit
+                    new_p = jax.tree_util.tree_map(
+                        lambda n, o: jnp.where(keep, n, o), new_p, params)
+                    new_o = jax.tree_util.tree_map(
+                        lambda n, o: jnp.where(keep, n, o), new_o, opt_state)
+                return (new_p, new_o, rng), None
 
             (params, opt_state, _), _ = jax.lax.scan(
                 body, (params, opt_state, rng), jnp.arange(steps),
@@ -309,13 +324,23 @@ def _check_comms_engine(comms: Optional[CommsConfig], engine: str) -> None:
             "support byte accounting only")
 
 
+def _check_hetero_engine(hetero: Optional[HeteroConfig], engine: str) -> None:
+    """Straggler buffering, staleness counters, and the traced compute
+    profile live inside the fused multi-round program only."""
+    if hetero is not None and engine != "fused":
+        raise ValueError(
+            f"hetero rounds require engine='fused' (got engine={engine!r}); "
+            "use run_federated_rounds(..., engine='fused', hetero=...)")
+
+
 def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigits],
                         seed_data: SyntheticDigits, test_set: SyntheticDigits,
                         *, trainer: Optional[Trainer] = None,
                         initial_params=None, record_curves: bool = True,
                         upload_fraction: float = 1.0, round_seed: int = 0,
                         engine: str = "vmap",
-                        comms: Optional[CommsConfig] = None):
+                        comms: Optional[CommsConfig] = None,
+                        hetero: Optional[HeteroConfig] = None):
     """One full paper round: FN init → dispatch → per-device AL → aggregate.
 
     ``engine`` selects the execution path:
@@ -339,6 +364,7 @@ def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigit
     if engine not in ("vmap", "legacy", "classic"):
         raise ValueError(f"unknown engine {engine!r}: use vmap | legacy | classic")
     _check_comms_engine(comms, engine)
+    _check_hetero_engine(hetero, engine)
     trainer = trainer or Trainer(cfg)
     fog = FogNode(trainer, cfg, seed_data)
     params0 = initial_params if initial_params is not None else fog.initial_model()
@@ -389,7 +415,8 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                          seed_data: SyntheticDigits, test_set: SyntheticDigits,
                          *, rounds: int = 2, trainer: Optional[Trainer] = None,
                          upload_fraction: float = 1.0, engine: str = "vmap",
-                         mesh=None, comms: Optional[CommsConfig] = None):
+                         mesh=None, comms: Optional[CommsConfig] = None,
+                         hetero: Optional[HeteroConfig] = None):
     """Iterated rounds (paper: "the learning process can be iteratively
     carried out"): each round re-dispatches the aggregated model; devices
     keep their pools (labels accumulate across rounds).
@@ -410,11 +437,19 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
     additionally compresses device uploads IN-COMPILE (error-feedback
     residuals carried in engine state) — the other engines accept
     accounting-only configs.
+
+    ``hetero=HeteroConfig(...)`` (fused engine only) runs straggler-
+    tolerant heterogeneous-fleet rounds: stragglers' deltas are buffered
+    and folded in on arrival with staleness-decayed Eq. 1 weights, and a
+    compute profile can limit per-device local fit steps — see
+    ``core.hetero``.  Each round report then carries the per-device
+    ``"staleness"`` counters the aggregation weighted.
     """
     if engine not in ("vmap", "legacy", "classic", "fused"):
         raise ValueError(
             f"unknown engine {engine!r}: use vmap | legacy | classic | fused")
     _check_comms_engine(comms, engine)
+    _check_hetero_engine(hetero, engine)
     image_shape = device_data[0].images.shape[1:]
     total_cfg = replace(cfg, acquisitions=cfg.acquisitions * rounds)
     trainer = trainer or Trainer(total_cfg)
@@ -476,11 +511,13 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                                         cfg.seed, rounds)
         _, recs, params = eng.run_rounds_fused(
             eng.init_state(params), rounds, upload_mask=mask,
-            aggregation=cfg.aggregation, comms=comms)
+            aggregation=cfg.aggregation, comms=comms, hetero=hetero)
         weights = np.asarray(recs["weights"])
         mask_out = np.asarray(recs["upload_mask"])
         accs = np.asarray(recs["device_accs"])
         agg_accs = np.asarray(recs["agg_acc"])
+        staleness = (np.asarray(recs["staleness"])
+                     if "staleness" in recs else None)
         for t in range(rounds):
             uploaded = np.nonzero(mask_out[t])[0]
             reports.append({
@@ -494,6 +531,8 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                     "weights": weights[t].tolist(),     # full [D] Eq.1 alphas
                     "uploaded_devices": uploaded.tolist(),
                 },
+                **({"staleness": staleness[t].tolist()}
+                   if staleness is not None else {}),
             })
         summary = comms_mod.comms_report(
             comms, params, mask_out, agg_accs=agg_accs,
@@ -552,11 +591,37 @@ def massive_config(num_devices: int = 256, *, seed: int = 0,
     return FederatedALConfig(**base)
 
 
+# Heterogeneous-fleet scenario defaults (scenario="hetero"): non-IID
+# Dirichlet shards plus the Industry-4.0 failure modes — 30% of uploads
+# miss their round (buffered + staleness-decayed, not discarded) and a
+# quarter of the fleet is compute-limited to half the local fit steps.
+HETERO_DIRICHLET_ALPHA = 0.5
+DEFAULT_HETERO = hetero_mod.HeteroConfig(
+    straggler_rate=0.3, decay="exp", decay_rate=0.5, buffer_stale=True,
+    slow_fraction=0.25, slow_steps_fraction=0.5)
+
+
+def hetero_config(num_devices: int = 64, *, seed: int = 0,
+                  **overrides) -> FederatedALConfig:
+    """Preset for the heterogeneous-fleet regime: the massive-style small
+    per-device budget (the regime where stragglers bite hardest) with
+    size-aware Eq. 1 weighting for ``dirichlet_split``'s non-IID shards.
+    Pair with a ``HeteroConfig`` (``DEFAULT_HETERO`` via
+    ``run_experiment(scenario="hetero")``)."""
+    base = dict(num_devices=num_devices, initial_train=20, acquisitions=2,
+                k_per_acquisition=5, pool_window=32, mc_samples=4,
+                train_steps_per_acq=10, initial_train_steps=20,
+                aggregation="fedavg_n", seed=seed)
+    base.update(overrides)
+    return FederatedALConfig(**base)
+
+
 def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
                    n_train: int = 4000, n_test: int = 1000, repeats: int = 1,
                    scenario: Optional[str] = None, num_devices: int = 256,
                    rounds: int = 1, engine: Optional[str] = None, mesh=None,
-                   comms: Optional[CommsConfig] = None):
+                   comms: Optional[CommsConfig] = None,
+                   hetero: Optional[HeteroConfig] = None):
     """End-to-end experiment harness (used by benchmarks + examples).
 
     ``scenario="massive"`` builds a ``massive_config(num_devices)`` (any
@@ -564,6 +629,12 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     defaults to the fused engine so aggregation stays in-compile; an
     explicit ``engine=`` always wins (e.g. to benchmark the host-aggregation
     path at massive scale).
+
+    ``scenario="hetero"`` is the heterogeneous-fleet regime: a
+    ``hetero_config(num_devices)`` fleet on **non-IID ``dirichlet_split``
+    shards** (alpha = ``HETERO_DIRICHLET_ALPHA``), the fused engine, and
+    ``DEFAULT_HETERO`` straggler/staleness/compute-profile dynamics unless
+    an explicit ``hetero=HeteroConfig(...)`` is passed.
 
     Every repeat emits a comms telemetry dict (bytes/round, cumulative MB,
     compression ratio, accuracy-vs-bytes trajectory): multi-round repeats
@@ -573,16 +644,20 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     in-compile (fused engine) — the bandwidth-constrained scenario family.
     """
     from repro.data.digits import make_digit_dataset
-    from repro.data.federated_split import federated_split
+    from repro.data.federated_split import dirichlet_split, federated_split
 
-    if scenario == "massive":
-        cfg = massive_config(num_devices) if cfg is None else cfg
+    if scenario in ("massive", "hetero"):
+        maker = massive_config if scenario == "massive" else hetero_config
+        cfg = maker(num_devices) if cfg is None else cfg
         n_train = MASSIVE_SAMPLES_PER_DEVICE * cfg.num_devices
         engine = "fused" if engine is None else engine
+        if scenario == "hetero" and hetero is None:
+            hetero = DEFAULT_HETERO
     elif scenario not in (None, "paper"):
-        raise ValueError(f"unknown scenario {scenario!r}: use paper | massive")
+        raise ValueError(
+            f"unknown scenario {scenario!r}: use paper | massive | hetero")
     if cfg is None:
-        raise ValueError("pass cfg or scenario='massive'")
+        raise ValueError("pass cfg or scenario='massive'/'hetero'")
     engine = "vmap" if engine is None else engine
 
     reports = []
@@ -591,20 +666,28 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
         full = make_digit_dataset(n_train, seed=seed)
         test = make_digit_dataset(n_test, seed=seed + 5)
         seed_set = make_digit_dataset(cfg.initial_train, seed=seed + 11)
-        shards = federated_split(full, cfg.num_devices, seed=seed)
+        if scenario == "hetero":
+            shards = dirichlet_split(full, cfg.num_devices,
+                                     alpha=HETERO_DIRICHLET_ALPHA, seed=seed)
+        else:
+            shards = federated_split(full, cfg.num_devices, seed=seed)
         cfg_rep = replace(cfg, seed=seed)
         if engine == "fused" or rounds > 1 or mesh is not None:
             _, round_reports = run_federated_rounds(
                 cfg_rep, shards, seed_set, test, rounds=rounds,
-                engine=engine, mesh=mesh, comms=comms)
+                engine=engine, mesh=mesh, comms=comms, hetero=hetero)
             rep_report = {
                 "rounds": round_reports,
                 "comms": comms_mod.experiment_telemetry(round_reports),
             }
+            if hetero is not None:
+                rep_report["staleness"] = hetero_mod.summarize_staleness(
+                    [r["staleness"] for r in round_reports])
         else:
             trainer = Trainer(cfg_rep)
             _, rep_report = run_federated_round(cfg_rep, shards, seed_set,
                                                 test, trainer=trainer,
-                                                engine=engine, comms=comms)
+                                                engine=engine, comms=comms,
+                                                hetero=hetero)
         reports.append(rep_report)
     return reports

@@ -1,0 +1,159 @@
+"""Heterogeneous-fleet subsystem: stragglers, staleness, per-device compute.
+
+Real Industry-4.0 fleets are heterogeneous — slow, intermittent, non-IID
+devices (the gap called out by the federated-fog training architecture of
+Kumar & Srirama, arXiv:2402.12906, and the FORA industrial-IoT platform,
+arXiv:2007.02696).  The fused rounds of the edge engine modeled uniform
+devices with an all-or-nothing participation mask: a device that missed a
+round simply had its work DISCARDED.  This module makes heterogeneity a
+first-class, in-compile axis with three traced ingredients, all consumed by
+``EdgeEngine.run_rounds_fused(hetero=...)``:
+
+* **Compute profile** — per-device local fit step budgets
+  (``device_step_limits``): a slow device trains ``step_limit_i <
+  train_steps_per_acq`` steps per acquisition via a traced step mask inside
+  the scan-fused trainer (``Trainer.fit_steps_raw(step_limit=...)``), so it
+  contributes *less-trained* work instead of being all-in or dropped.  The
+  masked prefix is bit-identical to a shorter fit, and shapes stay static —
+  the compile-once discipline survives.
+
+* **Straggler / dropout model** — which devices ARRIVE at the fog node each
+  round.  Either a host schedule (an explicit ``[rounds, D]`` arrival mask,
+  e.g. ``federated.upload_mask_schedule``) or an in-compile Bernoulli
+  latency draw at rate ``straggler_rate`` (the engine reuses its
+  participation-mask machinery; the rate is a traced scalar, so sweeping it
+  reuses the compiled executable).
+
+* **Staleness-aware aggregation** — a straggler's delta is BUFFERED in
+  ``EngineState.pending`` (not discarded) and folded in when it finally
+  arrives, weighted down by its age: stacked Eq. 1 with
+  ``alpha_i ∝ n_i · decay(staleness_i)`` (polynomial or exponential decay,
+  normalized over actual arrivals — ``aggregation.staleness_weights``).
+  Per-device round counters ride in ``EngineState.staleness``; both new
+  state fields shard over the device mesh axis like every other ``[D, ...]``
+  field.
+
+With ``straggler_rate == 0``, no profile, and ``decay`` anything, the
+hetero round is numerically the synchronous fused round (the equivalence
+contract ``tests/test_hetero.py`` enforces at 1e-5); with ``decay="none"``
+and ``buffer_stale=False`` the weights reduce exactly to ``fedavg_n`` over
+arrivals — heterogeneity degrades gracefully to the uniform-fleet engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+DECAYS = ("none", "exp", "poly")
+
+
+@dataclass(frozen=True)
+class HeteroConfig:
+    """Static heterogeneity policy for a federated experiment.
+
+    ``straggler_rate`` is the per-device per-round probability of MISSING
+    the upload deadline (drawn in-compile; 0 = fully synchronous fleet).
+    ``decay`` / ``decay_rate`` shape the staleness discount
+    (``aggregation.staleness_decay``): ``exp`` → rate**s, ``poly`` →
+    (1+s)**-rate, ``none`` → 1 (pure ``fedavg_n`` over arrivals).
+    ``buffer_stale`` folds a straggler's buffered delta in on arrival
+    instead of discarding it (the PR-2 all-or-nothing semantics).
+    ``slow_fraction`` of devices are compute-limited to
+    ``slow_steps_fraction`` of the configured local fit steps;
+    ``step_limits`` instead pins explicit per-device step budgets.
+    ``seed`` fixes the (host-side) slow-device assignment.
+    """
+
+    straggler_rate: float = 0.0
+    decay: str = "exp"
+    decay_rate: float = 0.5
+    buffer_stale: bool = True
+    slow_fraction: float = 0.0
+    slow_steps_fraction: float = 0.5
+    step_limits: Optional[Tuple[int, ...]] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.straggler_rate < 1.0:
+            raise ValueError(
+                f"straggler_rate must be in [0, 1), got {self.straggler_rate}")
+        if self.decay not in DECAYS:
+            raise ValueError(f"unknown decay {self.decay!r}: "
+                             f"use {' | '.join(DECAYS)}")
+        if self.decay_rate <= 0.0:
+            raise ValueError(f"decay_rate must be > 0, got {self.decay_rate}")
+        if self.decay == "exp" and self.decay_rate > 1.0:
+            raise ValueError(
+                f"exp decay_rate is the per-round factor gamma in (0, 1], "
+                f"got {self.decay_rate}")
+        if not 0.0 <= self.slow_fraction <= 1.0:
+            raise ValueError(
+                f"slow_fraction must be in [0, 1], got {self.slow_fraction}")
+        if not 0.0 < self.slow_steps_fraction <= 1.0:
+            raise ValueError(f"slow_steps_fraction must be in (0, 1], "
+                             f"got {self.slow_steps_fraction}")
+        if self.step_limits is not None and min(self.step_limits) < 1:
+            raise ValueError("step_limits must all be >= 1")
+
+    @property
+    def has_compute_profile(self) -> bool:
+        return self.step_limits is not None or self.slow_fraction > 0.0
+
+
+def device_step_limits(cfg: HeteroConfig, num_devices: int,
+                       train_steps: int) -> Optional[np.ndarray]:
+    """Per-device local fit step budgets ``[D] int32``, or None (uniform).
+
+    Explicit ``cfg.step_limits`` win (clipped to ``[1, train_steps]``);
+    otherwise a deterministic ``slow_fraction`` subset of the fleet (drawn
+    from ``cfg.seed``, independent of the experiment seed) is limited to
+    ``slow_steps_fraction`` of the configured steps.  Host-side numpy — the
+    result enters the fused program as a traced ``[D]`` argument, so
+    changing the profile does NOT recompile.
+    """
+    if cfg.step_limits is not None:
+        limits = np.asarray(cfg.step_limits, np.int32)
+        if limits.shape != (num_devices,):
+            raise ValueError(f"step_limits shape {limits.shape} != "
+                             f"({num_devices},)")
+        return np.clip(limits, 1, train_steps)
+    if cfg.slow_fraction > 0.0:
+        rng = np.random.default_rng([cfg.seed, 0x5745])
+        slow = rng.random(num_devices) < cfg.slow_fraction
+        slow_steps = max(1, int(round(cfg.slow_steps_fraction * train_steps)))
+        return np.where(slow, slow_steps, train_steps).astype(np.int32)
+    return None
+
+
+def straggler_schedule(num_devices: int, straggler_rate: float, seed: int,
+                       rounds: int) -> np.ndarray:
+    """Host-side arrival schedule ``[rounds, D]`` (1 = arrived on time).
+
+    The reproducible twin of the in-compile Bernoulli draw — for tests and
+    for experiments that want the same straggler pattern across engines.
+    """
+    rng = np.random.default_rng([seed, 0x73747261])
+    return (rng.random((rounds, num_devices)) >= straggler_rate).astype(
+        np.float32)
+
+
+def expected_staleness(straggler_rate: float) -> float:
+    """Mean staleness of an arriving buffered delta at a straggler rate
+    ``p``: a geometric number of missed rounds, p/(1-p) — the analytic
+    anchor the bench report prints next to the measured counters."""
+    return straggler_rate / max(1.0 - straggler_rate, 1e-12)
+
+
+def summarize_staleness(staleness_recs: Sequence) -> dict:
+    """Host-side round-by-round staleness telemetry from the fused recs
+    (``recs["staleness"]`` is ``[rounds, D]``: each round's PRE-aggregation
+    counters, i.e. the ages the Eq. 1 decay actually weighted)."""
+    s = np.asarray(staleness_recs)
+    return {
+        "mean": float(s.mean()),
+        "max": int(s.max()),
+        "per_round_mean": [float(m) for m in s.mean(axis=1)],
+        "stale_fraction": float((s > 0).mean()),
+    }

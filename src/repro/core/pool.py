@@ -40,7 +40,17 @@ class ActivePool:
         return self.rng.choice(unl, size=window, replace=False)
 
     def acquire(self, window_indices: np.ndarray, selected_in_window: np.ndarray) -> np.ndarray:
-        """Mark ``window_indices[selected_in_window]`` as labeled; returns them."""
-        new = np.asarray(window_indices)[np.asarray(selected_in_window)]
-        self.labeled = np.concatenate([self.labeled, new.astype(np.int64)])
+        """Mark ``window_indices[selected_in_window]`` as labeled; returns the
+        indices that were NEWLY labeled.
+
+        Deduplicated both within the selection and against the existing
+        labeled set: a repeated index used to be appended again, double-
+        counting it in ``len(labeled)`` — the n_i that weights Eq. 1
+        (``fedavg_n``) — and double-sampling it in the training gather.
+        """
+        picked = np.unique(
+            np.asarray(window_indices)[np.asarray(selected_in_window)]
+            .astype(np.int64))
+        new = np.setdiff1d(picked, self.labeled)
+        self.labeled = np.concatenate([self.labeled, new])
         return new

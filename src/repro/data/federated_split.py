@@ -15,6 +15,32 @@ import numpy as np
 from repro.data.digits import SyntheticDigits
 
 
+def _partition_sizes(raw: np.ndarray, n: int) -> np.ndarray:
+    """Integer shard sizes ∝ ``raw`` with every size >= 1 and sum == n.
+
+    The old floor-then-dump-remainder-on-the-last-shard sizing could make
+    ``sizes[-1]`` zero or negative under high unbalance or when
+    ``num_devices`` approaches ``len(ds)`` (the floors of D-1 shards can
+    overshoot n − 1); requires n >= len(raw).
+    """
+    num = len(raw)
+    sizes = np.maximum(np.floor(raw / raw.sum() * n).astype(int), 1)
+    excess = int(sizes.sum()) - n
+    if excess < 0:                       # floors undershot: top up the largest
+        sizes[np.argmax(sizes)] += -excess
+    order = np.argsort(-sizes)           # shed overshoot largest-first, never <1
+    i = 0
+    while excess > 0:
+        d = order[i % num]
+        if sizes[d] > 1:
+            take = min(excess, sizes[d] - 1)
+            sizes[d] -= take
+            excess -= take
+        i += 1
+    assert sizes.sum() == n and sizes.min() >= 1, (sizes, n)
+    return sizes
+
+
 def federated_split(ds: SyntheticDigits, num_devices: int, *, seed: int = 0,
                     unbalance: float = 0.3,
                     class_skew: float = 2.0) -> List[SyntheticDigits]:
@@ -26,11 +52,19 @@ def federated_split(ds: SyntheticDigits, num_devices: int, *, seed: int = 0,
     present but 2-4x over/under-represented — the regime where uncertainty
     sampling can rebalance and random sampling cannot).
     """
-    rng = np.random.default_rng(seed)
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
     n = len(ds)
+    if num_devices > n:
+        raise ValueError(
+            f"cannot split {n} samples over {num_devices} devices: every "
+            f"device needs at least one sample (num_devices <= len(ds))")
+    rng = np.random.default_rng(seed)
     raw = 1.0 + rng.uniform(-unbalance, unbalance, size=num_devices)
-    sizes = np.floor(raw / raw.sum() * n).astype(int)
-    sizes[-1] = n - sizes[:-1].sum()
+    # unbalance >= 1 can draw non-positive proportions; keep every device
+    # a positive sliver instead of producing negative floor sizes
+    raw = np.maximum(raw, 0.05)
+    sizes = _partition_sizes(raw, n)
 
     idx_by_class = [list(rng.permutation(np.where(ds.labels == c)[0]))
                     for c in range(10)]

@@ -127,9 +127,10 @@ def shard_engine_state(mesh, state):
     re-laying-out the fleet on every dispatch; D must divide by mesh size.
 
     Covers every state field including the comms error-feedback ``residual``
-    buffer (a ``[D, ...]`` mirror of params — see ``core.comms``); rank-0
-    leaves (none today, but cheap future-proofing) replicate instead of
-    taking the device-axis spec they cannot carry."""
+    buffer (a ``[D, ...]`` mirror of params — see ``core.comms``) and the
+    heterogeneous-fleet ``pending`` delta buffer / ``staleness`` counters
+    (``core.hetero``); rank-0 leaves (none today, but cheap future-proofing)
+    replicate instead of taking the device-axis spec they cannot carry."""
     dev = NamedSharding(mesh, device_axis_spec())
     rep = NamedSharding(mesh, P())
     return jax.tree_util.tree_map(

@@ -1,0 +1,356 @@
+"""Heterogeneous-fleet rounds (core.hetero): the tentpole's contracts.
+
+* zero stragglers ≡ the synchronous fused path (≤ 1e-5), under vmap AND
+  under the shard_map mesh;
+* staleness decay "none" reduces the weights exactly to fedavg_n over
+  arrivals;
+* hetero rounds stay ONE dispatch (including with a comms codec);
+* the compute profile's masked fit equals a genuinely shorter fit;
+* staleness counters / buffered fold-in behave as specified.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counters
+from repro.core.aggregation import normalize_weights, staleness_decay
+from repro.core.comms import CommsConfig
+from repro.core.engine import EdgeEngine
+from repro.core.federated import (FederatedALConfig, Trainer, hetero_config,
+                                  run_experiment, run_federated_rounds)
+from repro.core.hetero import (HeteroConfig, device_step_limits,
+                               straggler_schedule)
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import dirichlet_split, federated_split
+from repro.launch.mesh import make_device_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROUNDS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # 8 devices so the mesh tests divide evenly over the CI sharded job's
+    # 8 fake host devices (XLA_FLAGS=--xla_force_host_platform_device_count=8),
+    # mirroring tests/test_shard_engine.py
+    cfg = FederatedALConfig(num_devices=8, acquisitions=2, mc_samples=4,
+                            k_per_acquisition=3, pool_window=16,
+                            train_steps_per_acq=4, initial_train=10,
+                            initial_train_steps=5, seed=7)
+    full = make_digit_dataset(160, seed=1)
+    test = make_digit_dataset(48, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def _engine(cfg, shards, seed_set, test, *, rounds=ROUNDS, mesh=None):
+    total = cfg.acquisitions * rounds
+    trainer = Trainer(replace(cfg, acquisitions=total))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total, mesh=mesh)
+    params0 = trainer.init_params(jax.random.key(0))
+    return eng, params0
+
+
+def _leaves_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+# ------------------------------------------------------------- equivalence
+def test_zero_stragglers_matches_synchronous_fused(setup):
+    """hetero with no stragglers/profile must be the synchronous engine to
+    float tolerance (the hetero path aggregates in delta form — exact
+    because Σα = 1, modulo summation order)."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, rs, fs = eng.run_rounds_fused(eng.init_state(params0), ROUNDS)
+    _, rh, fh = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS,
+        hetero=HeteroConfig(straggler_rate=0.0, decay="exp", decay_rate=0.5))
+    _leaves_close(fs, fh)
+    np.testing.assert_allclose(np.asarray(rs["weights"]),
+                               np.asarray(rh["weights"]), atol=1e-6)
+    assert np.asarray(rh["staleness"]).sum() == 0
+
+
+def test_zero_stragglers_matches_synchronous_under_mesh(setup):
+    """Same contract under the shard_map device mesh (1 host device in a
+    plain run, 8 in the CI sharded job): hetero mesh == sync vmap."""
+    cfg, shards, seed_set, test = setup
+    eng_v, params0 = _engine(cfg, shards, seed_set, test)
+    _, _, fv = eng_v.run_rounds_fused(eng_v.init_state(params0), ROUNDS)
+    eng_m, _ = _engine(cfg, shards, seed_set, test, mesh=make_device_mesh())
+    _, rm, fm = eng_m.run_rounds_fused(
+        eng_m.init_state(params0), ROUNDS,
+        hetero=HeteroConfig(straggler_rate=0.0))
+    _leaves_close(fv, fm)
+    assert np.asarray(rm["staleness"]).sum() == 0
+
+
+def test_hetero_mesh_matches_vmap_with_stragglers(setup):
+    """With a host straggler schedule the hetero round must be identical
+    (≤ 1e-5) between the vmap and shard_map engines — staleness counters,
+    weights, and the aggregated model."""
+    cfg, shards, seed_set, test = setup
+    mask = straggler_schedule(cfg.num_devices, 0.4, seed=11, rounds=ROUNDS)
+    mask[0, 1] = 0.0                       # force at least one straggler
+    het = HeteroConfig(decay="exp", decay_rate=0.5,
+                       slow_fraction=0.5, slow_steps_fraction=0.5)
+    eng_v, params0 = _engine(cfg, shards, seed_set, test)
+    _, rv, fv = eng_v.run_rounds_fused(eng_v.init_state(params0), ROUNDS,
+                                       upload_mask=mask, hetero=het)
+    eng_m, _ = _engine(cfg, shards, seed_set, test, mesh=make_device_mesh())
+    _, rm, fm = eng_m.run_rounds_fused(eng_m.init_state(params0), ROUNDS,
+                                       upload_mask=mask, hetero=het)
+    _leaves_close(fv, fm)
+    np.testing.assert_array_equal(np.asarray(rv["staleness"]),
+                                  np.asarray(rm["staleness"]))
+    np.testing.assert_allclose(np.asarray(rv["weights"]),
+                               np.asarray(rm["weights"]), atol=1e-5)
+
+
+def test_decay_none_weights_reduce_to_fedavg_n(setup):
+    """alpha_i ∝ n_i · decay(s_i) with decay ≡ 1 must be exactly the
+    fedavg_n weights normalized over arrivals."""
+    cfg, shards, seed_set, test = setup
+    mask = np.ones((ROUNDS, cfg.num_devices), np.float32)
+    mask[0, ::2] = 0.0
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, _ = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS, upload_mask=mask,
+        hetero=HeteroConfig(decay="none", buffer_stale=False))
+    w = np.asarray(recs["weights"])
+    n = np.asarray(recs["n_labeled"])
+    for t in range(ROUNDS):
+        expect = np.asarray(normalize_weights(n[t], mask[t]))
+        np.testing.assert_allclose(w[t], expect, atol=1e-6)
+
+
+# ---------------------------------------------------------- one dispatch
+def test_hetero_rounds_single_dispatch_even_compressed(setup):
+    cfg, shards, seed_set, test = setup
+    het = HeteroConfig(straggler_rate=0.3, slow_fraction=0.5)
+    comms = CommsConfig(compression="int8")
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    eng.run_rounds_fused(eng.init_state(params0), ROUNDS, hetero=het,
+                         comms=comms)                     # warmup/compile
+    state = eng.init_state(params0)
+    counters.reset_dispatches()
+    _, recs, final = eng.run_rounds_fused(state, ROUNDS, hetero=het,
+                                          comms=comms)
+    assert counters.dispatch_count() == 1
+    assert np.asarray(recs["staleness"]).shape == (ROUNDS, cfg.num_devices)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(final))
+
+
+# ------------------------------------------------------- compute profile
+def test_step_limited_fleet_equals_shorter_fit(setup):
+    """Every device limited to s steps must match a fleet configured with
+    train_steps_per_acq = s: the masked fit consumes the same per-step key
+    prefix, so only aggregation summation order differs."""
+    cfg, shards, seed_set, test = setup
+    short = replace(cfg, train_steps_per_acq=2)
+    eng_short, params0 = _engine(short, shards, seed_set, test)
+    _, _, f_short = eng_short.run_rounds_fused(
+        eng_short.init_state(params0), ROUNDS)
+    eng_lim, _ = _engine(cfg, shards, seed_set, test)
+    _, _, f_lim = eng_lim.run_rounds_fused(
+        eng_lim.init_state(params0), ROUNDS,
+        hetero=HeteroConfig(step_limits=(2,) * cfg.num_devices))
+    _leaves_close(f_short, f_lim, atol=1e-6)
+
+
+def test_step_limits_change_results(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, _, f_full = eng.run_rounds_fused(eng.init_state(params0), ROUNDS)
+    _, _, f_slow = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS,
+        hetero=HeteroConfig(step_limits=(1,) * cfg.num_devices))
+    assert any(not np.allclose(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree_util.tree_leaves(f_full),
+                               jax.tree_util.tree_leaves(f_slow)))
+
+
+def test_device_step_limits_profile():
+    het = HeteroConfig(slow_fraction=0.5, slow_steps_fraction=0.5, seed=3)
+    limits = device_step_limits(het, 64, 10)
+    assert limits.shape == (64,)
+    assert set(np.unique(limits)) <= {5, 10}
+    assert 0 < (limits == 5).sum() < 64
+    # deterministic in the hetero seed, independent of call order
+    np.testing.assert_array_equal(limits, device_step_limits(het, 64, 10))
+    assert device_step_limits(HeteroConfig(), 8, 10) is None
+    explicit = device_step_limits(HeteroConfig(step_limits=(3, 20)), 2, 10)
+    np.testing.assert_array_equal(explicit, [3, 10])  # clipped to budget
+
+
+# --------------------------------------------------- staleness dynamics
+def test_staleness_counters_and_decayed_fold_in(setup):
+    """Device 1 misses rounds 0-1 and arrives in round 2: counters must
+    read 0,1,2 and its arrival weight must be n_1·gamma² renormalized."""
+    cfg, shards, seed_set, test = setup
+    rounds, gamma = 3, 0.5
+    mask = np.ones((rounds, cfg.num_devices), np.float32)
+    mask[0, 1] = mask[1, 1] = 0.0
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds=rounds)
+    _, recs, _ = eng.run_rounds_fused(
+        eng.init_state(params0), rounds, upload_mask=mask,
+        hetero=HeteroConfig(decay="exp", decay_rate=gamma))
+    s = np.asarray(recs["staleness"])
+    np.testing.assert_array_equal(s[:, 1], [0, 1, 2])
+    assert s[:, [0, 2, 3]].sum() == 0
+    w = np.asarray(recs["weights"])
+    n = np.asarray(recs["n_labeled"])
+    raw = n[2] * np.asarray(staleness_decay(s[2], kind="exp", rate=gamma))
+    np.testing.assert_allclose(w[2], raw / raw.sum(), atol=1e-6)
+    # while absent, the straggler carries zero weight
+    assert w[0, 1] == 0.0 and w[1, 1] == 0.0
+
+
+def test_zero_arrival_round_keeps_previous_model(setup):
+    """A round where NOBODY arrives must aggregate nothing: zero weights
+    (not normalize_weights' uniform fallback, which would fold every banked
+    backlog in AND re-bank it — double-applying each delta on its real
+    arrival) and an unchanged fog model."""
+    cfg, shards, seed_set, test = setup
+    rounds = 2
+    mask = np.ones((rounds, cfg.num_devices), np.float32)
+    mask[0, :] = 0.0                       # round 0: total blackout
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds=rounds)
+    _, recs, _ = eng.run_rounds_fused(
+        eng.init_state(params0), rounds, upload_mask=mask,
+        hetero=HeteroConfig(decay="exp", decay_rate=0.5))
+    w = np.asarray(recs["weights"])
+    assert np.all(w[0] == 0.0)             # nothing aggregated
+    np.testing.assert_allclose(w[1].sum(), 1.0, atol=1e-6)
+    # the fog model after the blackout round IS the initial model
+    preds = jnp.argmax(eng.trainer.eval_logits_raw(
+        params0, eng.test_images), -1)
+    base_acc = float(jnp.mean((preds == eng.test_labels).astype(jnp.float32)))
+    np.testing.assert_allclose(float(np.asarray(recs["agg_acc"])[0]),
+                               base_acc, atol=1e-6)
+    # everyone aged exactly one round during the blackout
+    np.testing.assert_array_equal(np.asarray(recs["staleness"])[1],
+                                  np.ones(cfg.num_devices))
+
+
+def test_buffered_backlog_changes_arrival_fold_in(setup):
+    """buffer_stale=True folds the straggler's banked rounds in on arrival;
+    with buffering off the same schedule must aggregate differently."""
+    cfg, shards, seed_set, test = setup
+    rounds = 3
+    mask = np.ones((rounds, cfg.num_devices), np.float32)
+    mask[0, 1] = mask[1, 1] = 0.0
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds=rounds)
+    _, _, f_buf = eng.run_rounds_fused(
+        eng.init_state(params0), rounds, upload_mask=mask,
+        hetero=HeteroConfig(decay="none", buffer_stale=True))
+    _, _, f_drop = eng.run_rounds_fused(
+        eng.init_state(params0), rounds, upload_mask=mask,
+        hetero=HeteroConfig(decay="none", buffer_stale=False))
+    assert any(not np.allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+               for a, b in zip(jax.tree_util.tree_leaves(f_buf),
+                               jax.tree_util.tree_leaves(f_drop)))
+
+
+def test_straggler_schedule_rate_and_reproducibility():
+    m = straggler_schedule(32, 0.3, seed=0, rounds=50)
+    assert m.shape == (50, 32)
+    assert 0.55 <= m.mean() <= 0.85          # ~70% arrivals
+    np.testing.assert_array_equal(m, straggler_schedule(32, 0.3, 0, 50))
+    np.testing.assert_array_equal(straggler_schedule(8, 0.0, 1, 4), 1.0)
+
+
+# ------------------------------------------------------------- validation
+def test_hetero_config_validation():
+    with pytest.raises(ValueError, match="straggler_rate"):
+        HeteroConfig(straggler_rate=1.0)
+    with pytest.raises(ValueError, match="decay"):
+        HeteroConfig(decay="linear")
+    with pytest.raises(ValueError, match="gamma"):
+        HeteroConfig(decay="exp", decay_rate=2.0)
+    with pytest.raises(ValueError, match="slow_steps_fraction"):
+        HeteroConfig(slow_steps_fraction=0.0)
+    with pytest.raises(ValueError, match="step_limits"):
+        HeteroConfig(step_limits=(0, 4))
+
+
+def test_hetero_rejects_optimal_aggregation(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    with pytest.raises(ValueError, match="optimal"):
+        eng.run_rounds_fused(eng.init_state(params0), 1,
+                             aggregation="optimal",
+                             hetero=HeteroConfig(straggler_rate=0.1))
+
+
+def test_hetero_rejects_conflicting_participation_models(setup):
+    """straggler_rate > 0 together with an explicit upload_mask or
+    upload_fraction must raise — silently preferring one would run e.g. a
+    30% straggler config as a 10% one."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    het = HeteroConfig(straggler_rate=0.3)
+    mask = np.ones((1, cfg.num_devices), np.float32)
+    with pytest.raises(ValueError, match="not both"):
+        eng.run_rounds_fused(eng.init_state(params0), 1, upload_mask=mask,
+                             hetero=het)
+    with pytest.raises(ValueError, match="not both"):
+        eng.run_rounds_fused(eng.init_state(params0), 1,
+                             upload_fraction=0.9, hetero=het)
+
+
+def test_hetero_requires_fused_engine(setup):
+    cfg, shards, seed_set, test = setup
+    with pytest.raises(ValueError, match="fused"):
+        run_federated_rounds(cfg, shards, seed_set, test, rounds=1,
+                             engine="vmap",
+                             hetero=HeteroConfig(straggler_rate=0.2))
+
+
+# --------------------------------------------------------------- drivers
+@pytest.mark.slow
+def test_run_experiment_hetero_scenario():
+    reports = run_experiment(scenario="hetero", num_devices=6, rounds=2,
+                             n_test=64,
+                             hetero=HeteroConfig(straggler_rate=0.4,
+                                                 slow_fraction=0.5))
+    rep = reports[0]
+    assert len(rep["rounds"]) == 2
+    for r in rep["rounds"]:
+        assert 0.0 <= r["aggregated_acc"] <= 1.0
+        assert len(r["staleness"]) == 6
+    assert rep["staleness"]["max"] >= 0
+    assert rep["comms"] is not None
+
+
+def test_hetero_config_preset():
+    cfg = hetero_config(32)
+    assert cfg.num_devices == 32
+    assert cfg.aggregation == "fedavg_n"
+    cfg = hetero_config(8, acquisitions=3)
+    assert (cfg.num_devices, cfg.acquisitions) == (8, 3)
+
+
+@pytest.mark.slow
+def test_hetero_on_dirichlet_shards_end_to_end(setup):
+    """The scenario's non-IID split + stragglers + profile, end to end on
+    the fused engine (small fleet, CI-sized)."""
+    cfg, _, seed_set, test = setup
+    full = make_digit_dataset(200, seed=9)
+    shards = dirichlet_split(full, cfg.num_devices, alpha=0.5, seed=9)
+    params, reports = run_federated_rounds(
+        cfg, shards, seed_set, test, rounds=2, engine="fused",
+        hetero=HeteroConfig(straggler_rate=0.3, slow_fraction=0.25))
+    assert len(reports) == 2
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(params))

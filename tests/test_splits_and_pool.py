@@ -1,0 +1,121 @@
+"""Partition invariants for the federated splitters + ActivePool dedup.
+
+Hypothesis-free twins of the property tests in test_data_and_pool.py (that
+module skips wholesale when hypothesis is absent): every sample assigned
+exactly once, sizes sum to n with no degenerate shard, alpha controls the
+measured class skew monotonically, and the acquire-dedup regression.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pool import ActivePool
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import dirichlet_split, federated_split
+
+
+def _row_ids(ds) -> np.ndarray:
+    """Stable per-sample fingerprints (image bytes + label) for multiset
+    partition checks — shards don't retain source indices."""
+    flat = np.ascontiguousarray(ds.images.reshape(len(ds), -1))
+    return np.asarray([hash((row.tobytes(), int(lab)))
+                       for row, lab in zip(flat, ds.labels)])
+
+
+def _assert_exact_partition(ds, shards):
+    all_ids = np.sort(np.concatenate([_row_ids(s) for s in shards if len(s)]))
+    np.testing.assert_array_equal(all_ids, np.sort(_row_ids(ds)))
+
+
+# ----------------------------------------------------------- federated_split
+@pytest.mark.parametrize("n,num_devices,unbalance", [
+    (120, 4, 0.3),
+    (97, 8, 0.3),        # odd n, remainder paths
+    (60, 10, 0.95),      # extreme unbalance
+    (50, 49, 0.3),       # num_devices ~ len(ds)
+    (50, 50, 0.3),       # exactly one sample per device
+    (80, 5, 2.0),        # unbalance > 1: raw proportions can go negative
+])
+def test_federated_split_partition_invariants(n, num_devices, unbalance):
+    ds = make_digit_dataset(n, seed=1)
+    shards = federated_split(ds, num_devices, seed=2, unbalance=unbalance)
+    sizes = [len(s) for s in shards]
+    assert len(shards) == num_devices
+    assert sum(sizes) == n
+    assert min(sizes) >= 1               # the degenerate-shard regression
+    _assert_exact_partition(ds, shards)
+
+
+def test_federated_split_rejects_more_devices_than_samples():
+    ds = make_digit_dataset(10, seed=0)
+    with pytest.raises(ValueError, match="num_devices"):
+        federated_split(ds, 11)
+    with pytest.raises(ValueError, match="num_devices"):
+        federated_split(ds, 0)
+
+
+def test_federated_split_deterministic_per_seed():
+    ds = make_digit_dataset(90, seed=3)
+    a = federated_split(ds, 5, seed=7)
+    b = federated_split(ds, 5, seed=7)
+    for sa, sb in zip(a, b):
+        np.testing.assert_array_equal(sa.images, sb.images)
+
+
+# ----------------------------------------------------------- dirichlet_split
+def test_dirichlet_split_partition_invariants():
+    ds = make_digit_dataset(300, seed=4)
+    shards = dirichlet_split(ds, 6, alpha=0.5, seed=5)
+    assert sum(len(s) for s in shards) == 300
+    _assert_exact_partition(ds, shards)
+
+
+def _mean_max_class_share(shards) -> float:
+    shares = []
+    for s in shards:
+        if len(s) >= 10:
+            shares.append((np.bincount(s.labels, minlength=10) / len(s)).max())
+    return float(np.mean(shares))
+
+
+def test_dirichlet_alpha_controls_skew_monotonically():
+    """Lower alpha ⇒ more label skew: the mean max-class share per device
+    must decrease as alpha grows (averaged over seeds to kill draw noise)."""
+    ds = make_digit_dataset(600, seed=6)
+    means = []
+    for alpha in (0.1, 1.0, 10.0):
+        vals = [_mean_max_class_share(dirichlet_split(ds, 6, alpha=alpha,
+                                                      seed=s))
+                for s in range(3)]
+        means.append(np.mean(vals))
+    assert means[0] > means[1] > means[2], means
+    assert means[0] > 0.4                 # alpha=0.1 is genuinely non-IID
+    assert means[2] < 0.25                # alpha=10 is near-uniform (0.1 ideal)
+
+
+# ------------------------------------------------------------- ActivePool
+def test_active_pool_acquire_dedups_against_labeled():
+    """Regression: re-acquiring an already-labeled index used to append it
+    again, double-counting it in len(labeled) — the n_i that weights
+    Eq. 1 (fedavg_n) — and double-sampling it in training gathers."""
+    pool = ActivePool.create(30, initial_labeled=[3, 7], seed=0)
+    new = pool.acquire(np.array([3, 7, 9]), np.array([0, 1, 2]))
+    np.testing.assert_array_equal(new, [9])
+    assert sorted(pool.labeled.tolist()) == [3, 7, 9]
+    # repeat the same acquisition: nothing new, count stable
+    new = pool.acquire(np.array([3, 7, 9]), np.array([0, 1, 2]))
+    assert len(new) == 0
+    assert len(pool.labeled) == 3
+
+
+def test_active_pool_acquire_dedups_within_selection():
+    pool = ActivePool.create(30, seed=0)
+    new = pool.acquire(np.array([5, 5, 6]), np.array([0, 1, 2]))
+    assert sorted(new.tolist()) == [5, 6]
+    assert len(pool.labeled) == 2
+    assert len(np.unique(pool.labeled)) == len(pool.labeled)
+
+
+def test_active_pool_unlabeled_consistent_after_dedup():
+    pool = ActivePool.create(10, seed=1)
+    pool.acquire(np.arange(10), np.array([0, 0, 1, 2]))
+    assert len(pool.labeled) + len(pool.unlabeled) == 10
