@@ -36,6 +36,7 @@ BENCHES = [
     ("massive_fleet", "benchmarks.edge_loop_bench", "bench_massive_fleet"),
     ("comms", "benchmarks.edge_loop_bench", "bench_comms_sweep"),
     ("hetero", "benchmarks.bench_hetero", "bench_hetero"),
+    ("async", "benchmarks.bench_async", "bench_async"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

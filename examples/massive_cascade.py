@@ -2,7 +2,7 @@
 each, federated averaging collapses, and cascading recovers accuracy.
 Includes the beyond-paper pipelined cascade schedule.
 
-    PYTHONPATH=src python examples/massive_cascade.py [--devices 12]
+    PYTHONPATH=src python examples/massive_cascade.py [--devices 12] [--quick]
 """
 import argparse
 
@@ -17,11 +17,15 @@ from repro.data.digits import make_digit_dataset
 from repro.data.federated_split import federated_split
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=10)
     ap.add_argument("--images-per-device", type=int, default=40)
-    args = ap.parse_args()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny fleet/budgets (CI smoke-test sizing)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.devices, args.images_per_device = 4, 20
 
     R = args.images_per_device // 10
     cfg = FederatedALConfig(num_devices=args.devices, acquisitions=R,

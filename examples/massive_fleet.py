@@ -13,8 +13,13 @@ Optionally shards the device axis across a JAX mesh: run with
 and each of the 8 fake host devices simulates 8 edge devices; the fused
 aggregation turns into an all_gather of per-device scalars plus one psum.
 
-    PYTHONPATH=src python examples/massive_fleet.py
+    PYTHONPATH=src python examples/massive_fleet.py [--quick]
+
+``--quick`` shrinks to an 8-device single-round fleet (CI smoke-test
+sizing, tests/test_examples.py).
 """
+import argparse
+
 import numpy as np
 
 import jax
@@ -29,12 +34,16 @@ from repro.data.federated_split import federated_split
 from repro.launch.mesh import make_device_mesh
 
 
-def main():
-    rounds = 2
-    cfg = massive_config(num_devices=64, seed=0)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny fleet/budgets (CI smoke-test sizing)")
+    args = ap.parse_args(argv)
+    rounds = 1 if args.quick else 2
+    cfg = massive_config(num_devices=8 if args.quick else 64, seed=0)
     full = make_digit_dataset(MASSIVE_SAMPLES_PER_DEVICE * cfg.num_devices,
                               seed=0)
-    test = make_digit_dataset(400, seed=1)
+    test = make_digit_dataset(100 if args.quick else 400, seed=1)
     seed_set = make_digit_dataset(cfg.initial_train, seed=2)
     shards = federated_split(full, cfg.num_devices, seed=3)
     print(f"devices={cfg.num_devices} "

@@ -15,13 +15,18 @@ from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import build_model
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b", choices=ARCH_IDS)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--quick", action="store_true",
+                    help="1-seq short prompt/decode (CI smoke-test sizing, "
+                         "tests/test_examples.py)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.batch, args.prompt_len, args.tokens = 1, 8, 3
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)

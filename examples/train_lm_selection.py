@@ -32,7 +32,7 @@ def lm_100m() -> ModelConfig:
         max_seq_len=512)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--groups", type=int, default=2, help="federated groups")
@@ -44,9 +44,16 @@ def main():
     ap.add_argument("--select", default="entropy",
                     choices=["entropy", "bald", "vr", "none"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
-    args = ap.parse_args()
+    ap.add_argument("--quick", action="store_true",
+                    help="2-layer reduced model + 2 steps (CI smoke-test "
+                         "sizing, tests/test_examples.py)")
+    args = ap.parse_args(argv)
 
     cfg = lm_100m()
+    if args.quick:
+        args.steps, args.batch, args.seq = 2, 2, 32
+        args.candidates, args.sync_every = 4, 2
+        cfg = cfg.reduced(vocab_size=2048, max_seq_len=64)
     model = build_model(cfg)
     n_params = sum(int(np.prod(s.shape)) for s in
                    jax.tree_util.tree_leaves(jax.eval_shape(model.init, jax.random.key(0))))

@@ -1,0 +1,598 @@
+"""Rounds-free async aggregation: a continuous-time fog-node event loop.
+
+Every engine so far — even the straggler-tolerant hetero rounds — is
+ROUND-synchronous: the fog node aggregates at a global barrier, and a
+device either makes the barrier or banks its delta for the next one.  Real
+fog deployments (Hussain, *Federated Fog Computing for Remote Industry 4.0
+Applications*; Kumar & Srirama, *Fog enabled distributed training
+architecture for federated learning*) do not run barriers: devices finish
+whenever they finish, and the fog node aggregates on a TIMER or when a
+QUORUM of uploads has buffered — the FedAsync (Xie et al.) / FedBuff
+(Nguyen et al.) protocol family.
+
+This module makes that a first-class engine, still honoring the repo's
+compile-once / one-dispatch discipline:
+
+* **Continuous-time device model.** Each device draws a completion latency
+  for every local round it is dispatched (``AsyncConfig.dist``:
+  exponential, lognormal, or deterministic, around a per-device mean from
+  ``device_latency_means`` — a log-spaced slow/fast skew profile or
+  explicit means).  Latency is SIMULATED seconds: the virtual clock it
+  advances is telemetry, not host wall time.
+
+* **Quorum-of-K or timer.** The fog node aggregates at
+  ``t_event = min(K-th smallest completion time, t_last + timer)`` —
+  whichever fires first.  ``quorum=1`` is FedAsync (immediate
+  staleness-decayed mixing per completion), ``quorum=K`` is FedBuff
+  (K-buffered aggregation), ``timer=τ`` alone is a pure wall-clock
+  aggregation cadence.  Both knobs are TRACED (the quorum is a sorted-array
+  index, the timer a scalar), so sweeping K or τ reuses the compiled
+  executable.
+
+* **One dispatch.** The event loop lowers to a ``lax.scan`` over
+  aggregation events.  The priority queue is encoded as a per-device
+  next-completion-time array ``[D]``: the "pop" is a ``jnp.sort`` /
+  ``jnp.argmin`` over that array inside the trace — no host round-trip
+  ever sequences events.  Per event, the candidate local round runs for
+  the WHOLE fleet (static shapes) and commits only for devices that were
+  actually dispatched, exactly the masking discipline the hetero engine
+  uses.
+
+* **Composition.** Uploads are aggregated in delta form
+  ``W ← W + η·Σ αᵢ·C(Δᵢ)`` with ``αᵢ ∝ rawᵢ·decay(staleness_i)``
+  (``aggregation.staleness_weights`` — the same staleness machinery as
+  ``core.hetero``), so the comms codecs (``core.comms``) compress each
+  uploaded delta unchanged, ``EngineState.pending`` carries the in-flight
+  delta and ``EngineState.staleness`` the model-version age, and the
+  shard_map mesh path works unchanged (completion times and staleness are
+  two more all_gather'd ``[D]`` scalars; pending stays device-local).
+
+* **Exact reduction.** With ``mean_latency=0`` and ``quorum=D`` every
+  device completes instantly and every event is a full barrier: the event
+  loop IS ``EdgeEngine.run_rounds_fused`` (same key schedule, same Eq. 1
+  weights) to float tolerance (≤ 1e-5, delta-form summation order only),
+  under vmap and under the mesh — pinned by ``tests/test_async_engine.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg_mod
+from repro.core import comms as comms_mod
+from repro.core import counters, vpool
+from repro.core.hetero import DECAYS
+
+DISTS = ("exp", "lognormal", "det")
+
+_ASYNC_AGGREGATIONS = ("average", "weighted", "fedavg_n")
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Static policy for the rounds-free async event loop.
+
+    Trigger (at least one of ``quorum`` / ``timer`` must be set):
+
+    ``quorum``
+        int ≥ 1 or None (default ``None``).  Aggregate as soon as this many
+        devices have completed since their dispatch — the K-th smallest
+        entry of the completion-time array.  Values above the fleet size
+        clamp to D (a full barrier).  ``1`` = FedAsync, ``K`` = FedBuff.
+    ``timer``
+        float > 0, SIMULATED seconds, or None (default ``None``).
+        Aggregate at most this long after the previous event, even if the
+        quorum has not filled (possibly aggregating nothing — the fog
+        model is then re-dispatched unchanged).
+
+    Latency model (all times in simulated seconds):
+
+    ``dist``
+        ``"exp" | "lognormal" | "det"`` (default ``"exp"``).  Shape of the
+        per-round completion-latency draw around each device's mean.
+        ``det`` draws the mean exactly — ``mean_latency=0`` with ``det``
+        (or any dist; the mean scales the draw) is the synchronous limit.
+    ``mean_latency``
+        float ≥ 0, simulated seconds (default ``1.0``).  Fleet-wide
+        geometric-mean completion latency.
+    ``latency_skew``
+        float ≥ 1, dimensionless (default ``1.0``).  Ratio of the slowest
+        device's mean latency to the fastest; per-device means are
+        log-spaced over ``[mean/√skew, mean·√skew]`` (device 0 fastest).
+    ``device_means``
+        optional explicit per-device mean latencies, simulated seconds
+        (tuple of length D; overrides ``mean_latency``/``latency_skew``).
+    ``sigma``
+        float > 0, dimensionless (default ``0.5``).  Lognormal shape
+        parameter; the draw is mean-preserving
+        (``mean·exp(σZ − σ²/2)``).  Ignored for other dists.
+
+    Aggregation:
+
+    ``decay`` / ``decay_rate``
+        Staleness discount for Eq. 1 weights, measured in MODEL VERSIONS
+        (committed aggregation events) between a device's dispatch and its
+        arrival: ``exp`` → ``rate**s`` (rate ∈ (0, 1], default kind) …
+        ``poly`` → ``(1+s)**-rate`` (Xie et al.) … ``none`` → 1.
+        Defaults ``"poly"`` / ``0.5`` — the FedAsync paper's choice; the
+        hetero engine defaults to ``exp`` because its staleness unit is
+        whole rounds.
+    ``mix_rate``
+        float in (0, 1], dimensionless (default ``1.0``).  Server mixing
+        rate η: ``W ← W + η·Σ αᵢ·Δᵢ``.  Must be 1.0 to reduce exactly to
+        the synchronous round.
+    ``seed``
+        int (default ``0``).  Seeds the latency draws (independent of the
+        experiment seed, so the same fleet timing can be replayed across
+        AL configs).
+    """
+
+    quorum: Optional[int] = None
+    timer: Optional[float] = None
+    dist: str = "exp"
+    mean_latency: float = 1.0
+    latency_skew: float = 1.0
+    device_means: Optional[Tuple[float, ...]] = None
+    sigma: float = 0.5
+    decay: str = "poly"
+    decay_rate: float = 0.5
+    mix_rate: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.quorum is None and self.timer is None:
+            raise ValueError(
+                "AsyncConfig needs a trigger: set quorum (K completions), "
+                "timer (simulated seconds), or both")
+        if self.quorum is not None and self.quorum < 1:
+            raise ValueError(f"quorum must be >= 1, got {self.quorum}")
+        if self.timer is not None and self.timer <= 0.0:
+            raise ValueError(f"timer must be > 0 simulated seconds, "
+                             f"got {self.timer}")
+        if self.dist not in DISTS:
+            raise ValueError(f"unknown latency dist {self.dist!r}: "
+                             f"use {' | '.join(DISTS)}")
+        if self.mean_latency < 0.0:
+            raise ValueError(
+                f"mean_latency must be >= 0, got {self.mean_latency}")
+        if self.latency_skew < 1.0:
+            raise ValueError(
+                f"latency_skew is slowest/fastest >= 1, "
+                f"got {self.latency_skew}")
+        if self.sigma <= 0.0:
+            raise ValueError(f"sigma must be > 0, got {self.sigma}")
+        if self.decay not in DECAYS:
+            raise ValueError(f"unknown decay {self.decay!r}: "
+                             f"use {' | '.join(DECAYS)}")
+        if self.decay_rate <= 0.0:
+            raise ValueError(f"decay_rate must be > 0, got {self.decay_rate}")
+        if self.decay == "exp" and self.decay_rate > 1.0:
+            raise ValueError(
+                f"exp decay_rate is the per-version factor gamma in (0, 1], "
+                f"got {self.decay_rate}")
+        if not 0.0 < self.mix_rate <= 1.0:
+            raise ValueError(f"mix_rate must be in (0, 1], "
+                             f"got {self.mix_rate}")
+
+
+def device_latency_means(cfg: AsyncConfig, num_devices: int) -> np.ndarray:
+    """Per-device mean completion latency ``[D] float32``, simulated seconds.
+
+    Explicit ``cfg.device_means`` win (shape-checked); otherwise means are
+    log-spaced over ``[mean/√skew, mean·√skew]`` so slowest/fastest =
+    ``latency_skew`` and the geometric mean is ``mean_latency`` (device 0
+    fastest — deterministic, so sweeps and tests can reason about order
+    statistics).  Host-side numpy; the result enters the compiled event
+    loop as a traced ``[D]`` argument, so changing the latency profile
+    does NOT recompile.
+    """
+    if cfg.device_means is not None:
+        means = np.asarray(cfg.device_means, np.float32)
+        if means.shape != (num_devices,):
+            raise ValueError(f"device_means shape {means.shape} != "
+                             f"({num_devices},)")
+        if (means < 0).any():
+            raise ValueError("device_means must be >= 0 simulated seconds")
+        return means
+    if cfg.latency_skew == 1.0 or num_devices == 1:
+        return np.full((num_devices,), cfg.mean_latency, np.float32)
+    half = np.sqrt(cfg.latency_skew)
+    return (cfg.mean_latency
+            * np.geomspace(1.0 / half, half, num_devices)).astype(np.float32)
+
+
+def _draw_latency(cfg_key, key, means):
+    """One completion-latency draw per device ``[D]``, simulated seconds.
+
+    ``cfg_key`` is the static ``(dist, sigma)`` pair.  All draws scale the
+    per-device mean, so ``mean == 0`` is exactly zero latency under every
+    dist (the synchronous limit the equivalence contract relies on).
+    """
+    dist, sigma = cfg_key
+    if dist == "det":
+        return means
+    if dist == "exp":
+        return means * jax.random.exponential(key, means.shape)
+    z = jax.random.normal(key, means.shape)
+    return means * jnp.exp(sigma * z - 0.5 * sigma * sigma)
+
+
+def _where_mask(mask, on_true, on_false):
+    """Leafwise ``jnp.where`` with a ``[D]`` mask broadcast to each leaf's
+    leading device axis."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(
+            mask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b),
+        on_true, on_false)
+
+
+def _get_async_jit(engine, events: int, aggregation: str, comms_key,
+                   async_key):
+    """The whole event loop — every aggregation event, every candidate
+    device round, every staleness-decayed delta fold-in — as ONE compiled
+    program (a ``lax.scan`` over aggregation events).
+
+    ``async_key`` is the STATIC part of the ``AsyncConfig``:
+    ``(dist, sigma, has_quorum, has_timer, decay, decay_rate)``.  The
+    quorum size, timer period, mix rate, and per-device latency means all
+    arrive as TRACED arguments — sweeping any of them (the bench does)
+    reuses the executable.
+
+    Per scan step (one aggregation event):
+
+    1. devices flagged for dispatch at the previous event take the fog
+       model, run their local AL round (the candidate round runs for the
+       whole fleet; commits are masked), bank their delta in ``pending``,
+       and draw a completion latency → ``next_done = t_now + L``;
+    2. the event time is ``min(K-th smallest next_done, t_now + timer)``
+       (the argmin/sort "pop" of the encoded priority queue);
+    3. devices with ``next_done ≤ t_event`` ARRIVE: their pending deltas
+       (compressed by the comms codec if configured) fold into the fog
+       model with ``αᵢ ∝ rawᵢ·decay(stalenessᵢ)`` weights; a zero-arrival
+       timer event re-dispatches the fog model unchanged (and, because no
+       model version was committed, ages nobody);
+    4. arrivals reset staleness and are flagged for re-dispatch; everyone
+       still in flight ages by one model version iff a commit happened.
+    """
+    from repro.core.engine import _compiled
+    from repro.core.federated import _donate_argnums
+    from repro.launch.mesh import DEVICE_AXIS
+
+    def build():
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        compress = comms_key is not None and comms_key[0] != "none"
+        use_ef = compress and comms_key[2]
+        cc = (comms_mod.CommsConfig(compression=comms_key[0],
+                                    topk_fraction=comms_key[1],
+                                    error_feedback=comms_key[2])
+              if compress else None)
+        dist, sigma, has_quorum, has_timer, decay, decay_rate = async_key
+        dist_key = (dist, sigma)
+        step = engine._acquisition_step(False)
+        R = engine.cfg.acquisitions
+        round_unroll = R if engine.unroll else 1
+        has_val = engine.test_images is not None
+        mesh = engine.mesh
+        axis = DEVICE_AXIS if mesh is not None else None
+        D = engine.num_devices
+        D_local = D // (1 if mesh is None else mesh.shape[DEVICE_AXIS])
+        trainer = engine.trainer
+        eval_fn = trainer.eval_logits_raw
+        tmap = jax.tree_util.tree_map
+
+        def gather(v):  # local [D_local] per-device scalar → global [D]
+            return v if axis is None else jax.lax.all_gather(
+                v, axis, tiled=True)
+
+        def local(v):   # global [D] → this shard's [D_local] slice
+            if axis is None:
+                return v
+            off = jax.lax.axis_index(axis) * D_local
+            return jax.lax.dynamic_slice(v, (off,), (D_local,))
+
+        def events_all(state, images, labels, seed_x, seed_y, val_x, val_y,
+                       keys_all, lat_keys, means_g, quorum, timer, mix_rate):
+            def one_event(carry, xs):
+                (fog, params, opt_state, pool, rng, residual, pending,
+                 staleness, next_done, dispatch, t_now) = carry
+                keys_r, lat_key = xs
+
+                # ---- 1. dispatch + candidate round (masked commit)
+                fog_b = tmap(lambda a: jnp.broadcast_to(
+                    a[None], (D_local,) + a.shape), fog)
+                params = _where_mask(dispatch, fog_b, params)
+                opt_state = _where_mask(dispatch, trainer.opt.init(params),
+                                        opt_state)
+                params_base = params
+
+                def device_round(c, images_d, labels_d):
+                    return jax.lax.scan(
+                        lambda cc_, _: step(cc_, images_d, labels_d,
+                                            seed_x, seed_y, None, None),
+                        c, None, length=R, unroll=round_unroll)
+
+                (p2, o2, pool2, rng2), _ = jax.vmap(device_round)(
+                    (params, opt_state, pool, keys_r), images, labels)
+                params = _where_mask(dispatch, p2, params)
+                opt_state = _where_mask(dispatch, o2, opt_state)
+                pool = _where_mask(dispatch, pool2, pool)
+                rng = jnp.where(dispatch > 0, rng2, rng)
+                pending = _where_mask(
+                    dispatch, tmap(jnp.subtract, params, params_base),
+                    pending)
+                # same key on every shard → consistent global latency draw
+                lat_g = _draw_latency(dist_key, lat_key, means_g)
+                next_done = jnp.where(dispatch > 0, t_now + local(lat_g),
+                                      next_done)
+
+                # ---- 2. the event: quorum-of-K or timer, whichever first
+                nd_g = gather(next_done)
+                inf = jnp.float32(jnp.inf)
+                t_quorum = (jnp.sort(nd_g)[jnp.clip(quorum, 1, D) - 1]
+                            if has_quorum else inf)
+                t_timer = t_now + timer if has_timer else inf
+                t_event = jnp.minimum(t_quorum, t_timer)
+                arrived_g = (nd_g <= t_event).astype(jnp.float32)
+                arrived_l = local(arrived_g)
+                arrived_any = jnp.sum(arrived_g) > 0
+
+                # ---- 3. staleness-decayed Eq. 1 over the arrivals
+                counts_g = gather(
+                    jax.vmap(vpool.n_labeled)(pool).astype(jnp.float32))
+                if has_val:
+                    accs_g = gather(agg_mod.stacked_accuracy(
+                        eval_fn, params, val_x, val_y))
+                else:
+                    accs_g = jnp.zeros_like(counts_g)
+                if aggregation == "average":
+                    raw = jnp.ones((D,), jnp.float32)
+                elif aggregation == "weighted":
+                    raw = accs_g
+                else:  # fedavg_n
+                    raw = counts_g
+                stale_g = gather(staleness)
+                w_g = agg_mod.staleness_weights(
+                    raw, stale_g, arrived_g, kind=decay, rate=decay_rate)
+                # zero-arrival timer event: aggregate NOTHING (the uniform
+                # fallback of normalize_weights would fold every in-flight
+                # delta in early AND leave it pending — double-applying it
+                # on its real arrival)
+                w_g = jnp.where(arrived_any, w_g, jnp.zeros_like(w_g))
+
+                upload = (tmap(jnp.add, pending, residual) if use_ef
+                          else pending)
+                if compress:
+                    qkeys = jax.vmap(
+                        lambda k: jax.random.fold_in(k, 0x636F6D))(keys_r)
+                    sent = jax.vmap(
+                        lambda k, d: comms_mod.compress_tree(cc, k, d))(
+                            qkeys, upload)
+                    if use_ef:
+                        # EF updates on actual communication only: an
+                        # in-flight device transmitted nothing this event
+                        residual = _where_mask(
+                            arrived_l, tmap(jnp.subtract, upload, sent),
+                            residual)
+                else:
+                    sent = upload
+                agg_delta = agg_mod.weighted_sum_stacked(sent, local(w_g))
+                if axis is not None:
+                    agg_delta = jax.lax.psum(agg_delta, axis)
+                fog_new = tmap(lambda f, d: f + mix_rate * d, fog, agg_delta)
+                fog = tmap(lambda a, b: jnp.where(arrived_any, a, b),
+                           fog_new, fog)
+
+                # ---- 4. bookkeeping: re-dispatch arrivals, age the rest
+                # (staleness is measured in committed model versions, so a
+                # zero-arrival event ages nobody).  A delivered delta
+                # clears its pending slot — the buffer holds ONLY
+                # still-in-flight work (an arrival's next dispatch would
+                # overwrite it anyway, but the returned state must not
+                # carry already-applied deltas)
+                pending = _where_mask(
+                    arrived_l, tmap(jnp.zeros_like, pending), pending)
+                staleness = jnp.where(
+                    arrived_l > 0, 0,
+                    staleness + arrived_any.astype(jnp.int32))
+                dispatch = arrived_l
+                t_now = t_event
+
+                rec = {"weights": w_g, "upload_mask": arrived_g,
+                       "n_labeled": counts_g, "staleness": stale_g,
+                       "sim_time": t_event,
+                       "arrivals": jnp.sum(arrived_g),
+                       "timer_fired": jnp.logical_and(
+                           jnp.isfinite(t_timer), t_timer <= t_quorum)}
+                if has_val:
+                    rec["device_accs"] = accs_g
+                    preds = jnp.argmax(eval_fn(fog, val_x), -1)
+                    rec["agg_acc"] = jnp.mean(
+                        (preds == val_y).astype(jnp.float32))
+                return (fog, params, opt_state, pool, rng, residual,
+                        pending, staleness, next_done, dispatch,
+                        t_now), rec
+
+            # prologue encoded as carry init: everyone is freshly
+            # dispatched the fog model (= any state row — init/set_params
+            # broadcast identical rows) at t = 0
+            fog0 = tmap(lambda a: a[0], state.params)
+            carry = (fog0, state.params, state.opt_state, state.pool,
+                     state.rng, state.residual, state.pending,
+                     state.staleness,
+                     jnp.zeros((D_local,), jnp.float32),
+                     jnp.ones((D_local,), jnp.float32),
+                     jnp.float32(0.0))
+            carry, recs = jax.lax.scan(one_event, carry,
+                                       (keys_all, lat_keys))
+            (fog, params, opt_state, pool, rng, residual, pending,
+             staleness, *_) = carry
+            out_state = type(state)(params, opt_state, pool, rng,
+                                    residual, pending, staleness)
+            return out_state, recs, fog
+
+        if mesh is not None:
+            dev = P(DEVICE_AXIS)
+            events_all = shard_map(
+                events_all, mesh=mesh,
+                in_specs=(dev, dev, dev, P(), P(), P(), P(),
+                          P(None, DEVICE_AXIS), P(), P(), P(), P(), P()),
+                # recs and the fog model are replicated (all_gather / psum
+                # results); state stays sharded
+                out_specs=(dev, P(), P()), check_rep=False)
+
+        return jax.jit(events_all, donate_argnums=_donate_argnums(0))
+
+    key = engine._cache_key("async_events", False) + (
+        events, aggregation, comms_key, async_key)
+    return _compiled(key, build)
+
+
+def run_events_fused(engine, state, events: int, *,
+                     async_cfg: AsyncConfig,
+                     aggregation: str = "fedavg_n",
+                     comms=None, start_event: int = 0):
+    """``events`` fog aggregation events — rounds-free FedAsync/FedBuff
+    dynamics — in ONE dispatch.
+
+    ``engine`` is an ``EdgeEngine`` (optionally mesh-sharded); ``state`` an
+    ``EngineState`` whose param rows are identical (the init/re-dispatch
+    protocol every driver follows).  ``aggregation`` ∈ average | weighted |
+    fedavg_n — ``optimal`` is argmax selection with no Eq. 1 weights for
+    staleness decay to act on, and is rejected (same contract as hetero).
+    ``comms`` (``core.comms.CommsConfig``) compresses each uploaded delta
+    in-compile with error-feedback residuals in ``state.residual``.
+
+    Chaining: a second call continues the fog model, pools, residuals,
+    and staleness counters, but RESTARTS the virtual clock — every device
+    is freshly dispatched at t = 0 (the prologue), so work that was still
+    in flight when the previous call ended is re-run from the new
+    dispatch, not delivered.  Pass ``start_event`` = events completed so
+    far so the key and latency schedules don't replay the first call's
+    randomness (the ``run_rounds_fused(start_round=...)`` stale-seed
+    contract).
+
+    Returns ``(state, recs, fog_params)``:
+
+    * ``state`` — the final fleet state; ``pending`` holds each device's
+      still-in-flight delta and ``staleness`` its age in model versions;
+    * ``recs`` — per-event telemetry stacked over the leading event axis:
+      ``sim_time`` (simulated seconds of each aggregation event),
+      ``upload_mask`` (the arrivals), ``arrivals`` (their count),
+      ``timer_fired`` (whether the timer beat the quorum), ``weights``
+      (the staleness-decayed Eq. 1 alphas), ``staleness`` (pre-aggregation
+      ages), ``n_labeled``, and — when the engine has a validation set —
+      ``device_accs`` / ``agg_acc``;
+    * ``fog_params`` — the fog model after the last event.
+
+    With ``async_cfg.mean_latency == 0`` (and ``device_means`` unset/zero)
+    and ``quorum >= D``, every event is a full barrier and the result
+    matches ``run_rounds_fused`` ≤ 1e-5.
+    """
+    if aggregation not in _ASYNC_AGGREGATIONS:
+        raise ValueError(
+            f"async aggregation must be one of "
+            f"{' | '.join(_ASYNC_AGGREGATIONS)}, got {aggregation!r} "
+            f"('optimal' has no Eq. 1 weights for staleness decay)")
+    if aggregation == "weighted" and engine.test_images is None:
+        raise ValueError(
+            "aggregation='weighted' scores devices on a validation set; "
+            "construct EdgeEngine with test_set")
+    engine._check_capacity(state, rounds=events)
+    D = engine.num_devices
+
+    comms_key = None
+    if comms is not None and comms.compression != "none":
+        comms_key = (comms.compression, comms.topk_fraction,
+                     comms.error_feedback)
+        if comms.error_feedback and not jax.tree_util.tree_leaves(
+                state.residual):
+            state = state._replace(residual=jax.tree_util.tree_map(
+                jnp.zeros_like, state.params))
+    if comms_key is None or not comms_key[2]:
+        state = state._replace(residual=())
+
+    # pending (in-flight deltas) and staleness (model-version ages) are the
+    # event loop's working state.  The prologue freshly dispatches EVERY
+    # device at t = 0, so ages start at zero — carried staleness (from a
+    # previous call or a hetero run) would wrongly decay event-0 uploads —
+    # and any carried pending is overwritten by the first dispatch before
+    # the first aggregation reads it.
+    if not jax.tree_util.tree_leaves(state.pending):
+        state = state._replace(pending=jax.tree_util.tree_map(
+            jnp.zeros_like, state.params))
+    state = state._replace(staleness=jnp.zeros((D,), jnp.int32))
+    state = engine._shard_state(state)
+
+    async_key = (async_cfg.dist, float(async_cfg.sigma),
+                 async_cfg.quorum is not None, async_cfg.timer is not None,
+                 async_cfg.decay, float(async_cfg.decay_rate))
+    means = jnp.asarray(device_latency_means(async_cfg, D))
+    # event 0 consumes the incoming state's keys; later events follow the
+    # absolute-index schedule (the run_rounds_fused chaining contract)
+    later = [engine.device_keys(start_event + t) for t in range(1, events)]
+    keys_all = (jnp.stack([state.rng] + later) if later
+                else state.rng[None])
+    lat_base = jax.random.key(async_cfg.seed + 0x6C6174)
+    lat_keys = jax.vmap(lambda t: jax.random.fold_in(lat_base, t))(
+        jnp.arange(start_event, start_event + events))
+    quorum = jnp.int32(async_cfg.quorum if async_cfg.quorum is not None
+                       else D)
+    timer = jnp.float32(async_cfg.timer if async_cfg.timer is not None
+                        else 0.0)
+    fn = _get_async_jit(engine, events, aggregation, comms_key, async_key)
+    counters.count_dispatch()
+    state, recs, fog = fn(state, engine.images, engine.labels,
+                          engine.seed_images, engine.seed_labels,
+                          engine.test_images, engine.test_labels,
+                          keys_all, lat_keys, means, quorum, timer,
+                          jnp.float32(async_cfg.mix_rate))
+    return state, recs, fog
+
+
+def async_telemetry(recs) -> dict:
+    """Host-side wall-clock-vs-accuracy telemetry from the fused event
+    recs: simulated-seconds trajectory (not just event counts), arrival
+    statistics, and staleness summary."""
+    from repro.core.hetero import summarize_staleness
+
+    sim = np.asarray(recs["sim_time"], np.float64)
+    arrivals = np.asarray(recs["arrivals"], np.float64)
+    out = {
+        "events": int(sim.shape[0]),
+        "sim_seconds_total": float(sim[-1]) if sim.size else 0.0,
+        "sim_time_per_event": [float(t) for t in sim],
+        "mean_arrivals_per_event": float(arrivals.mean()),
+        "timer_fired_events": int(np.asarray(recs["timer_fired"]).sum()),
+        "staleness": summarize_staleness(recs["staleness"]),
+    }
+    if "agg_acc" in recs:
+        accs = np.asarray(recs["agg_acc"], np.float64)
+        out["final_acc"] = float(accs[-1])
+        out["accuracy_vs_sim_time"] = [
+            {"event": t, "sim_seconds": float(sim[t]),
+             "accuracy": float(accs[t])}
+            for t in range(sim.shape[0])
+        ]
+    return out
+
+
+def report_telemetry(round_reports) -> dict:
+    """The same wall-clock-vs-accuracy summary as ``async_telemetry``, built
+    from the per-event report dicts ``run_federated_rounds(engine="async")``
+    emits (the ``run_experiment`` contract: every async repeat carries an
+    ``"async"`` telemetry entry).  Reassembles the stacked recs the reports
+    were flattened from and delegates — one summary implementation."""
+    return async_telemetry({
+        "sim_time": [r["sim_time"] for r in round_reports],
+        "arrivals": [r["arrivals"] for r in round_reports],
+        "timer_fired": [r["timer_fired"] for r in round_reports],
+        "staleness": [r["staleness"] for r in round_reports],
+        "agg_acc": [r["aggregated_acc"] for r in round_reports],
+    })

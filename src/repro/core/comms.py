@@ -75,13 +75,25 @@ def index_bytes(n: int) -> int:
 class CommsConfig:
     """Static communication policy for a federated experiment.
 
-    ``compression`` selects the uplink codec (``none | int8 | topk``);
-    ``topk_fraction`` is the per-tensor fraction of entries a ``topk``
-    upload keeps (exactly ``ceil(fraction·n)`` per tensor, min 1);
-    ``error_feedback`` carries the compression residual across rounds in
-    engine state; ``upload_samples`` additionally bills each newly-labeled
-    sample (image + int32 label) to the uplink — the "ship the data, not
-    the model" scenario family, accounting-only.
+    ``compression``
+        ``"none" | "int8" | "topk"`` (default ``"none"``).  Uplink codec
+        applied in-compile to each device's parameter DELTA on the fused
+        and async engines; ``"none"`` means byte accounting only.
+    ``topk_fraction``
+        float in (0, 1], dimensionless per-tensor fraction (default
+        ``0.05``).  A ``topk`` upload keeps exactly ``ceil(fraction·n)``
+        entries per n-element tensor (min 1); each kept entry costs
+        index + value bytes on the simulated wire.
+    ``error_feedback``
+        bool (default ``True``).  Carry the compression residual
+        ``e ← (Δ+e) − C(Δ+e)`` across rounds in ``EngineState.residual``
+        (Seide et al. 2014 / Karimireddy et al. 2019); updated only on
+        actual uploads.  Ignored while ``compression="none"``.
+    ``upload_samples``
+        bool (default ``False``).  Additionally bill each newly-labeled
+        sample (float32 image + int32 label bytes) to the uplink — the
+        "ship the data, not the model" scenario family; accounting-only,
+        nothing enters the compiled program.
     """
 
     compression: str = "none"

@@ -40,6 +40,11 @@ Two extensions take the engine from "one dispatch per device round" to
     all_gather of [D] scalars + a local weighted partial sum + one psum.
     On CPU, test with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+A third execution mode drops the round barrier entirely:
+``EdgeEngine.run_async`` (``core.async_engine``) runs a continuous-time
+FedAsync/FedBuff event loop — per-device completion latencies, fog
+aggregation on a quorum-of-K or timer — still as one compiled dispatch.
+
 The legacy per-device path survives behind ``EdgeEngine.run_round_legacy``
 (same step function, eagerly dispatched per device per acquisition) for
 equivalence testing and as the benchmark baseline.
@@ -666,6 +671,13 @@ class EdgeEngine:
         """T federated rounds (device AL + fog aggregation + re-dispatch) in
         ONE dispatch.
 
+        Units and defaults of the knobs: ``rounds`` is a count of whole
+        barrier rounds; ``upload_fraction`` (default 1.0) is a
+        dimensionless per-device participation probability in (0, 1];
+        ``upload_mask`` entries are truthy = uploaded; ``start_round``
+        (default 0) is an absolute round index; ``aggregation`` defaults
+        to ``"fedavg_n"``; ``comms`` / ``hetero`` default to None (off).
+
         ``aggregation`` ∈ average | weighted | optimal | fedavg_n; the
         default weights Eq. 1 by per-device labeled counts (α_i ∝ n_i, the
         correct weighting for ``federated_split``'s unbalanced shards).
@@ -816,6 +828,21 @@ class EdgeEngine:
                                 self.test_images, self.test_labels,
                                 keys_all, mask_arg, fraction, sl)
         return state, recs, final
+
+    # -------------------------------------------------- async event loop
+    def run_async(self, state: EngineState, events: int, *, async_cfg,
+                  aggregation: str = "fedavg_n", comms=None,
+                  start_event: int = 0):
+        """Rounds-free FedAsync/FedBuff aggregation: ``events`` quorum- or
+        timer-triggered fog aggregation events over a continuous-time
+        device latency model, in ONE dispatch — see
+        ``core.async_engine.run_events_fused`` (this is a thin delegate so
+        the engine's three execution modes live on one object: ``run_round``
+        / ``run_rounds_fused`` / ``run_async``)."""
+        from repro.core.async_engine import run_events_fused
+        return run_events_fused(self, state, events, async_cfg=async_cfg,
+                                aggregation=aggregation, comms=comms,
+                                start_event=start_event)
 
     # ------------------------------------------------------------ drivers
     def run_round(self, state: EngineState, *, record_curves: bool = True):

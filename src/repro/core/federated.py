@@ -23,11 +23,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import acquisition as acq
+from repro.core import async_engine as async_mod
 from repro.core import comms as comms_mod
 from repro.core import counters
 from repro.core import hetero as hetero_mod
 from repro.core.aggregation import (fedavg, fedavg_n, opt_model,
                                     weighted_average)
+from repro.core.async_engine import AsyncConfig
 from repro.core.comms import CommsConfig
 from repro.core.hetero import HeteroConfig
 from repro.core.mc_dropout import mc_logprobs
@@ -39,6 +41,25 @@ from repro.optim import adam
 
 @dataclass(frozen=True)
 class FederatedALConfig:
+    """The experiment's root config (paper Algorithm 1 hyperparameters).
+
+    All counts are dimensionless integers; defaults are the paper's
+    non-massive setting.  ``num_devices`` (default 4) edge devices each
+    run ``acquisitions`` (default 10, paper R ∈ {10..40}) AL steps,
+    labeling ``k_per_acquisition`` (default 10) images from a
+    ``pool_window``-image scored window (default 200) using
+    ``mc_samples`` (default 16) MC-dropout forward passes.  The fog node
+    seeds with ``initial_train`` images (default 20, paper m) trained
+    ``initial_train_steps`` (default 60) optimizer steps; each
+    acquisition retrains ``train_steps_per_acq`` (default 30) steps at
+    learning rate ``lr`` (default 1e-3) with batches of ``batch_size``
+    (default 64; the fused engines train full-batch with masking).
+    ``acquisition_fn`` (default ``"entropy"``) and ``aggregation``
+    (default ``"average"``, Eq. 1) pick the scoring and fog strategies;
+    ``scorer`` (default ``"auto"``) picks the Pallas-vs-jnp scoring path;
+    ``seed`` (default 0) drives every PRNG stream.
+    """
+
     num_devices: int = 4
     initial_train: int = 20          # paper m = 20
     acquisitions: int = 10           # paper R ∈ {10, 20, 30, 40}
@@ -333,6 +354,23 @@ def _check_hetero_engine(hetero: Optional[HeteroConfig], engine: str) -> None:
             "use run_federated_rounds(..., engine='fused', hetero=...)")
 
 
+def _check_async_engine(async_cfg: Optional[AsyncConfig], engine: str,
+                        hetero: Optional[HeteroConfig] = None) -> None:
+    """The continuous-time event loop is its own engine: an ``AsyncConfig``
+    on a round-synchronous engine (or a round-synchronous ``HeteroConfig``
+    on the async engine — the latency model IS the straggler model there)
+    would silently run the wrong participation dynamics."""
+    if async_cfg is not None and engine != "async":
+        raise ValueError(
+            f"async_cfg requires engine='async' (got engine={engine!r}); "
+            "use run_federated_rounds(..., engine='async', async_cfg=...)")
+    if engine == "async" and hetero is not None:
+        raise ValueError(
+            "engine='async' does not compose with hetero=: the async "
+            "latency model replaces the round-synchronous straggler model "
+            "(use AsyncConfig's dist/latency_skew instead)")
+
+
 def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigits],
                         seed_data: SyntheticDigits, test_set: SyntheticDigits,
                         *, trainer: Optional[Trainer] = None,
@@ -416,7 +454,8 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                          *, rounds: int = 2, trainer: Optional[Trainer] = None,
                          upload_fraction: float = 1.0, engine: str = "vmap",
                          mesh=None, comms: Optional[CommsConfig] = None,
-                         hetero: Optional[HeteroConfig] = None):
+                         hetero: Optional[HeteroConfig] = None,
+                         async_cfg: Optional[AsyncConfig] = None):
     """Iterated rounds (paper: "the learning process can be iteratively
     carried out"): each round re-dispatches the aggregated model; devices
     keep their pools (labels accumulate across rounds).
@@ -444,11 +483,23 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
     compute profile can limit per-device local fit steps — see
     ``core.hetero``.  Each round report then carries the per-device
     ``"staleness"`` counters the aggregation weighted.
+
+    ``engine="async"`` drops the round barrier entirely: ``rounds`` counts
+    fog AGGREGATION EVENTS of the continuous-time FedAsync/FedBuff event
+    loop (``core.async_engine``, configured by ``async_cfg=AsyncConfig``,
+    default ``default_async(D)``), still one dispatch.  Each report then
+    carries ``sim_time`` (simulated seconds of the event), ``arrivals``,
+    ``timer_fired``, and ``staleness`` in model versions.  Does not
+    compose with ``hetero=`` (the latency model IS the straggler model);
+    ``upload_fraction`` is likewise rejected — arrivals are decided by the
+    latency draws, not a Bernoulli mask.
     """
-    if engine not in ("vmap", "legacy", "classic", "fused"):
+    if engine not in ("vmap", "legacy", "classic", "fused", "async"):
         raise ValueError(
-            f"unknown engine {engine!r}: use vmap | legacy | classic | fused")
-    _check_comms_engine(comms, engine)
+            f"unknown engine {engine!r}: "
+            "use vmap | legacy | classic | fused | async")
+    _check_comms_engine(comms, "fused" if engine == "async" else engine)
+    _check_async_engine(async_cfg, engine, hetero)
     _check_hetero_engine(hetero, engine)
     image_shape = device_data[0].images.shape[1:]
     total_cfg = replace(cfg, acquisitions=cfg.acquisitions * rounds)
@@ -498,6 +549,49 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
         return params, reports
 
     from repro.core.engine import EdgeEngine
+
+    if engine == "async":
+        if upload_fraction < 1.0:
+            raise ValueError(
+                "engine='async' decides arrivals from the latency model; "
+                "upload_fraction has no meaning there (tune AsyncConfig's "
+                "quorum/timer/latency instead)")
+        async_cfg = (async_cfg if async_cfg is not None
+                     else default_async(len(device_data)))
+        eng = EdgeEngine(trainer, cfg, device_data, seed_data, test_set,
+                         total_acquisitions=cfg.acquisitions * rounds,
+                         mesh=mesh)
+        _, recs, params = eng.run_async(
+            eng.init_state(params), rounds, async_cfg=async_cfg,
+            aggregation=cfg.aggregation, comms=comms)
+        weights = np.asarray(recs["weights"])
+        mask_out = np.asarray(recs["upload_mask"])
+        accs = np.asarray(recs["device_accs"])
+        agg_accs = np.asarray(recs["agg_acc"])
+        sim_time = np.asarray(recs["sim_time"])
+        staleness = np.asarray(recs["staleness"])
+        timer_fired = np.asarray(recs["timer_fired"])
+        for t in range(rounds):
+            uploaded = np.nonzero(mask_out[t])[0]
+            reports.append({
+                "round": t,
+                "sim_time": float(sim_time[t]),
+                "arrivals": int(mask_out[t].sum()),
+                "timer_fired": bool(timer_fired[t]),
+                "aggregated_acc": float(agg_accs[t]),
+                "aggregation": {
+                    "strategy": cfg.aggregation,
+                    "device_accs": accs[t][uploaded].tolist(),
+                    "weights": weights[t].tolist(),
+                    "uploaded_devices": uploaded.tolist(),
+                },
+                "staleness": staleness[t].tolist(),
+            })
+        summary = comms_mod.comms_report(
+            comms, params, mask_out, agg_accs=agg_accs,
+            n_labeled=recs["n_labeled"], image_shape=image_shape)
+        comms_mod.attach_round_comms(reports, summary)
+        return params, reports
 
     if engine == "fused":
         # the whole multi-round experiment — device AL, per-round Eq. 1
@@ -616,13 +710,56 @@ def hetero_config(num_devices: int = 64, *, seed: int = 0,
     return FederatedALConfig(**base)
 
 
+# Rounds-free async scenario (scenario="async"): same non-IID small-budget
+# fleet as hetero, but the fog node aggregates on a FedBuff quorum / safety
+# timer over a continuous-time latency model instead of a round barrier.
+ASYNC_LATENCY_SKEW = 10.0
+
+
+def async_config(num_devices: int = 64, *, seed: int = 0,
+                 **overrides) -> FederatedALConfig:
+    """Preset ``FederatedALConfig`` for the async event-loop regime — the
+    hetero-style small per-device budget with size-aware ``fedavg_n``
+    weighting.  Pair with an ``AsyncConfig`` (``default_async(D)`` via
+    ``run_experiment(scenario="async")``)."""
+    base = dict(num_devices=num_devices, initial_train=20, acquisitions=2,
+                k_per_acquisition=5, pool_window=32, mc_samples=4,
+                train_steps_per_acq=10, initial_train_steps=20,
+                aggregation="fedavg_n", seed=seed)
+    base.update(overrides)
+    return FederatedALConfig(**base)
+
+
+def default_async(num_devices: int) -> AsyncConfig:
+    """FedBuff-style ``AsyncConfig`` default, sized to the fleet: quorum at
+    a quarter of the devices (min 1), a 4-simulated-second safety timer
+    (4x the mean latency, so a quorum stall can't wedge the loop),
+    exponential latencies with a 10x slow/fast skew, and the FedAsync
+    polynomial staleness decay."""
+    return AsyncConfig(quorum=max(1, num_devices // 4), timer=4.0,
+                       dist="exp", mean_latency=1.0,
+                       latency_skew=ASYNC_LATENCY_SKEW,
+                       decay="poly", decay_rate=0.5)
+
+
 def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
                    n_train: int = 4000, n_test: int = 1000, repeats: int = 1,
                    scenario: Optional[str] = None, num_devices: int = 256,
                    rounds: int = 1, engine: Optional[str] = None, mesh=None,
                    comms: Optional[CommsConfig] = None,
-                   hetero: Optional[HeteroConfig] = None):
+                   hetero: Optional[HeteroConfig] = None,
+                   async_cfg: Optional[AsyncConfig] = None):
     """End-to-end experiment harness (used by benchmarks + examples).
+
+    Units and defaults: ``n_train`` / ``n_test`` are sample counts
+    (defaults 4000 / 1000; scenarios override ``n_train`` to
+    ~40·D), ``repeats`` (default 1) reruns the experiment with shifted
+    seeds, ``num_devices`` (default 256) sizes scenario presets,
+    ``rounds`` (default 1) counts barrier rounds — or fog aggregation
+    EVENTS on the async engine — and ``engine`` defaults to the
+    scenario's native engine (``vmap`` for paper, ``fused`` for
+    massive/hetero, ``async`` for async).  ``comms`` / ``hetero`` /
+    ``async_cfg`` default to None (scenarios fill in their defaults).
 
     ``scenario="massive"`` builds a ``massive_config(num_devices)`` (any
     explicit ``cfg`` fields win), sizes the pool at ~40 samples/device, and
@@ -636,6 +773,15 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     ``DEFAULT_HETERO`` straggler/staleness/compute-profile dynamics unless
     an explicit ``hetero=HeteroConfig(...)`` is passed.
 
+    ``scenario="async"`` is the rounds-free regime: the same non-IID
+    ``dirichlet_split`` fleet, but on the continuous-time event-loop
+    engine (``engine="async"``; ``rounds`` counts fog aggregation events)
+    with ``default_async(num_devices)`` quorum/timer/latency dynamics
+    unless an explicit ``async_cfg=AsyncConfig(...)`` is passed.  Each
+    repeat then carries an ``"async"`` telemetry entry with the
+    accuracy-vs-SIMULATED-seconds trajectory (``sim_seconds``, not round
+    counts), arrival statistics, and the staleness summary.
+
     Every repeat emits a comms telemetry dict (bytes/round, cumulative MB,
     compression ratio, accuracy-vs-bytes trajectory): multi-round repeats
     return ``{"rounds": [...], "comms": telemetry}``, single-round repeats
@@ -646,18 +792,23 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     from repro.data.digits import make_digit_dataset
     from repro.data.federated_split import dirichlet_split, federated_split
 
-    if scenario in ("massive", "hetero"):
-        maker = massive_config if scenario == "massive" else hetero_config
+    if scenario in ("massive", "hetero", "async"):
+        maker = {"massive": massive_config, "hetero": hetero_config,
+                 "async": async_config}[scenario]
         cfg = maker(num_devices) if cfg is None else cfg
         n_train = MASSIVE_SAMPLES_PER_DEVICE * cfg.num_devices
-        engine = "fused" if engine is None else engine
+        if engine is None:
+            engine = "async" if scenario == "async" else "fused"
         if scenario == "hetero" and hetero is None:
             hetero = DEFAULT_HETERO
+        if scenario == "async" and async_cfg is None:
+            async_cfg = default_async(cfg.num_devices)
     elif scenario not in (None, "paper"):
         raise ValueError(
-            f"unknown scenario {scenario!r}: use paper | massive | hetero")
+            f"unknown scenario {scenario!r}: "
+            "use paper | massive | hetero | async")
     if cfg is None:
-        raise ValueError("pass cfg or scenario='massive'/'hetero'")
+        raise ValueError("pass cfg or scenario='massive'/'hetero'/'async'")
     engine = "vmap" if engine is None else engine
 
     reports = []
@@ -666,16 +817,17 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
         full = make_digit_dataset(n_train, seed=seed)
         test = make_digit_dataset(n_test, seed=seed + 5)
         seed_set = make_digit_dataset(cfg.initial_train, seed=seed + 11)
-        if scenario == "hetero":
+        if scenario in ("hetero", "async"):
             shards = dirichlet_split(full, cfg.num_devices,
                                      alpha=HETERO_DIRICHLET_ALPHA, seed=seed)
         else:
             shards = federated_split(full, cfg.num_devices, seed=seed)
         cfg_rep = replace(cfg, seed=seed)
-        if engine == "fused" or rounds > 1 or mesh is not None:
+        if (engine in ("fused", "async") or rounds > 1 or mesh is not None):
             _, round_reports = run_federated_rounds(
                 cfg_rep, shards, seed_set, test, rounds=rounds,
-                engine=engine, mesh=mesh, comms=comms, hetero=hetero)
+                engine=engine, mesh=mesh, comms=comms, hetero=hetero,
+                async_cfg=async_cfg)
             rep_report = {
                 "rounds": round_reports,
                 "comms": comms_mod.experiment_telemetry(round_reports),
@@ -683,6 +835,9 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
             if hetero is not None:
                 rep_report["staleness"] = hetero_mod.summarize_staleness(
                     [r["staleness"] for r in round_reports])
+            if engine == "async":
+                rep_report["async"] = async_mod.report_telemetry(
+                    round_reports)
         else:
             trainer = Trainer(cfg_rep)
             _, rep_report = run_federated_round(cfg_rep, shards, seed_set,

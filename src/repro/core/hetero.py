@@ -53,17 +53,36 @@ DECAYS = ("none", "exp", "poly")
 class HeteroConfig:
     """Static heterogeneity policy for a federated experiment.
 
-    ``straggler_rate`` is the per-device per-round probability of MISSING
-    the upload deadline (drawn in-compile; 0 = fully synchronous fleet).
-    ``decay`` / ``decay_rate`` shape the staleness discount
-    (``aggregation.staleness_decay``): ``exp`` → rate**s, ``poly`` →
-    (1+s)**-rate, ``none`` → 1 (pure ``fedavg_n`` over arrivals).
-    ``buffer_stale`` folds a straggler's buffered delta in on arrival
-    instead of discarding it (the PR-2 all-or-nothing semantics).
-    ``slow_fraction`` of devices are compute-limited to
-    ``slow_steps_fraction`` of the configured local fit steps;
-    ``step_limits`` instead pins explicit per-device step budgets.
-    ``seed`` fixes the (host-side) slow-device assignment.
+    ``straggler_rate``
+        float in [0, 1), dimensionless probability (default ``0.0``).
+        Per-device per-round chance of MISSING the upload deadline, drawn
+        in-compile; 0 = fully synchronous fleet.
+    ``decay``
+        ``"none" | "exp" | "poly"`` (default ``"exp"``).  Shape of the
+        staleness discount (``aggregation.staleness_decay``): ``exp`` →
+        ``decay_rate**s``, ``poly`` → ``(1+s)**-decay_rate``, ``none`` →
+        1 (pure ``fedavg_n`` over arrivals).  Staleness ``s`` is measured
+        in whole ROUNDS missed.
+    ``decay_rate``
+        float > 0, dimensionless (default ``0.5``).  For ``exp`` it is
+        the per-round factor gamma and must be ≤ 1.
+    ``buffer_stale``
+        bool (default ``True``).  Fold a straggler's buffered delta in on
+        arrival instead of discarding it (``False`` restores the PR-2
+        all-or-nothing participation semantics).
+    ``slow_fraction``
+        float in [0, 1], dimensionless fraction of the fleet (default
+        ``0.0``).  That share of devices is compute-limited to …
+    ``slow_steps_fraction``
+        … this float in (0, 1] fraction (default ``0.5``) of the
+        configured local fit steps per acquisition (min 1 step).
+    ``step_limits``
+        optional tuple of D ints, local fit steps per acquisition
+        (default ``None``).  Explicit per-device step budgets; wins over
+        ``slow_fraction`` and is clipped to ``[1, train_steps_per_acq]``.
+    ``seed``
+        int (default ``0``).  Fixes the host-side slow-device assignment,
+        independent of the experiment seed.
     """
 
     straggler_rate: float = 0.0

@@ -1,0 +1,400 @@
+"""Rounds-free async event loop (core.async_engine): the tentpole's
+contracts.
+
+* latency = 0 ∧ quorum = D reproduces ``run_rounds_fused`` ≤ 1e-5, under
+  vmap AND under the shard_map mesh;
+* the event loop stays ONE dispatch, including with a comms codec on;
+* quorum pops are exact order statistics of the completion-time array
+  (deterministic latencies), the timer fires when the quorum is starved,
+  and a zero-arrival event keeps the fog model;
+* staleness counts committed MODEL VERSIONS (resets on arrival, frozen
+  through zero-arrival events) and decays Eq. 1 weights on arrival;
+* the latency profile, config validation, and driver plumbing behave.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counters
+from repro.core.async_engine import (AsyncConfig, async_telemetry,
+                                     device_latency_means)
+from repro.core.comms import CommsConfig
+from repro.core.engine import EdgeEngine
+from repro.core.federated import (FederatedALConfig, Trainer, async_config,
+                                  default_async, run_experiment,
+                                  run_federated_rounds)
+from repro.core.hetero import HeteroConfig
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.launch.mesh import make_device_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+EVENTS = 2
+
+SYNC_LIMIT = AsyncConfig(quorum=8, dist="det", mean_latency=0.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # 8 devices so the mesh tests divide evenly over the CI sharded job's
+    # 8 fake host devices, mirroring tests/test_hetero.py
+    cfg = FederatedALConfig(num_devices=8, acquisitions=2, mc_samples=4,
+                            k_per_acquisition=3, pool_window=16,
+                            train_steps_per_acq=4, initial_train=10,
+                            initial_train_steps=5, seed=7)
+    full = make_digit_dataset(160, seed=1)
+    test = make_digit_dataset(48, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def _engine(cfg, shards, seed_set, test, *, events=EVENTS, mesh=None):
+    total = cfg.acquisitions * events
+    trainer = Trainer(replace(cfg, acquisitions=total))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total, mesh=mesh)
+    params0 = trainer.init_params(jax.random.key(0))
+    return eng, params0
+
+
+def _leaves_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+# ------------------------------------------------------------- equivalence
+def test_sync_limit_matches_run_rounds_fused(setup):
+    """mean_latency=0 ∧ quorum=D: every event is a full barrier and the
+    event loop must BE the synchronous fused rounds (delta-form summation
+    order is the only difference — ≤ 1e-5)."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, rs, fs = eng.run_rounds_fused(eng.init_state(params0), EVENTS)
+    _, ra, fa = eng.run_async(eng.init_state(params0), EVENTS,
+                              async_cfg=SYNC_LIMIT)
+    _leaves_close(fs, fa)
+    np.testing.assert_allclose(np.asarray(rs["weights"]),
+                               np.asarray(ra["weights"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rs["agg_acc"]),
+                               np.asarray(ra["agg_acc"]), atol=1e-6)
+    assert np.asarray(ra["staleness"]).sum() == 0
+    np.testing.assert_array_equal(np.asarray(ra["sim_time"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(ra["arrivals"]),
+                                  cfg.num_devices)
+
+
+def test_sync_limit_matches_fused_under_mesh(setup):
+    """Same contract under the shard_map device mesh (1 host device in a
+    plain run, 8 in the CI sharded job)."""
+    cfg, shards, seed_set, test = setup
+    eng_v, params0 = _engine(cfg, shards, seed_set, test)
+    _, _, fs = eng_v.run_rounds_fused(eng_v.init_state(params0), EVENTS)
+    eng_m, _ = _engine(cfg, shards, seed_set, test, mesh=make_device_mesh())
+    _, ra, fa = eng_m.run_async(eng_m.init_state(params0), EVENTS,
+                                async_cfg=SYNC_LIMIT)
+    _leaves_close(fs, fa)
+    assert np.asarray(ra["staleness"]).sum() == 0
+
+
+def test_async_mesh_matches_vmap(setup):
+    """A genuinely async run (quorum 3, exp latencies, 10x skew) must be
+    identical ≤ 1e-5 between the vmap and shard_map engines — fog model,
+    event times, arrivals, staleness, and weights."""
+    cfg, shards, seed_set, test = setup
+    acfg = AsyncConfig(quorum=3, timer=4.0, dist="exp", mean_latency=1.0,
+                       latency_skew=10.0)
+    eng_v, params0 = _engine(cfg, shards, seed_set, test)
+    _, rv, fv = eng_v.run_async(eng_v.init_state(params0), EVENTS,
+                                async_cfg=acfg)
+    eng_m, _ = _engine(cfg, shards, seed_set, test, mesh=make_device_mesh())
+    _, rm, fm = eng_m.run_async(eng_m.init_state(params0), EVENTS,
+                                async_cfg=acfg)
+    _leaves_close(fv, fm)
+    np.testing.assert_array_equal(np.asarray(rv["staleness"]),
+                                  np.asarray(rm["staleness"]))
+    np.testing.assert_array_equal(np.asarray(rv["upload_mask"]),
+                                  np.asarray(rm["upload_mask"]))
+    np.testing.assert_allclose(np.asarray(rv["sim_time"]),
+                               np.asarray(rm["sim_time"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rv["weights"]),
+                               np.asarray(rm["weights"]), atol=1e-5)
+
+
+def test_topk_fraction_one_matches_uncompressed(setup):
+    """The top-k codec at fraction 1.0 is the identity, so the compressed
+    event loop must match the uncompressed one (~float tolerance) and
+    carry zero error-feedback residual."""
+    cfg, shards, seed_set, test = setup
+    acfg = AsyncConfig(quorum=2, dist="exp", mean_latency=1.0,
+                       latency_skew=4.0)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, _, f_plain = eng.run_async(eng.init_state(params0), EVENTS,
+                                  async_cfg=acfg)
+    st, _, f_topk = eng.run_async(
+        eng.init_state(params0), EVENTS, async_cfg=acfg,
+        comms=CommsConfig(compression="topk", topk_fraction=1.0))
+    _leaves_close(f_plain, f_topk, atol=5e-5)
+    for leaf in jax.tree_util.tree_leaves(st.residual):
+        np.testing.assert_allclose(np.asarray(leaf), 0.0, atol=1e-7)
+
+
+# ---------------------------------------------------------- one dispatch
+def test_async_single_dispatch_even_compressed(setup):
+    cfg, shards, seed_set, test = setup
+    acfg = AsyncConfig(quorum=1, timer=2.0, dist="lognormal",
+                       mean_latency=1.0, latency_skew=10.0)
+    comms = CommsConfig(compression="int8")
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    eng.run_async(eng.init_state(params0), EVENTS, async_cfg=acfg,
+                  comms=comms)                        # warmup/compile
+    state = eng.init_state(params0)
+    counters.reset_dispatches()
+    _, recs, final = eng.run_async(state, EVENTS, async_cfg=acfg,
+                                   comms=comms)
+    assert counters.dispatch_count() == 1
+    assert np.asarray(recs["staleness"]).shape == (EVENTS, cfg.num_devices)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(final))
+
+
+# ----------------------------------------------------- event-loop semantics
+def test_quorum_pops_are_order_statistics(setup):
+    """Deterministic latencies make the event loop exact: event times must
+    be the K-th order statistics of the per-device completion times, and
+    arrivals exactly the devices whose completions fit."""
+    cfg, shards, seed_set, test = setup
+    acfg = AsyncConfig(quorum=3, dist="det", mean_latency=1.0,
+                       latency_skew=16.0)
+    means = device_latency_means(acfg, cfg.num_devices)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, _ = eng.run_async(eng.init_state(params0), EVENTS,
+                               async_cfg=acfg)
+    sim = np.asarray(recs["sim_time"])
+    mask = np.asarray(recs["upload_mask"])
+    # event 0: the 3 fastest devices, at the 3rd smallest mean
+    np.testing.assert_allclose(sim[0], np.sort(means)[2], rtol=1e-6)
+    np.testing.assert_array_equal(mask[0],
+                                  (means <= np.sort(means)[2]).astype(float))
+    assert mask.sum(axis=1).min() >= 3          # quorum met every event
+    # host-side replay of the priority queue pins event 1 exactly
+    next_done = np.where(mask[0] > 0, sim[0] + means, means)
+    np.testing.assert_allclose(sim[1], np.sort(next_done)[2], rtol=1e-6)
+    np.testing.assert_array_equal(mask[1],
+                                  (next_done <= np.sort(next_done)[2] + 1e-6)
+                                  .astype(float))
+
+
+def test_timer_fires_when_quorum_starved(setup):
+    """Timer-only loop with latencies longer than the period: events tick
+    at τ, 2τ, ... with ZERO arrivals, zero weights (not the uniform
+    fallback), an unchanged fog model, and nobody aging (no model version
+    was committed)."""
+    cfg, shards, seed_set, test = setup
+    acfg = AsyncConfig(timer=0.1, dist="det", mean_latency=1.0)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, final = eng.run_async(eng.init_state(params0), EVENTS,
+                                   async_cfg=acfg)
+    np.testing.assert_allclose(np.asarray(recs["sim_time"]),
+                               [0.1, 0.2], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(recs["arrivals"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(recs["timer_fired"]), True)
+    assert np.asarray(recs["weights"]).sum() == 0.0
+    assert np.asarray(recs["staleness"]).sum() == 0   # nobody aged
+    # the fog model never changed: every event scores the initial model
+    preds = jnp.argmax(eng.trainer.eval_logits_raw(
+        params0, eng.test_images), -1)
+    base_acc = float(jnp.mean((preds == eng.test_labels).astype(jnp.float32)))
+    np.testing.assert_allclose(np.asarray(recs["agg_acc"]),
+                               base_acc, atol=1e-6)
+    _leaves_close(final, params0, atol=1e-7)
+
+
+def test_staleness_counts_model_versions(setup):
+    """FedAsync (quorum=1, det latencies): a host-side replay of the
+    priority queue must reproduce the engine's arrivals exactly, in-flight
+    devices age one model version per commit, and a sole arrival takes the
+    whole convex combination regardless of decay."""
+    cfg, shards, seed_set, test = setup
+    events, D = 3, cfg.num_devices
+    acfg = AsyncConfig(quorum=1, dist="det", mean_latency=1.0,
+                       latency_skew=64.0, decay="exp", decay_rate=0.5)
+    eng, params0 = _engine(cfg, shards, seed_set, test, events=events)
+    _, recs, _ = eng.run_async(eng.init_state(params0), events,
+                               async_cfg=acfg)
+    mask = np.asarray(recs["upload_mask"])
+    stale = np.asarray(recs["staleness"])
+    # exact host replay: everyone dispatched at t=0, pop the min each event
+    means = device_latency_means(acfg, D)
+    next_done = means.copy().astype(np.float64)
+    ages = np.zeros((D,), np.int64)
+    for t in range(events):
+        te = next_done.min()
+        arr = next_done <= te + 1e-7
+        np.testing.assert_array_equal(mask[t], arr.astype(float))
+        np.testing.assert_array_equal(stale[t], ages)
+        ages = np.where(arr, 0, ages + 1)            # one commit per event
+        next_done = np.where(arr, te + means, next_done)
+    # sole arrival takes the whole convex combination regardless of decay
+    w = np.asarray(recs["weights"])
+    np.testing.assert_allclose(np.sum(w * mask, axis=1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w * (1 - mask), 0.0, atol=1e-6)
+
+
+def test_quorum_and_timer_race(setup):
+    """quorum ∧ timer: whichever fires first wins each event.  With the
+    quorum time far beyond τ the timer must fire, and vice versa."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, r_timer, _ = eng.run_async(
+        eng.init_state(params0), EVENTS,
+        async_cfg=AsyncConfig(quorum=8, timer=0.25, dist="det",
+                              mean_latency=1.0))
+    assert np.asarray(r_timer["timer_fired"]).all()
+    _, r_quorum, _ = eng.run_async(
+        eng.init_state(params0), EVENTS,
+        async_cfg=AsyncConfig(quorum=1, timer=50.0, dist="det",
+                              mean_latency=1.0, latency_skew=16.0))
+    assert not np.asarray(r_quorum["timer_fired"]).any()
+
+
+def test_mix_rate_damps_the_update(setup):
+    """η < 1 must move the fog model strictly less than η = 1 from the
+    same arrivals (server-side mixing, FedAsync Eq. 4)."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test, events=1)
+    base = AsyncConfig(quorum=8, dist="det", mean_latency=0.0)
+    _, _, f_full = eng.run_async(eng.init_state(params0), 1, async_cfg=base)
+    _, _, f_half = eng.run_async(
+        eng.init_state(params0), 1, async_cfg=replace(base, mix_rate=0.5))
+
+    def dist(a, b):
+        return sum(float(jnp.sum(jnp.abs(la - lb)))
+                   for la, lb in zip(jax.tree_util.tree_leaves(a),
+                                     jax.tree_util.tree_leaves(b)))
+
+    assert dist(f_half, params0) < dist(f_full, params0)
+    np.testing.assert_allclose(dist(f_half, params0),
+                               0.5 * dist(f_full, params0), rtol=1e-3)
+
+
+# --------------------------------------------------------- latency profile
+def test_device_latency_means_profile():
+    acfg = AsyncConfig(quorum=1, mean_latency=2.0, latency_skew=16.0)
+    means = device_latency_means(acfg, 8)
+    assert means.shape == (8,)
+    np.testing.assert_allclose(means[-1] / means[0], 16.0, rtol=1e-5)
+    np.testing.assert_allclose(np.exp(np.log(means).mean()), 2.0, rtol=1e-5)
+    assert (np.diff(means) > 0).all()            # device 0 fastest
+    flat = device_latency_means(AsyncConfig(quorum=1, mean_latency=3.0), 4)
+    np.testing.assert_array_equal(flat, 3.0)
+    explicit = device_latency_means(
+        AsyncConfig(quorum=1, device_means=(1.0, 2.0)), 2)
+    np.testing.assert_array_equal(explicit, [1.0, 2.0])
+    with pytest.raises(ValueError, match="device_means shape"):
+        device_latency_means(AsyncConfig(quorum=1, device_means=(1.0,)), 2)
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="trigger"):
+        AsyncConfig()
+    with pytest.raises(ValueError, match="quorum"):
+        AsyncConfig(quorum=0)
+    with pytest.raises(ValueError, match="timer"):
+        AsyncConfig(timer=0.0)
+    with pytest.raises(ValueError, match="dist"):
+        AsyncConfig(quorum=1, dist="uniform")
+    with pytest.raises(ValueError, match="mean_latency"):
+        AsyncConfig(quorum=1, mean_latency=-1.0)
+    with pytest.raises(ValueError, match="latency_skew"):
+        AsyncConfig(quorum=1, latency_skew=0.5)
+    with pytest.raises(ValueError, match="decay"):
+        AsyncConfig(quorum=1, decay="linear")
+    with pytest.raises(ValueError, match="gamma"):
+        AsyncConfig(quorum=1, decay="exp", decay_rate=2.0)
+    with pytest.raises(ValueError, match="mix_rate"):
+        AsyncConfig(quorum=1, mix_rate=0.0)
+
+
+def test_async_rejects_optimal_aggregation(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    with pytest.raises(ValueError, match="optimal"):
+        eng.run_async(eng.init_state(params0), 1, async_cfg=SYNC_LIMIT,
+                      aggregation="optimal")
+
+
+# --------------------------------------------------------------- drivers
+def test_driver_rejects_bad_compositions(setup):
+    cfg, shards, seed_set, test = setup
+    with pytest.raises(ValueError, match="engine='async'"):
+        run_federated_rounds(cfg, shards, seed_set, test, rounds=1,
+                             engine="fused", async_cfg=SYNC_LIMIT)
+    with pytest.raises(ValueError, match="hetero"):
+        run_federated_rounds(cfg, shards, seed_set, test, rounds=1,
+                             engine="async",
+                             hetero=HeteroConfig(straggler_rate=0.2))
+    with pytest.raises(ValueError, match="upload_fraction"):
+        run_federated_rounds(cfg, shards, seed_set, test, rounds=1,
+                             engine="async", upload_fraction=0.5)
+
+
+def test_async_config_preset_and_default():
+    cfg = async_config(32)
+    assert cfg.num_devices == 32
+    assert cfg.aggregation == "fedavg_n"
+    acfg = default_async(32)
+    assert acfg.quorum == 8 and acfg.timer is not None
+    assert default_async(2).quorum == 1
+
+
+@pytest.mark.slow
+def test_run_federated_rounds_async_reports(setup):
+    cfg, shards, seed_set, test = setup
+    acfg = AsyncConfig(quorum=3, timer=4.0, dist="exp", mean_latency=1.0,
+                       latency_skew=10.0)
+    params, reports = run_federated_rounds(cfg, shards, seed_set, test,
+                                           rounds=2, engine="async",
+                                           async_cfg=acfg)
+    assert len(reports) == 2
+    sim = [r["sim_time"] for r in reports]
+    assert sim == sorted(sim) and sim[0] > 0.0     # the clock advances
+    for r in reports:
+        assert r["arrivals"] >= 1
+        assert len(r["staleness"]) == cfg.num_devices
+        assert "comms" in r and 0.0 <= r["aggregated_acc"] <= 1.0
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(params))
+
+
+@pytest.mark.slow
+def test_run_experiment_async_scenario():
+    reports = run_experiment(scenario="async", num_devices=6, rounds=2,
+                             n_test=64)
+    rep = reports[0]
+    assert len(rep["rounds"]) == 2
+    tel = rep["async"]
+    assert tel["events"] == 2
+    assert tel["sim_seconds_total"] == rep["rounds"][-1]["sim_time"]
+    assert len(tel["accuracy_vs_sim_time"]) == 2
+    assert rep["comms"] is not None
+
+
+def test_async_telemetry_shapes(setup):
+    cfg, shards, seed_set, test = setup
+    acfg = AsyncConfig(quorum=2, dist="exp", mean_latency=1.0,
+                       latency_skew=4.0)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, _ = eng.run_async(eng.init_state(params0), EVENTS,
+                               async_cfg=acfg)
+    tel = async_telemetry(recs)
+    assert tel["events"] == EVENTS
+    assert tel["sim_seconds_total"] == tel["sim_time_per_event"][-1]
+    assert len(tel["accuracy_vs_sim_time"]) == EVENTS
+    assert tel["mean_arrivals_per_event"] >= 1.0
+    assert "mean" in tel["staleness"]

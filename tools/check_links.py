@@ -1,0 +1,74 @@
+"""Intra-repo markdown link checker (the CI docs job's first gate).
+
+Scans ``docs/*.md``, ``README.md``, and the other top-level markdown files
+for inline links/images ``[text](target)`` and reference definitions
+``[ref]: target``, and fails when a RELATIVE target does not exist on disk
+(resolved against the linking file's directory, anchors stripped).
+External schemes (http/https/mailto) and pure in-page anchors are skipped —
+this is a docs-can't-rot gate for the repo's own files, not a crawler.
+
+Usage:
+    python tools/check_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline [text](target) — target ends at the first unescaped ')' or space
+# (titles like [t](file "Title") are split off); images share the syntax
+_INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# reference-style definitions: [name]: target
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root: Path) -> list[Path]:
+    files = sorted(root.glob("*.md")) + sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans — `cfg[x](y)`-shaped
+    code is not a link."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def check_file(path: Path, root: Path) -> list[str]:
+    text = _strip_code(path.read_text(encoding="utf-8"))
+    errors = []
+    targets = _INLINE.findall(text) + _REFDEF.findall(text)
+    for target in targets:
+        if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (root / rel if rel.startswith("/")
+                    else path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(root)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    files = md_files(root)
+    if not files:
+        print(f"no markdown files found under {root}", file=sys.stderr)
+        return 1
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL (' + str(len(errors)) + ' broken links)' if errors else 'all links resolve'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
