@@ -1,0 +1,148 @@
+"""Fault-tolerance benchmark: accuracy + wall clock under device churn.
+
+Runs the fused engine at D ∈ {16, 64, 256} on non-IID ``dirichlet_split``
+shards — the ``run_experiment(scenario="churn")`` fleet — through three
+cells per size:
+
+* ``clean``            — no faults, no guards (the PR-6 zero-fault anchor);
+* ``faulted_guarded``  — ``DEFAULT_FAULTS`` churn (steady-state ~20% of
+  slots dark) + crashes + dropped/corrupted (x50) uploads + label noise,
+  with the ``DEFAULT_GUARDS`` norm/finiteness guards armed;
+* ``faulted_unguarded`` — the same fault trace with guards off, documenting
+  the degradation the guards exist to stop.
+
+The headline claim under test: graceful degradation — with ~20% of the
+fleet dark and 5% of uploads corrupted, the guarded run's final accuracy
+stays within ``ACC_DELTA_LIMIT_PP`` (3pp) of the fault-free run.  The
+``acceptance`` entry in ``BENCH_faults.json`` gates that at the largest
+swept fleet: D=256 on a full run, D=16 on ``--quick`` (the CI bench job).
+
+    PYTHONPATH=src python -m benchmarks.run --only faults [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core import counters
+from repro.core import faults as faults_mod
+from repro.core.engine import EdgeEngine
+from repro.core.federated import (DEFAULT_FAULTS, DEFAULT_GUARDS,
+                                  HETERO_DIRICHLET_ALPHA,
+                                  MASSIVE_SAMPLES_PER_DEVICE, Trainer,
+                                  churn_config)
+
+Row = Tuple[str, float, str]
+
+ACC_DELTA_LIMIT_PP = 3.0      # guarded faulted run vs fault-free run
+
+
+def bench_faults(quick: bool = False) -> Tuple[List[Row], Dict]:
+    rows: List[Row] = []
+    sizes = [16] if quick else [16, 64, 256]
+    rounds = 3
+    payload: Dict = {"device_counts": {}, "rounds": rounds,
+                     "dirichlet_alpha": HETERO_DIRICHLET_ALPHA,
+                     "samples_per_device": MASSIVE_SAMPLES_PER_DEVICE,
+                     "faults": {
+                         "death_rate": DEFAULT_FAULTS.death_rate,
+                         "birth_rate": DEFAULT_FAULTS.birth_rate,
+                         "crash_rate": DEFAULT_FAULTS.crash_rate,
+                         "drop_rate": DEFAULT_FAULTS.drop_rate,
+                         "corrupt_rate": DEFAULT_FAULTS.corrupt_rate,
+                         "corrupt_mode": DEFAULT_FAULTS.corrupt_mode,
+                         "corrupt_scale": DEFAULT_FAULTS.corrupt_scale,
+                         "label_noise_rate": DEFAULT_FAULTS.label_noise_rate,
+                     },
+                     "guards": {"policy": DEFAULT_GUARDS.policy,
+                                "norm_factor": DEFAULT_GUARDS.norm_factor}}
+
+    from repro.data.digits import make_digit_dataset
+    from repro.data.federated_split import dirichlet_split
+
+    cells = (("clean", None, None),
+             ("faulted_guarded", DEFAULT_FAULTS, DEFAULT_GUARDS),
+             ("faulted_unguarded", DEFAULT_FAULTS, None))
+
+    for D in sizes:
+        cfg = churn_config(D)
+        full = make_digit_dataset(MASSIVE_SAMPLES_PER_DEVICE * D, seed=0)
+        test = make_digit_dataset(256, seed=1)
+        seed_set = make_digit_dataset(cfg.initial_train, seed=2)
+        shards = dirichlet_split(full, D, alpha=HETERO_DIRICHLET_ALPHA,
+                                 seed=3)
+
+        trainer = Trainer(cfg)
+        params0 = trainer.init_params(jax.random.key(0))
+        eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                         total_acquisitions=cfg.acquisitions * rounds)
+
+        results: Dict[str, Dict] = {}
+        for name, faults, guards in cells:
+
+            def run():
+                state = eng.init_state(params0)
+                counters.reset_dispatches()
+                _, recs, final = eng.run_rounds_fused(
+                    state, rounds, faults=faults, guards=guards)
+                jax.block_until_ready(final)
+                return recs, final
+
+            run()                                  # warmup: compile
+            t0 = time.perf_counter()
+            recs, final = run()                    # steady state
+            wall_ms = (time.perf_counter() - t0) * 1e3
+
+            finite = all(np.isfinite(np.asarray(l)).all()
+                         for l in jax.tree_util.tree_leaves(final))
+            results[name] = {
+                "wall_ms": wall_ms,
+                "dispatches": counters.dispatch_count(),
+                "final_acc": float(np.asarray(recs["agg_acc"])[-1]),
+                "fog_model_finite": finite,
+                "telemetry": faults_mod.summarize_faults(recs),
+            }
+
+        clean = results["clean"]
+        for name, r in results.items():
+            r["acc_delta_pp_vs_clean"] = (r["final_acc"]
+                                          - clean["final_acc"]) * 100.0
+            live = r["telemetry"].get("mean_live_fraction", 1.0)
+            rows.append((
+                f"faults/{name}_D{D}", r["wall_ms"] * 1e3,
+                f"acc={r['final_acc']:.3f},"
+                f"delta_pp={r['acc_delta_pp_vs_clean']:+.1f},"
+                f"live={live:.2f},finite={r['fog_model_finite']}"))
+        payload["device_counts"][D] = {"cells": results}
+
+    # acceptance: with ~20% churn + corrupted uploads, guards keep the
+    # final accuracy within the limit of the fault-free run at the LARGEST
+    # swept fleet — and the fog model stays finite
+    d_max = max(sizes)
+    gated = payload["device_counts"][d_max]["cells"]["faulted_guarded"]
+    payload["acceptance"] = {
+        "criterion": f"guarded faulted fleet (steady-state ~20% dark, "
+                     f"{DEFAULT_FAULTS.corrupt_rate:.0%} corrupted uploads) "
+                     f"within {ACC_DELTA_LIMIT_PP}pp of the fault-free "
+                     f"final accuracy, fog model finite",
+        "device_count": d_max,
+        "acc_clean": payload["device_counts"][d_max]["cells"]["clean"][
+            "final_acc"],
+        "acc_guarded": gated["final_acc"],
+        "acc_delta_pp": gated["acc_delta_pp_vs_clean"],
+        "acc_unguarded": payload["device_counts"][d_max]["cells"][
+            "faulted_unguarded"]["final_acc"],
+        "met": bool(gated["acc_delta_pp_vs_clean"] >= -ACC_DELTA_LIMIT_PP
+                    and gated["fog_model_finite"]),
+    }
+
+    os.makedirs("experiments/results", exist_ok=True)
+    with open("experiments/results/BENCH_faults.json", "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return rows, payload

@@ -62,6 +62,42 @@ def _current_value(metric, results_dir):
         return _extract(json.load(f), metric["path"])
 
 
+def _validate_baseline(baseline, baseline_path):
+    """Fail up front with EVERY schema problem listed, instead of a bare
+    KeyError naming whichever key happened to be read first — a half-seeded
+    baseline (e.g. a new bench without its baseline entry filled in) should
+    tell the operator exactly which keys to add."""
+    problems = []
+    metrics = baseline.get("metrics")
+    if not isinstance(metrics, dict):
+        problems.append('top-level "metrics" table is missing or not a dict')
+        metrics = {}
+    for name, metric in metrics.items():
+        if not isinstance(metric, dict):
+            problems.append(f'metric "{name}" is not a dict')
+            continue
+        for key in ("file", "path", "value"):
+            if key not in metric:
+                problems.append(f'metric "{name}" is missing "{key}"')
+        if "value" in metric and not isinstance(metric["value"], (int, float)):
+            problems.append(
+                f'metric "{name}" has non-numeric "value": {metric["value"]!r}'
+            )
+    if problems:
+        schema = (
+            '{"threshold": <float>, "metrics": {"<name>": '
+            '{"file": "<payload>.json", "path": ["json", "path", ...], '
+            '"value": <ms>}}}'
+        )
+        joined = "\n  - ".join(problems)
+        print(
+            f"invalid baseline {baseline_path}:\n  - {joined}\n\n"
+            f"expected schema: {schema}",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
@@ -75,6 +111,7 @@ def main() -> None:
 
     with open(args.baseline) as f:
         baseline = json.load(f)
+    _validate_baseline(baseline, args.baseline)
     threshold = float(
         os.environ.get(
             "BENCH_BASELINE_TOLERANCE",

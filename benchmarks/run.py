@@ -37,6 +37,7 @@ BENCHES = [
     ("comms", "benchmarks.edge_loop_bench", "bench_comms_sweep"),
     ("hetero", "benchmarks.bench_hetero", "bench_hetero"),
     ("async", "benchmarks.bench_async", "bench_async"),
+    ("faults", "benchmarks.bench_faults", "bench_faults"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

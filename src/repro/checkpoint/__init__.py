@@ -1,1 +1,4 @@
-from repro.checkpoint.msgpack_ckpt import save_pytree, load_pytree, save_round, load_round, latest_round
+from repro.checkpoint.msgpack_ckpt import (save_pytree, load_pytree,
+                                           save_round, load_round,
+                                           latest_round, save_engine_state,
+                                           load_engine_state)

@@ -126,3 +126,63 @@ def latest_round(ckpt_dir: str):
 
 def load_round(ckpt_dir: str, round_idx: int):
     return load_pytree(os.path.join(ckpt_dir, f"round_{round_idx:06d}.msgpack"))
+
+
+# --------------------------------------------- full engine-state checkpoints
+def save_engine_state(path: str, state, *, metadata=None) -> None:
+    """Checkpoint a full ``core.engine.EngineState`` — params, optimizer
+    state, pool, PRNG keys, and every extension buffer (comms ``residual``,
+    hetero ``pending``/``staleness``, churn ``live``) — for mid-experiment
+    resume.
+
+    Two representation hazards the generic ``save_pytree`` cannot handle
+    alone are resolved here: typed PRNG key arrays have no numpy dtype, so
+    the key stream is serialized as its ``jax.random.key_data`` uint32
+    counters and re-wrapped on load; and NamedTuples (``EngineState``,
+    ``VPool``) flatten to plain tuples in the flat-key encoding, so the
+    loader rebuilds them by field order.  Empty extension buffers (``()``)
+    round-trip exactly — a restored state drops into the same engine code
+    paths the saved one used.
+
+    ``metadata`` (a msgpack-able dict — put ``next_round`` there) rides
+    along.  Resuming: ``state, meta = load_engine_state(path)`` then
+    ``engine.resume_state(state, next_round=meta["next_round"])`` — the
+    fused engines take later-round keys from the absolute-index schedule,
+    so the checkpointed rng must be RE-KEYED, not replayed (see
+    ``EdgeEngine.resume_state``).
+    """
+    fields = dict(state._asdict())
+    rng = fields.pop("rng")
+    pool = fields.pop("pool")
+    payload = {
+        "kind": "engine_state",
+        "fields": fields,
+        "pool": dict(pool._asdict()),
+        "rng_key_data": np.asarray(jax.random.key_data(rng)),
+        "metadata": metadata or {},
+    }
+    save_pytree(path, payload)
+
+
+def load_engine_state(path: str):
+    """Restore ``(EngineState, metadata)`` saved by ``save_engine_state``.
+
+    The result lives on the default device; for a mesh engine pass it
+    through ``EdgeEngine.resume_state`` (which re-commits it to the device
+    shards) before continuing."""
+    # lazy import: checkpoint is a leaf subsystem and core.engine imports
+    # are heavy — only the engine-state loader needs the types
+    from repro.core.engine import EngineState
+    from repro.core.vpool import VPool
+
+    payload = load_pytree(path)
+    if payload.get("kind") != "engine_state":
+        raise ValueError(f"{path} is not an engine-state checkpoint "
+                         f"(kind={payload.get('kind')!r}); use load_pytree")
+    fields = payload["fields"]
+    rng = jax.random.wrap_key_data(jnp.asarray(payload["rng_key_data"]))
+    pool = VPool(**payload["pool"])
+    state = EngineState(rng=rng, pool=pool, **fields)
+    # an empty metadata dict has no leaves, so the flat-key encoding drops
+    # the subtree entirely — absent means "none was saved"
+    return state, payload.get("metadata", {})

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 from repro.core import aggregation as agg_mod
 from repro.core import comms as comms_mod
 from repro.core import counters, vpool
+from repro.core import faults as faults_mod
 from repro.core.hetero import DECAYS
 
 DISTS = ("exp", "lognormal", "det")
@@ -232,7 +233,8 @@ def _where_mask(mask, on_true, on_false):
 
 
 def _get_async_jit(engine, events: int, aggregation: str, comms_key,
-                   async_key):
+                   async_key, faults_key=None, guards_key=None,
+                   churn_mode: str = "none"):
     """The whole event loop — every aggregation event, every candidate
     device round, every staleness-decayed delta fold-in — as ONE compiled
     program (a ``lax.scan`` over aggregation events).
@@ -258,6 +260,21 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
        model version was committed, ages nobody);
     4. arrivals reset staleness and are flagged for re-dispatch; everyone
        still in flight ages by one model version iff a commit happened.
+
+    ``faults_key`` / ``guards_key`` / ``churn_mode`` mirror the
+    ``core.faults`` statics of ``EdgeEngine._get_rounds_fused_jit``.
+    Event-time semantics: churn (always the in-trace birth/death process —
+    there is no host schedule for event time) is stepped at each event's
+    start: a device that dies parks its queue slot at ``+inf`` (it can
+    never arrive — the arrival test requires a FINITE completion time), a
+    slot that rebirths is freshly dispatched the current fog model with
+    zero staleness.  A crash loses the local round's work (the commit is
+    reverted, so the banked delta is the zero it started with) AND spikes
+    the completion latency by ``restart_mult`` — the device restarts and
+    reports late, delivering nothing useful.  Drops, wire corruption, and
+    the guard verdict act on the ARRIVED uploads exactly as in the sync
+    engine, with the fog commit gated on accepted (not merely arrived)
+    uploads.
     """
     from repro.core.engine import _compiled
     from repro.core.federated import _donate_argnums
@@ -275,6 +292,12 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
               if compress else None)
         dist, sigma, has_quorum, has_timer, decay, decay_rate = async_key
         dist_key = (dist, sigma)
+        faults_on = faults_key is not None
+        guards_on = guards_key is not None
+        churn_on = churn_mode != "none"
+        fault_like = faults_on or guards_on or churn_on
+        if faults_on:
+            corrupt_mode, num_classes = faults_key
         step = engine._acquisition_step(False)
         R = engine.cfg.acquisitions
         round_unroll = R if engine.unroll else 1
@@ -291,18 +314,62 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
             return v if axis is None else jax.lax.all_gather(
                 v, axis, tiled=True)
 
-        def local(v):   # global [D] → this shard's [D_local] slice
+        def local(v):   # global [D, ...] → this shard's [D_local] rows
             if axis is None:
                 return v
             off = jax.lax.axis_index(axis) * D_local
-            return jax.lax.dynamic_slice(v, (off,), (D_local,))
+            return jax.lax.dynamic_slice_in_dim(v, off, D_local, axis=0)
 
         def events_all(state, images, labels, seed_x, seed_y, val_x, val_y,
-                       keys_all, lat_keys, means_g, quorum, timer, mix_rate):
+                       keys_all, lat_keys, means_g, quorum, timer, mix_rate,
+                       fkeys, frates, gfactor):
+            n_pad = labels.shape[1]
+
             def one_event(carry, xs):
                 (fog, params, opt_state, pool, rng, residual, pending,
-                 staleness, next_done, dispatch, t_now) = carry
-                keys_r, lat_key = xs
+                 staleness, next_done, dispatch, t_now, live) = carry
+                keys_r, lat_key, fkey = xs
+
+                # ---- 0. churn + fault draws for this event (one fault key
+                # per event, folded at the absolute index)
+                if faults_on or churn_on:
+                    k_live, k_flt, k_labels = jax.random.split(fkey, 3)
+                live_g = None
+                if churn_on:
+                    live_prev = live
+                    live_g = faults_mod.update_liveness(
+                        k_live, gather(live),
+                        frates[faults_mod.RATE_DEATH],
+                        frates[faults_mod.RATE_BIRTH])
+                    live = local(live_g)
+                    born = (live > 0) & (live_prev <= 0)
+                    # a dead device leaves the queue (its slot parks at
+                    # +inf — it can never arrive) and cancels any pending
+                    # dispatch; a reborn slot is freshly dispatched the
+                    # current fog model with zero staleness
+                    dispatch = jnp.where(live > 0,
+                                         jnp.where(born, 1.0, dispatch),
+                                         0.0)
+                    next_done = jnp.where(live > 0, next_done,
+                                          jnp.float32(jnp.inf))
+                    staleness = jnp.where(born, 0, staleness)
+                if faults_on:
+                    crash_g, drop_g, corrupt_g, noise_g = \
+                        faults_mod.draw_fault_masks(k_flt, frates, D)
+                    if live_g is not None:
+                        crash_g = crash_g * live_g
+                    crash_l = local(crash_g)
+
+                # label-noise burst: flagged devices train this event on
+                # uniformly random labels (global draw, sliced local)
+                labels_r = labels
+                if faults_on:
+                    noisy_l = local(jax.random.randint(
+                        k_labels, (D, n_pad), 0, num_classes,
+                        dtype=labels.dtype))
+                    noise_l = local(noise_g)
+                    labels_r = jnp.where(noise_l[:, None] > 0,
+                                         noisy_l, labels)
 
                 # ---- 1. dispatch + candidate round (masked commit)
                 fog_b = tmap(lambda a: jnp.broadcast_to(
@@ -319,16 +386,25 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                         c, None, length=R, unroll=round_unroll)
 
                 (p2, o2, pool2, rng2), _ = jax.vmap(device_round)(
-                    (params, opt_state, pool, keys_r), images, labels)
-                params = _where_mask(dispatch, p2, params)
-                opt_state = _where_mask(dispatch, o2, opt_state)
-                pool = _where_mask(dispatch, pool2, pool)
-                rng = jnp.where(dispatch > 0, rng2, rng)
+                    (params, opt_state, pool, keys_r), images, labels_r)
+                # a crashed device loses the round: nothing commits, so the
+                # delta it banks is the zero its fresh dispatch started
+                # with — it restarts and reports late (latency spike below)
+                # with nothing useful to deliver
+                commit = (dispatch * (1.0 - crash_l) if faults_on
+                          else dispatch)
+                params = _where_mask(commit, p2, params)
+                opt_state = _where_mask(commit, o2, opt_state)
+                pool = _where_mask(commit, pool2, pool)
+                rng = jnp.where(commit > 0, rng2, rng)
                 pending = _where_mask(
-                    dispatch, tmap(jnp.subtract, params, params_base),
+                    commit, tmap(jnp.subtract, params, params_base),
                     pending)
                 # same key on every shard → consistent global latency draw
                 lat_g = _draw_latency(dist_key, lat_key, means_g)
+                if faults_on:
+                    lat_g = lat_g * jnp.where(
+                        crash_g > 0, frates[faults_mod.RATE_RESTART], 1.0)
                 next_done = jnp.where(dispatch > 0, t_now + local(lat_g),
                                       next_done)
 
@@ -339,9 +415,15 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                             if has_quorum else inf)
                 t_timer = t_now + timer if has_timer else inf
                 t_event = jnp.minimum(t_quorum, t_timer)
-                arrived_g = (nd_g <= t_event).astype(jnp.float32)
+                # the finiteness test keeps parked (dead) slots out of an
+                # all-dead quorum event, where t_event = inf and the bare
+                # <= would count every +inf slot as arrived
+                arrived_g = ((nd_g <= t_event)
+                             & jnp.isfinite(nd_g)).astype(jnp.float32)
                 arrived_l = local(arrived_g)
                 arrived_any = jnp.sum(arrived_g) > 0
+                recv_g = (arrived_g * (1.0 - drop_g) if faults_on
+                          else arrived_g)
 
                 # ---- 3. staleness-decayed Eq. 1 over the arrivals
                 counts_g = gather(
@@ -358,13 +440,6 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                 else:  # fedavg_n
                     raw = counts_g
                 stale_g = gather(staleness)
-                w_g = agg_mod.staleness_weights(
-                    raw, stale_g, arrived_g, kind=decay, rate=decay_rate)
-                # zero-arrival timer event: aggregate NOTHING (the uniform
-                # fallback of normalize_weights would fold every in-flight
-                # delta in early AND leave it pending — double-applying it
-                # on its real arrival)
-                w_g = jnp.where(arrived_any, w_g, jnp.zeros_like(w_g))
 
                 upload = (tmap(jnp.add, pending, residual) if use_ef
                           else pending)
@@ -376,17 +451,57 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                             qkeys, upload)
                     if use_ef:
                         # EF updates on actual communication only: an
-                        # in-flight device transmitted nothing this event
+                        # in-flight device transmitted nothing this event.
+                        # The update uses the clean ``sent`` — wire
+                        # corruption below is fog-side and must never leak
+                        # into the device-side buffer.
                         residual = _where_mask(
                             arrived_l, tmap(jnp.subtract, upload, sent),
                             residual)
                 else:
                     sent = upload
+                if faults_on:
+                    # wire corruption: received uploads only, applied
+                    # AFTER the EF residual update
+                    sent = faults_mod.corrupt_stacked(
+                        corrupt_mode, sent, local(corrupt_g * recv_g),
+                        frates[faults_mod.RATE_CORRUPT_SCALE])
+
+                # fog-side guards: reject non-finite / norm-outlier
+                # uploads and ZERO their leaves (a 0-weight NaN still
+                # poisons a weighted sum); clip scales outliers back
+                if guards_on:
+                    norms_g = gather(faults_mod.stacked_norms(sent))
+                    finite_g = gather(faults_mod.stacked_finite(sent))
+                    reject_g, clip_g, scale_g = faults_mod.guard_verdict(
+                        norms_g, finite_g, recv_g, policy=guards_key,
+                        factor=gfactor)
+                    accept_g = recv_g * (1.0 - reject_g)
+                    if guards_key == "clip":
+                        scale_l = local(scale_g)
+                        sent = tmap(
+                            lambda a: a * scale_l.reshape(
+                                (-1,) + (1,) * (a.ndim - 1)), sent)
+                    sent = _where_mask(local(accept_g), sent,
+                                       tmap(jnp.zeros_like, sent))
+                else:
+                    accept_g = recv_g
+
+                w_g = agg_mod.staleness_weights(
+                    raw, stale_g, accept_g, kind=decay, rate=decay_rate)
+                # zero-accept event (a timer firing early, every arrival
+                # dropped or rejected): aggregate NOTHING — the uniform
+                # fallback of normalize_weights would fold every in-flight
+                # delta in early AND leave it pending, double-applying it
+                # on its real arrival
+                accept_any = jnp.sum(accept_g) > 0
+                w_g = jnp.where(accept_any, w_g, jnp.zeros_like(w_g))
+
                 agg_delta = agg_mod.weighted_sum_stacked(sent, local(w_g))
                 if axis is not None:
                     agg_delta = jax.lax.psum(agg_delta, axis)
                 fog_new = tmap(lambda f, d: f + mix_rate * d, fog, agg_delta)
-                fog = tmap(lambda a, b: jnp.where(arrived_any, a, b),
+                fog = tmap(lambda a, b: jnp.where(accept_any, a, b),
                            fog_new, fog)
 
                 # ---- 4. bookkeeping: re-dispatch arrivals, age the rest
@@ -398,11 +513,16 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                 # carry already-applied deltas)
                 pending = _where_mask(
                     arrived_l, tmap(jnp.zeros_like, pending), pending)
-                staleness = jnp.where(
-                    arrived_l > 0, 0,
-                    staleness + arrived_any.astype(jnp.int32))
+                aging = accept_any.astype(jnp.int32)
+                if churn_on:
+                    # dead devices have nothing in flight to grow stale
+                    aging = aging * (live > 0).astype(jnp.int32)
+                staleness = jnp.where(arrived_l > 0, 0, staleness + aging)
                 dispatch = arrived_l
-                t_now = t_event
+                # an all-dead, timer-less fleet yields t_event = inf:
+                # freeze the clock instead of poisoning every later event
+                # (reborn devices restart it)
+                t_now = jnp.where(jnp.isfinite(t_event), t_event, t_now)
 
                 rec = {"weights": w_g, "upload_mask": arrived_g,
                        "n_labeled": counts_g, "staleness": stale_g,
@@ -410,6 +530,17 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                        "arrivals": jnp.sum(arrived_g),
                        "timer_fired": jnp.logical_and(
                            jnp.isfinite(t_timer), t_timer <= t_quorum)}
+                if churn_on:
+                    rec["live"] = live_g
+                if faults_on:
+                    rec["crashed"] = crash_g
+                    rec["dropped"] = drop_g * arrived_g
+                    rec["corrupted"] = corrupt_g * recv_g
+                if guards_on:
+                    rec["rejected"] = reject_g
+                    rec["clipped"] = clip_g
+                    rec["upload_norms"] = norms_g
+                    rec["accepted"] = accept_g
                 if has_val:
                     rec["device_accs"] = accs_g
                     preds = jnp.argmax(eval_fn(fog, val_x), -1)
@@ -417,7 +548,7 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                         (preds == val_y).astype(jnp.float32))
                 return (fog, params, opt_state, pool, rng, residual,
                         pending, staleness, next_done, dispatch,
-                        t_now), rec
+                        t_now, live), rec
 
             # prologue encoded as carry init: everyone is freshly
             # dispatched the fog model (= any state row — init/set_params
@@ -428,21 +559,24 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                      state.staleness,
                      jnp.zeros((D_local,), jnp.float32),
                      jnp.ones((D_local,), jnp.float32),
-                     jnp.float32(0.0))
+                     jnp.float32(0.0), state.live)
             carry, recs = jax.lax.scan(one_event, carry,
-                                       (keys_all, lat_keys))
+                                       (keys_all, lat_keys, fkeys))
             (fog, params, opt_state, pool, rng, residual, pending,
-             staleness, *_) = carry
+             staleness, _nd, _disp, _t, live) = carry
             out_state = type(state)(params, opt_state, pool, rng,
-                                    residual, pending, staleness)
+                                    residual, pending, staleness, live)
             return out_state, recs, fog
 
         if mesh is not None:
             dev = P(DEVICE_AXIS)
             events_all = shard_map(
                 events_all, mesh=mesh,
+                # fkeys / frates / gfactor replicate: fault draws are
+                # global-fleet facts every shard derives identically
                 in_specs=(dev, dev, dev, P(), P(), P(), P(),
-                          P(None, DEVICE_AXIS), P(), P(), P(), P(), P()),
+                          P(None, DEVICE_AXIS), P(), P(), P(), P(), P(),
+                          P(), P(), P()),
                 # recs and the fog model are replicated (all_gather / psum
                 # results); state stays sharded
                 out_specs=(dev, P(), P()), check_rep=False)
@@ -450,14 +584,16 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
         return jax.jit(events_all, donate_argnums=_donate_argnums(0))
 
     key = engine._cache_key("async_events", False) + (
-        events, aggregation, comms_key, async_key)
+        events, aggregation, comms_key, async_key, faults_key, guards_key,
+        churn_mode)
     return _compiled(key, build)
 
 
 def run_events_fused(engine, state, events: int, *,
                      async_cfg: AsyncConfig,
                      aggregation: str = "fedavg_n",
-                     comms=None, start_event: int = 0):
+                     comms=None, start_event: int = 0,
+                     faults=None, guards=None):
     """``events`` fog aggregation events — rounds-free FedAsync/FedBuff
     dynamics — in ONE dispatch.
 
@@ -494,6 +630,15 @@ def run_events_fused(engine, state, events: int, *,
     With ``async_cfg.mean_latency == 0`` (and ``device_means`` unset/zero)
     and ``quorum >= D``, every event is a full barrier and the result
     matches ``run_rounds_fused`` ≤ 1e-5.
+
+    ``faults`` / ``guards`` (``core.faults``) inject event-time faults and
+    enable the fog-side aggregation guards — see
+    ``EdgeEngine.run_rounds_fused`` for the shared surface.  Async churn
+    is always the in-trace birth/death process (event time has no host
+    round schedule to key a ``live_mask`` against): dead devices park
+    their queue slot at ``+inf`` and cannot arrive; reborn slots are
+    freshly dispatched the current fog model.  A crash loses the round's
+    work AND multiplies the completion latency by ``faults.restart_mult``.
     """
     if aggregation not in _ASYNC_AGGREGATIONS:
         raise ValueError(
@@ -528,6 +673,20 @@ def run_events_fused(engine, state, events: int, *,
         state = state._replace(pending=jax.tree_util.tree_map(
             jnp.zeros_like, state.params))
     state = state._replace(staleness=jnp.zeros((D,), jnp.int32))
+    # fault statics + liveness hygiene (the run_rounds_fused contract:
+    # churn is "process" whenever faults are on, zero rates stay fully
+    # live; with faults off any carried liveness is dropped)
+    if guards is not None and guards.policy == "off":
+        guards = None
+    churn_mode = "process" if faults is not None else "none"
+    if churn_mode != "none":
+        if not jax.tree_util.tree_leaves(state.live):
+            state = state._replace(live=jnp.ones((D,), jnp.float32))
+    else:
+        state = state._replace(live=())
+    faults_key = faults_mod.faults_static_key(faults,
+                                              engine._num_classes())
+    guards_key = faults_mod.guards_static_key(guards)
     state = engine._shard_state(state)
 
     async_key = (async_cfg.dist, float(async_cfg.sigma),
@@ -546,13 +705,21 @@ def run_events_fused(engine, state, events: int, *,
                        else D)
     timer = jnp.float32(async_cfg.timer if async_cfg.timer is not None
                         else 0.0)
-    fn = _get_async_jit(engine, events, aggregation, comms_key, async_key)
+    fkeys = (faults_mod.fault_keys(faults, start_event, events)
+             if faults is not None
+             else jax.random.split(jax.random.key(0), events))
+    frates = jnp.asarray(faults_mod.rates_vector(faults))
+    gfactor = jnp.float32(guards.norm_factor if guards is not None
+                          else 0.0)
+    fn = _get_async_jit(engine, events, aggregation, comms_key, async_key,
+                        faults_key, guards_key, churn_mode)
     counters.count_dispatch()
     state, recs, fog = fn(state, engine.images, engine.labels,
                           engine.seed_images, engine.seed_labels,
                           engine.test_images, engine.test_labels,
                           keys_all, lat_keys, means, quorum, timer,
-                          jnp.float32(async_cfg.mix_rate))
+                          jnp.float32(async_cfg.mix_rate), fkeys, frates,
+                          gfactor)
     return state, recs, fog
 
 

@@ -37,6 +37,13 @@ is made a first-class, measured, and optimizable axis here:
   engine state: they survive chained ``run_rounds_fused`` calls and shard
   with the device axis under the mesh path.
 
+Fault interplay (``core.faults``): wire corruption is applied FOG-SIDE, to
+the stacked deltas the fog node received — after the device committed its
+clean state and after the clean sent delta updated the EF residual.  A
+corrupted or guard-rejected upload therefore still *cost* its bytes on the
+wire (the accounting here is unchanged), and the residual never absorbs
+corruption it did not cause.
+
 Everything traced here is shape-static and vmap/shard_map-safe; everything
 byte-counted here is host-side integer arithmetic.
 """

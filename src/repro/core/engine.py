@@ -64,6 +64,7 @@ from repro.core import acquisition as acq
 from repro.core import aggregation as agg_mod
 from repro.core import comms as comms_mod
 from repro.core import counters, vpool
+from repro.core import faults as faults_mod
 from repro.core import hetero as hetero_mod
 from repro.kernels.acquisition_scores import acquisition_scores_fused
 from repro.launch.mesh import DEVICE_AXIS
@@ -99,7 +100,13 @@ class EngineState(NamedTuple):
     ``pending`` holds each straggler's not-yet-delivered delta (a
     ``[D, ...]`` mirror of params), ``staleness`` its age in rounds
     (``[D] int32``).  Like ``residual`` they default to empty pytrees and
-    shard over the device mesh axis."""
+    shard over the device mesh axis.
+
+    ``live`` is the churn liveness vector (``core.faults``): ``[D]`` 0/1
+    float, populated only when a fault/churn config is active.  Dead slots
+    are bitwise inert — their pools, pending backlogs, residuals, and
+    staleness counters freeze, and Eq. 1 weights normalize over live
+    arrivals only."""
     params: Any          # [D, ...] pytree
     opt_state: Any       # [D, ...] pytree
     pool: vpool.VPool    # [D, ...] fields
@@ -107,6 +114,7 @@ class EngineState(NamedTuple):
     residual: Any = ()   # [D, ...] pytree (comms error feedback) or ()
     pending: Any = ()    # [D, ...] pytree (buffered straggler deltas) or ()
     staleness: Any = ()  # [D] int32 staleness counters or ()
+    live: Any = ()       # [D] float32 churn liveness (1 = live) or ()
 
 
 def stack_device_data(device_data: Sequence):
@@ -219,6 +227,11 @@ class EdgeEngine:
             cfg.seed + 7919 * (d + 1) + 104729 * round_idx))(
                 jnp.arange(self.num_devices))
 
+    def _num_classes(self) -> int:
+        """Label vocabulary size (the label-noise redraw bound)."""
+        return int(getattr(getattr(self.trainer, "model_cfg", None),
+                           "num_classes", 10))
+
     def _shard_state(self, state: EngineState) -> EngineState:
         if self.mesh is None:
             return state
@@ -249,7 +262,24 @@ class EdgeEngine:
         return self._shard_state(
             EngineState(params, self.trainer.opt.init(params), state.pool,
                         self.device_keys(round_idx), state.residual,
-                        state.pending, state.staleness))
+                        state.pending, state.staleness, state.live))
+
+    def resume_state(self, state: EngineState, *,
+                     next_round: int) -> EngineState:
+        """Re-key a restored checkpoint for continuation.
+
+        The fused engines take round-t keys from the precomputed schedule
+        (``device_keys`` at ABSOLUTE round indices) and DISCARD the evolved
+        carry rng, so a checkpointed ``state.rng`` is one round stale:
+        resuming with it would replay the interrupted round's randomness.
+        This installs the key the uninterrupted run would have used for
+        ``next_round`` (= rounds/events completed so far) and re-commits the
+        state to the mesh shards; pass the same value as ``start_round`` /
+        ``start_event`` on the continuation call and the resumed run is
+        bit-for-bit the uninterrupted one (asserted in
+        ``tests/test_faults.py``)."""
+        return self._shard_state(
+            state._replace(rng=self.device_keys(next_round)))
 
     def device_params_list(self, state: EngineState) -> List:
         return agg_mod.unstack_models(state.params)
@@ -406,7 +436,8 @@ class EdgeEngine:
     # ----------------------------------------------------- fused fog rounds
     def _get_rounds_fused_jit(self, rounds: int, aggregation: str,
                               mask_mode: str, comms_key=None,
-                              hetero_key=None):
+                              hetero_key=None, faults_key=None,
+                              guards_key=None, churn_mode: str = "none"):
         """T whole rounds — device AL + Eq. 1 aggregation + re-dispatch — as
         ONE compiled program (an outer scan over rounds).
 
@@ -444,6 +475,25 @@ class EdgeEngine:
         backlog-bearing upload) and with the step-limit compute profile
         (per-device traced fit budgets), and shards unchanged: staleness is
         one more all_gather'd [D] scalar, pending is device-local state.
+
+        ``faults_key`` / ``guards_key`` / ``churn_mode`` are the
+        fault-tolerance statics (``core.faults``): ``faults_key`` is
+        ``(corrupt_mode, num_classes)`` or None — every fault RATE is
+        traced (one ``[N_RATES]`` vector argument), so rate sweeps reuse
+        the executable; ``guards_key`` is the guard policy (``"drop"`` /
+        ``"clip"``) or None, with the outlier ``norm_factor`` traced;
+        ``churn_mode`` selects where liveness comes from: ``"given"`` (a
+        ``[rounds, D]`` host schedule in the xs), ``"process"`` (the
+        in-trace birth/death chain carried in ``state.live``), or
+        ``"none"``.  With any of them active the round aggregates in DELTA
+        form (exact because Σα = 1): uploads are masked to live,
+        non-crashed senders; dropped uploads vanish fog-side; wire
+        corruption hits the received delta AFTER the error-feedback
+        residual update (the device-side EF buffer stays clean); the guard
+        verdict zeroes or clips rejected uploads and the Eq. 1 weights
+        renormalize over the ACCEPTED arrivals, an all-rejected round
+        keeping the previous fog model.  With all three off the emitted
+        program is the unchanged pre-fault one.
         """
 
         def build():
@@ -458,6 +508,16 @@ class EdgeEngine:
                 h_decay, h_rate, h_buffer, h_steps = hetero_key
             else:
                 h_decay, h_rate, h_buffer, h_steps = "none", 1.0, False, False
+            faults_on = faults_key is not None
+            guards_on = guards_key is not None
+            churn_on = churn_mode != "none"
+            fault_like = faults_on or guards_on or churn_on
+            # faults and guards need the per-device upload tree explicitly
+            # (to corrupt / norm-check / zero it), so they force the exact
+            # delta-form aggregation even without a codec
+            delta_form_always = compress or faults_on or guards_on
+            if faults_on:
+                corrupt_mode, num_classes = faults_key
             step = self._acquisition_step(False)
             R = self.cfg.acquisitions
             round_unroll = R if self.unroll else 1
@@ -474,27 +534,75 @@ class EdgeEngine:
                 return v if axis is None else jax.lax.all_gather(
                     v, axis, tiled=True)
 
-            def local(v):   # global [D] → this shard's [D_local] slice
+            def local(v):   # global [D, ...] → this shard's [D_local] rows
                 if axis is None:
                     return v
                 off = jax.lax.axis_index(axis) * D_local
-                return jax.lax.dynamic_slice(v, (off,), (D_local,))
+                return jax.lax.dynamic_slice_in_dim(v, off, D_local, axis=0)
 
             def rounds_all(state, images, labels, seed_x, seed_y,
                            val_x, val_y, keys_all, mask_arg, fraction,
-                           step_limits):
+                           step_limits, live_arg, fkeys, frates, gfactor):
+                n_pad = labels.shape[1]
+
+                def _where_vec(vec_l, on_true, on_false):
+                    # leafwise per-device select over stacked [D_local, ...]
+                    return tmap(
+                        lambda a, o: jnp.where(
+                            vec_l.reshape(
+                                (-1,) + (1,) * (a.ndim - 1)) > 0, a, o),
+                        on_true, on_false)
+
                 def one_round(carry, xs):
                     (params, opt_state, pool, _, residual, pending,
-                     staleness) = carry
+                     staleness, live) = carry
                     if mask_mode == "bernoulli":
-                        keys_r, mask_key = xs
+                        keys_r, mask_key, live_row, fkey = xs
                         # same key on every shard → consistent global draw
                         mask_g = jax.random.bernoulli(
                             mask_key, fraction, (D,)).astype(jnp.float32)
                         mask_l = local(mask_g)
                     else:
-                        keys_r, mask_l = xs
+                        keys_r, mask_l, live_row, fkey = xs
                         mask_g = gather(mask_l)
+
+                    # ---- liveness + fault draws (one fault key per round,
+                    # folded at the absolute index: sweeps and resumed runs
+                    # replay the identical fault trace)
+                    if faults_on or churn_mode == "process":
+                        k_live, k_flt, k_labels = jax.random.split(fkey, 3)
+                    live_g = None
+                    if churn_mode == "given":
+                        live_g = live_row          # replicated [D] xs row
+                        live = local(live_g)
+                    elif churn_mode == "process":
+                        live_g = faults_mod.update_liveness(
+                            k_live, gather(live), frates[faults_mod.RATE_DEATH],
+                            frates[faults_mod.RATE_BIRTH])
+                        live = local(live_g)
+                    if faults_on:
+                        crash_g, drop_g, corrupt_g, noise_g = \
+                            faults_mod.draw_fault_masks(k_flt, frates, D)
+                    # active = survived this round's local work: dead or
+                    # crashed devices commit nothing and upload nothing
+                    active_g = live_g
+                    if faults_on:
+                        crash_live_g = (crash_g if live_g is None
+                                        else crash_g * live_g)
+                        active_g = ((1.0 - crash_g) if active_g is None
+                                    else active_g * (1.0 - crash_g))
+
+                    # label-noise burst: the flagged device trains this round
+                    # on uniformly random labels (drawn globally with one
+                    # key so every mesh shard agrees, then sliced local)
+                    labels_r = labels
+                    if faults_on:
+                        noisy_l = local(jax.random.randint(
+                            k_labels, (D, n_pad), 0, num_classes,
+                            dtype=labels.dtype))
+                        noise_l = local(noise_g)
+                        labels_r = jnp.where(noise_l[:, None] > 0,
+                                             noisy_l, labels)
 
                     # the model every device starts this round from (all rows
                     # identical — the previous round's / init's re-dispatch);
@@ -509,9 +617,31 @@ class EdgeEngine:
                                 steps_d if h_steps else None),
                             c, None, length=R, unroll=round_unroll)
 
-                    (params, opt_state, pool, rng), _ = jax.vmap(device_round)(
-                        (params, opt_state, pool, keys_r), images, labels,
+                    (params2, opt2, pool2, rng2), _ = jax.vmap(device_round)(
+                        (params, opt_state, pool, keys_r), images, labels_r,
                         step_limits)
+                    if active_g is not None:
+                        # dead/crashed devices lose the round: pool, params,
+                        # optimizer, and key stream all stay frozen (inert)
+                        active_l = local(active_g)
+                        params = _where_vec(active_l, params2, params)
+                        opt_state = _where_vec(active_l, opt2, opt_state)
+                        pool = _where_vec(active_l, pool2, pool)
+                        rng = jnp.where(active_l > 0, rng2, keys_r)
+                    else:
+                        params, opt_state, pool, rng = (params2, opt2,
+                                                        pool2, rng2)
+
+                    # upload_: the device transmitted; recv_: the fog node
+                    # received (drops happen on the wire).  All equal to the
+                    # participation mask when faults are off.
+                    if active_g is not None:
+                        upload_g = mask_g * active_g
+                        upload_l = local(upload_g)
+                    else:
+                        upload_g, upload_l = mask_g, mask_l
+                    recv_g = (upload_g * (1.0 - drop_g) if faults_on
+                              else upload_g)
 
                     # ---- in-compile fog node: Eq. 1 over the stacked axis
                     counts_g = gather(
@@ -530,46 +660,20 @@ class EdgeEngine:
                     else:  # optimal: one-hot at the best participant
                         masked = jnp.where(mask_g > 0, accs_g, -jnp.inf)
                         raw = jax.nn.one_hot(jnp.argmax(masked), D)
-                    if hetero_on:
-                        # staleness-aware Eq. 1: arrivals weighted by
-                        # raw_i · decay(age of their backlog)
-                        stale_g = gather(staleness)
-                        w_g = agg_mod.staleness_weights(
-                            raw, stale_g, mask_g, kind=h_decay, rate=h_rate)
-                        # a zero-arrival round aggregates NOTHING: the
-                        # no-participant uniform fallback of
-                        # normalize_weights would fold every device's
-                        # banked backlog in now AND re-bank it (the mask-0
-                        # pending branch), double-applying each delta on
-                        # its real arrival.  Zero the weights and keep the
-                        # previous fog model instead (guard below).
-                        arrived_any = jnp.sum(mask_g) > 0
-                        w_g = jnp.where(arrived_any, w_g,
-                                        jnp.zeros_like(w_g))
-                    else:
-                        w_g = agg_mod.normalize_weights(raw, mask_g)
-
-                    def _where_arrived(on_arrival, otherwise):
-                        return tmap(
-                            lambda a, o: jnp.where(
-                                mask_l.reshape(
-                                    (-1,) + (1,) * (a.ndim - 1)) > 0,
-                                a, o),
-                            on_arrival, otherwise)
-
+                    # ---- build the upload trees first: the guard verdict
+                    # needs the actual deltas before weights can exist
                     backlog = None
-                    if h_buffer or compress:
+                    if h_buffer or delta_form_always:
                         # this round's fresh work against the dispatched
                         # base, plus (hetero) the buffered backlog
                         delta = tmap(jnp.subtract, params, params_prev)
                         backlog = (tmap(jnp.add, delta, pending)
                                    if h_buffer else delta)
+                    sent = None
                     if compress:
-                        # delta-form Eq. 1: BASE + Σ αᵢ·C(uᵢ) (exact for
-                        # C = identity because Σα = 1).  The upload uᵢ is
-                        # the backlog-bearing delta plus the carried EF
-                        # residual; everything is device-local except the
-                        # weighted sum's psum.
+                        # delta-form Eq. 1 upload: C(uᵢ) with uᵢ the
+                        # backlog-bearing delta plus the carried EF
+                        # residual; everything stays device-local
                         to_send = (tmap(jnp.add, backlog, residual)
                                    if use_ef else backlog)
                         qkeys = jax.vmap(
@@ -578,14 +682,76 @@ class EdgeEngine:
                             lambda k, d: comms_mod.compress_tree(cc, k, d))(
                                 qkeys, to_send)
                         if use_ef:
-                            # EF updates on actual communication only
+                            # EF updates on actual TRANSMISSION only
                             # (Karimireddy et al.): a device masked out of
-                            # this round transmitted nothing, so its
-                            # residual stays frozen — overwriting it would
-                            # delete error mass a REAL earlier upload still
-                            # owes the fog node.
-                            residual = _where_arrived(
+                            # this round — or dead, or crashed — sent
+                            # nothing, so its residual stays frozen;
+                            # overwriting it would delete error mass a REAL
+                            # earlier upload still owes the fog node.  The
+                            # update uses the clean ``sent``: wire
+                            # corruption below is fog-side and must never
+                            # leak into the device-side buffer.
+                            residual = _where_vec(
+                                upload_l,
                                 tmap(jnp.subtract, to_send, sent), residual)
+                    elif delta_form_always:
+                        sent = backlog
+                    if faults_on:
+                        # wire corruption: received uploads only, applied
+                        # AFTER the EF residual update
+                        sent = faults_mod.corrupt_stacked(
+                            corrupt_mode, sent, local(corrupt_g * recv_g),
+                            frates[faults_mod.RATE_CORRUPT_SCALE])
+
+                    # ---- fog-side guards: reject non-finite / norm-outlier
+                    # uploads and ZERO their leaves (a 0-weight NaN still
+                    # poisons a weighted sum); clip policy scales outliers
+                    # back to the threshold instead
+                    if guards_on:
+                        norms_g = gather(faults_mod.stacked_norms(sent))
+                        finite_g = gather(faults_mod.stacked_finite(sent))
+                        reject_g, clip_g, scale_g = faults_mod.guard_verdict(
+                            norms_g, finite_g, recv_g, policy=guards_key,
+                            factor=gfactor)
+                        accept_g = recv_g * (1.0 - reject_g)
+                        if guards_key == "clip":
+                            scale_l = local(scale_g)
+                            sent = tmap(
+                                lambda a: a * scale_l.reshape(
+                                    (-1,) + (1,) * (a.ndim - 1)), sent)
+                        sent = _where_vec(local(accept_g), sent,
+                                          tmap(jnp.zeros_like, sent))
+                    else:
+                        accept_g = recv_g
+
+                    # ---- Eq. 1 weights over the ACCEPTED arrivals
+                    if hetero_on:
+                        # staleness-aware Eq. 1: arrivals weighted by
+                        # raw_i · decay(age of their backlog)
+                        stale_g = gather(staleness)
+                        w_g = agg_mod.staleness_weights(
+                            raw, stale_g, accept_g, kind=h_decay,
+                            rate=h_rate)
+                    else:
+                        w_g = agg_mod.normalize_weights(raw, accept_g)
+                    if hetero_on or fault_like:
+                        # a zero-accept round aggregates NOTHING: the
+                        # no-participant uniform fallback of
+                        # normalize_weights would aggregate unweighted
+                        # garbage (and, for buffering hetero, fold every
+                        # device's banked backlog in now AND re-bank it —
+                        # the upload-0 pending branch — double-applying
+                        # each delta on its real arrival).  Zero the
+                        # weights and keep the previous fog model instead
+                        # (guard below).
+                        accept_any = jnp.sum(accept_g) > 0
+                        w_g = jnp.where(accept_any, w_g,
+                                        jnp.zeros_like(w_g))
+
+                    if delta_form_always:
+                        # delta-form Eq. 1: BASE + Σ αᵢ·uᵢ (exact for
+                        # C = identity and no faults because Σα = 1); only
+                        # the weighted sum is psum'd
                         agg = agg_mod.weighted_sum_stacked(sent, local(w_g))
                         if axis is not None:
                             agg = jax.lax.psum(agg, axis)
@@ -605,22 +771,42 @@ class EdgeEngine:
                                            pending, local(w_g)))
                         if axis is not None:
                             agg = jax.lax.psum(agg, axis)
-                    if hetero_on:
-                        # zero-arrival guard: no uploads → the fog node
-                        # re-dispatches its previous model unchanged
+                    if hetero_on or fault_like:
+                        # zero-accept guard: no surviving uploads → the
+                        # fog node re-dispatches its previous model
                         agg = tmap(
-                            lambda a, b: jnp.where(arrived_any, a, b),
+                            lambda a, b: jnp.where(accept_any, a, b),
                             agg, tmap(lambda a: a[0], params_prev))
                     if h_buffer:
-                        # straggler bookkeeping: delivered backlogs clear,
-                        # missed rounds accumulate this round's work
-                        pending = _where_arrived(
-                            tmap(jnp.zeros_like, backlog), backlog)
+                        # straggler bookkeeping: transmitted backlogs clear
+                        # (a DROPPED upload still clears — the device
+                        # believes it delivered, so that error mass is
+                        # genuinely lost), missed rounds accumulate this
+                        # round's work
+                        pending = _where_vec(
+                            upload_l, tmap(jnp.zeros_like, backlog),
+                            backlog)
                     if hetero_on:
-                        staleness = jnp.where(mask_l > 0, 0, staleness + 1)
+                        # dead devices don't age: their frozen backlog is
+                        # not getting staler work appended to it
+                        aging = (1 if not churn_on
+                                 else local(live_g).astype(jnp.int32))
+                        staleness = jnp.where(upload_l > 0, 0,
+                                              staleness + aging)
 
                     rec = {"weights": w_g, "upload_mask": mask_g,
                            "n_labeled": counts_g}
+                    if churn_on:
+                        rec["live"] = live_g
+                    if faults_on:
+                        rec["crashed"] = crash_live_g
+                        rec["dropped"] = drop_g * upload_g
+                        rec["corrupted"] = corrupt_g * recv_g
+                    if guards_on:
+                        rec["rejected"] = reject_g
+                        rec["clipped"] = clip_g
+                        rec["upload_norms"] = norms_g
+                        rec["accepted"] = accept_g
                     if hetero_on:
                         rec["staleness"] = stale_g
                     if has_val:
@@ -635,12 +821,14 @@ class EdgeEngine:
                             a[None], (D_local,) + a.shape), agg)
                     opt_state = trainer.opt.init(params)
                     return (params, opt_state, pool, rng, residual, pending,
-                            staleness), rec
+                            staleness, live), rec
 
                 carry = (state.params, state.opt_state, state.pool, state.rng,
-                         state.residual, state.pending, state.staleness)
+                         state.residual, state.pending, state.staleness,
+                         state.live)
                 carry, recs = jax.lax.scan(one_round, carry,
-                                           (keys_all, mask_arg))
+                                           (keys_all, mask_arg, live_arg,
+                                            fkeys))
                 final = jax.tree_util.tree_map(lambda a: a[0], carry[0])
                 return EngineState(*carry), recs, final
 
@@ -651,8 +839,12 @@ class EdgeEngine:
                              else P(None, DEVICE_AXIS))
                 rounds_all = shard_map(
                     rounds_all, mesh=mesh,
+                    # live_arg / fkeys / frates / gfactor are replicated:
+                    # liveness rows and fault draws are global-fleet facts
+                    # every shard derives identically and slices locally
                     in_specs=(dev, dev, dev, P(), P(), P(), P(),
-                              keys_spec, mask_spec, P(), dev),
+                              keys_spec, mask_spec, P(), dev,
+                              P(), P(), P(), P()),
                     # recs and the aggregated model are replicated
                     # (all_gather / psum results), state stays sharded
                     out_specs=(dev, P(), P()), check_rep=False)
@@ -661,13 +853,15 @@ class EdgeEngine:
             return jax.jit(rounds_all, donate_argnums=_donate_argnums(0))
 
         key = self._cache_key("rounds_fused", False) + (
-            rounds, aggregation, mask_mode, comms_key, hetero_key)
+            rounds, aggregation, mask_mode, comms_key, hetero_key,
+            faults_key, guards_key, churn_mode)
         return _compiled(key, build)
 
     def run_rounds_fused(self, state: EngineState, rounds: int, *,
                          upload_mask=None, upload_fraction: float = 1.0,
                          aggregation: str = "fedavg_n", start_round: int = 0,
-                         comms=None, hetero=None):
+                         comms=None, hetero=None, faults=None, guards=None,
+                         live_mask=None):
         """T federated rounds (device AL + fog aggregation + re-dispatch) in
         ONE dispatch.
 
@@ -727,6 +921,25 @@ class EdgeEngine:
         actually upload) and with the mesh path.  ``aggregation="optimal"``
         is argmax selection, not Eq. 1 weighting, so it does not compose
         with staleness decay and is rejected.
+
+        ``faults`` (``core.faults.FaultConfig``) injects device churn,
+        crashes, dropped uploads, wire corruption, and label-noise bursts
+        IN-TRACE (all rates traced — fault sweeps reuse the executable; the
+        fault key stream is its own seed, folded at absolute round
+        indices).  ``guards`` (``core.faults.GuardConfig``) turns on the
+        fog-side guards: non-finite and norm-outlier uploads are rejected
+        (``policy="drop"``) or clipped back to the threshold
+        (``policy="clip"``), counted in ``recs["rejected"]`` /
+        ``recs["clipped"]``, and Eq. 1 renormalizes over the accepted
+        arrivals; an all-rejected round keeps the previous fog model.
+        ``live_mask`` (``[rounds, D]`` or ``[D]``, truthy = live) drives
+        churn from a host schedule (``core.faults.liveness_schedule``)
+        instead of the in-trace birth/death process — passing it alongside
+        ``faults.death_rate``/``birth_rate`` > 0 is an error.  Liveness is
+        carried in ``state.live``; dead slots are bitwise inert and rejoin
+        with the current fog model at the next dispatch.  All of it
+        composes with ``comms``, ``hetero``, and the mesh, and the round
+        stays ONE dispatch.
         """
         if aggregation not in _AGGREGATIONS:
             raise ValueError(f"unknown aggregation {aggregation!r}: "
@@ -740,6 +953,22 @@ class EdgeEngine:
                 "aggregation='optimal' picks one argmax model and has no "
                 "Eq. 1 weights for staleness decay to act on; use "
                 "average | weighted | fedavg_n with hetero")
+        if guards is not None and guards.policy == "off":
+            guards = None
+        if aggregation == "optimal" and (
+                faults is not None or guards is not None
+                or live_mask is not None):
+            raise ValueError(
+                "aggregation='optimal' picks one argmax model, not Eq. 1 "
+                "weights, so liveness masking and guard rejection have "
+                "nothing to renormalize; use average | weighted | fedavg_n "
+                "with faults/guards/live_mask")
+        if live_mask is not None and faults is not None and faults.has_churn:
+            raise ValueError(
+                "pass either an explicit live_mask host schedule or "
+                "faults.death_rate/birth_rate for the in-trace churn "
+                "process, not both (set the rates to 0 to drive churn "
+                "from the schedule)")
         self._check_capacity(state, rounds=rounds)
         D = self.num_devices
         comms_key = None
@@ -792,6 +1021,22 @@ class EdgeEngine:
             # hetero off: drop any carried buffers so the compiled carry
             # structure matches (mirrors the residual hygiene above)
             state = state._replace(pending=(), staleness=())
+        # churn/fault statics.  churn_mode is "process" whenever faults are
+        # on (zero birth/death rates leave the fleet fully live), so
+        # fault-rate sweeps share one executable.
+        churn_mode = ("given" if live_mask is not None
+                      else "process" if faults is not None else "none")
+        if churn_mode != "none":
+            if not jax.tree_util.tree_leaves(state.live):
+                state = state._replace(live=jnp.ones((D,), jnp.float32))
+            state = self._shard_state(state)
+        else:
+            # churn off: drop any carried liveness (same hygiene as the
+            # residual/pending/staleness buffers above)
+            state = state._replace(live=())
+        faults_key = faults_mod.faults_static_key(faults,
+                                                  self._num_classes())
+        guards_key = faults_mod.guards_static_key(guards)
         # round 0 consumes the incoming state's keys; later rounds follow
         # the legacy set_params schedule (device_keys at the absolute index)
         later = [self.device_keys(start_round + t) for t in range(1, rounds)]
@@ -815,8 +1060,28 @@ class EdgeEngine:
         else:
             mask_mode = "given"
             mask_arg = jnp.ones((rounds, D), jnp.float32)
+        if live_mask is not None:
+            lm = np.asarray(live_mask, np.float32)
+            if lm.ndim == 1:
+                lm = np.broadcast_to(lm, (rounds, D))
+            if lm.shape != (rounds, D):
+                raise ValueError(f"live_mask shape {lm.shape} != "
+                                 f"{(rounds, D)}")
+            live_arg = jnp.asarray(lm)
+        else:
+            live_arg = jnp.ones((rounds, D), jnp.float32)
+        # the fault surface is traced: per-round fault keys (absolute
+        # indices), the rates vector, and the guard factor all ride along
+        # as arguments, with inert fill-ins when the features are off
+        fkeys = (faults_mod.fault_keys(faults, start_round, rounds)
+                 if faults is not None
+                 else jax.random.split(jax.random.key(0), rounds))
+        frates = jnp.asarray(faults_mod.rates_vector(faults))
+        gfactor = jnp.float32(guards.norm_factor if guards is not None
+                              else 0.0)
         fn = self._get_rounds_fused_jit(rounds, aggregation, mask_mode,
-                                        comms_key, hetero_key)
+                                        comms_key, hetero_key, faults_key,
+                                        guards_key, churn_mode)
         # the compute profile is a traced [D] argument (profile sweeps reuse
         # the executable); a full-budget fill-in rides along when unused
         sl = jnp.asarray(
@@ -826,23 +1091,28 @@ class EdgeEngine:
         state, recs, final = fn(state, self.images, self.labels,
                                 self.seed_images, self.seed_labels,
                                 self.test_images, self.test_labels,
-                                keys_all, mask_arg, fraction, sl)
+                                keys_all, mask_arg, fraction, sl,
+                                live_arg, fkeys, frates, gfactor)
         return state, recs, final
 
     # -------------------------------------------------- async event loop
     def run_async(self, state: EngineState, events: int, *, async_cfg,
                   aggregation: str = "fedavg_n", comms=None,
-                  start_event: int = 0):
+                  start_event: int = 0, faults=None, guards=None):
         """Rounds-free FedAsync/FedBuff aggregation: ``events`` quorum- or
         timer-triggered fog aggregation events over a continuous-time
         device latency model, in ONE dispatch — see
         ``core.async_engine.run_events_fused`` (this is a thin delegate so
         the engine's three execution modes live on one object: ``run_round``
-        / ``run_rounds_fused`` / ``run_async``)."""
+        / ``run_rounds_fused`` / ``run_async``).  ``faults`` / ``guards``
+        are the ``core.faults`` fault-injection and aggregation-guard
+        configs; async churn always uses the in-trace birth/death process
+        (there is no host liveness schedule for event time)."""
         from repro.core.async_engine import run_events_fused
         return run_events_fused(self, state, events, async_cfg=async_cfg,
                                 aggregation=aggregation, comms=comms,
-                                start_event=start_event)
+                                start_event=start_event, faults=faults,
+                                guards=guards)
 
     # ------------------------------------------------------------ drivers
     def run_round(self, state: EngineState, *, record_curves: bool = True):

@@ -1,0 +1,365 @@
+"""Fault injection + aggregation guards for fault-tolerant fleets.
+
+Industrial edge fleets are defined by churn and partial failure: devices
+join and leave mid-experiment, crash mid-round, lose uploads in transit,
+or ship corrupted (even non-finite) deltas.  This module gives the
+one-dispatch engines (``EdgeEngine.run_rounds_fused`` and the async event
+loop) a measured fault envelope without breaking the compile-once
+discipline:
+
+* **``FaultConfig``** — the injected fault surface.  Every rate is a
+  TRACED scalar (packed into one ``[N_RATES] float32`` vector by
+  ``rates_vector``), so sweeping churn/crash/drop/corrupt rates reuses
+  the compiled executable; only ``corrupt_mode`` is static (it changes
+  the traced ops).  Faults draw from their own key stream
+  (``FaultConfig.seed``, folded at ABSOLUTE round/event indices), so the
+  same fault trace replays across AL configs and across resumed runs.
+
+* **``GuardConfig``** — the fog node's aggregation-side defense: reject
+  non-finite uploads and norm-outlier uploads (norm > ``norm_factor`` x
+  the masked median of this round's finite arrival norms), either
+  dropping them from the Eq. 1 weights (``policy="drop"``) or clipping
+  them back to the threshold (``policy="clip"``).  Verdicts are counted
+  in telemetry (``recs["rejected"]`` / ``recs["clipped"]``); an
+  all-rejected round keeps the previous fog model (the same zero-arrival
+  guard the hetero engine uses).
+
+* **Liveness** — churn is a ``[D]`` float liveness vector threaded
+  through ``EngineState.live``: dead slots are bitwise inert (pool,
+  params, pending, residual, staleness all frozen; Eq. 1 weights
+  normalize over live arrivals only).  It evolves either by the in-trace
+  birth/death process (``update_liveness``) or by a host schedule
+  (``liveness_schedule`` → ``run_rounds_fused(live_mask=...)``).
+
+Per-engine crash semantics (documented once, asserted in
+``tests/test_faults.py``): on the round-synchronous engine a crashed
+device loses its local round (no commit, no upload — it re-syncs at the
+next dispatch); on the async engine a crash additionally spikes the
+completion latency by ``restart_mult`` (the device restarts and reports
+late, delivering nothing useful).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+CORRUPT_MODES = ("scale", "nan")
+GUARD_POLICIES = ("off", "drop", "clip")
+
+# Indices into the traced rates vector (``rates_vector``): the whole fault
+# surface rides through the compiled program as ONE [N_RATES] float32
+# argument, so sweeping any rate reuses the executable.
+(RATE_DEATH, RATE_BIRTH, RATE_CRASH, RATE_DROP, RATE_CORRUPT,
+ RATE_NOISE, RATE_CORRUPT_SCALE, RATE_RESTART) = range(8)
+N_RATES = 8
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Injected fault surface for a fleet run (all rates per device per
+    round/event, in [0, 1]; all traced — rate sweeps share one executable).
+
+    ``death_rate`` / ``birth_rate``
+        The in-trace churn process: each round a live device leaves with
+        probability ``death_rate`` and a dead slot (re)joins with
+        probability ``birth_rate`` (steady-state dead fraction
+        ``death/(death+birth)``).  Leave both 0 to drive churn from a host
+        schedule (``run_rounds_fused(live_mask=...)``) instead; setting a
+        rate > 0 AND passing ``live_mask`` is an error.
+    ``crash_rate``
+        Device crashes during its local round: the round's work is lost
+        (no commit, no upload).  On the async engine the restarted device
+        additionally completes ``restart_mult`` x later.
+    ``restart_mult``
+        Async crash/restart latency multiplier (>= 1).
+    ``drop_rate``
+        Upload transmitted but lost in transit: the device believes it
+        delivered (its backlog/residual bookkeeping clears) but the fog
+        node receives nothing — the error mass is genuinely lost.
+    ``corrupt_rate`` / ``corrupt_mode`` / ``corrupt_scale``
+        Upload corrupted ON THE WIRE (after any comms codec; the
+        device-side error-feedback residual stays clean): ``"scale"``
+        multiplies the received delta by ``corrupt_scale`` (a norm
+        outlier), ``"nan"`` replaces it with non-finite garbage.
+    ``label_noise_rate``
+        Per-device-per-round label-noise burst: the device trains this
+        round on uniformly random labels (data-layer fault — guards can
+        only catch it if the resulting delta is an outlier).
+    ``seed``
+        Seeds the fault key stream, independent of the experiment seed.
+    """
+
+    death_rate: float = 0.0
+    birth_rate: float = 0.0
+    crash_rate: float = 0.0
+    restart_mult: float = 3.0
+    drop_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    corrupt_mode: str = "scale"
+    corrupt_scale: float = 50.0
+    label_noise_rate: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("death_rate", "birth_rate", "crash_rate", "drop_rate",
+                     "corrupt_rate", "label_noise_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} is a probability in [0, 1], "
+                                 f"got {v}")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(
+                f"unknown corrupt_mode {self.corrupt_mode!r}: "
+                f"use {' | '.join(CORRUPT_MODES)}")
+        if self.corrupt_scale <= 0.0:
+            raise ValueError(
+                f"corrupt_scale must be > 0, got {self.corrupt_scale}")
+        if self.restart_mult < 1.0:
+            raise ValueError(
+                f"restart_mult must be >= 1, got {self.restart_mult}")
+
+    @property
+    def has_churn(self) -> bool:
+        return self.death_rate > 0.0 or self.birth_rate > 0.0
+
+
+@dataclass(frozen=True)
+class GuardConfig:
+    """Fog-side aggregation guards (graceful degradation).
+
+    ``policy``
+        ``"drop"`` — rejected uploads get zero Eq. 1 weight (weights
+        renormalize over the survivors); ``"clip"`` — norm outliers are
+        scaled back to the threshold (non-finite uploads are always
+        dropped — there is nothing to clip); ``"off"`` — guards disabled
+        (equivalent to passing ``guards=None``; exists so scenario presets
+        can express a guards-off control without a second code path).
+    ``norm_factor``
+        Outlier threshold multiplier (traced): an upload is an outlier
+        when its global L2 norm exceeds ``norm_factor`` x the median norm
+        of this round's finite arrivals.  A degenerate all-zero median
+        disables outlier detection for the round (nothing to compare
+        against); non-finite rejection still applies.
+    """
+
+    policy: str = "drop"
+    norm_factor: float = 8.0
+
+    def __post_init__(self):
+        if self.policy not in GUARD_POLICIES:
+            raise ValueError(f"unknown guard policy {self.policy!r}: "
+                             f"use {' | '.join(GUARD_POLICIES)}")
+        if self.norm_factor <= 1.0:
+            raise ValueError(
+                f"norm_factor must be > 1 (it multiplies the median "
+                f"arrival norm), got {self.norm_factor}")
+
+
+def rates_vector(cfg: Optional[FaultConfig]) -> np.ndarray:
+    """Pack a ``FaultConfig`` into the ``[N_RATES] float32`` traced vector
+    the compiled programs consume (zeros when faults are off — the
+    fill-in keeps the jit signature fixed)."""
+    v = np.zeros((N_RATES,), np.float32)
+    if cfg is not None:
+        v[RATE_DEATH] = cfg.death_rate
+        v[RATE_BIRTH] = cfg.birth_rate
+        v[RATE_CRASH] = cfg.crash_rate
+        v[RATE_DROP] = cfg.drop_rate
+        v[RATE_CORRUPT] = cfg.corrupt_rate
+        v[RATE_NOISE] = cfg.label_noise_rate
+        v[RATE_CORRUPT_SCALE] = cfg.corrupt_scale
+        v[RATE_RESTART] = cfg.restart_mult
+    return v
+
+
+def fault_keys(cfg: FaultConfig, start: int, count: int) -> jax.Array:
+    """Per-round/per-event fault keys ``[count]``, folded from the fault
+    seed at ABSOLUTE indices — the chaining/resume contract every other
+    key schedule in the engine follows (a resumed run replays the exact
+    fault trace of the uninterrupted one)."""
+    base = jax.random.key(cfg.seed + 0x666C74)
+    return jax.vmap(lambda t: jax.random.fold_in(base, t))(
+        jnp.arange(start, start + count))
+
+
+def update_liveness(key, live, death_rate, birth_rate) -> jax.Array:
+    """One step of the in-trace birth/death churn process: live devices
+    die with ``death_rate``, dead slots (re)join with ``birth_rate``.
+    ``live`` is the ``[D]`` 0/1 float liveness vector; rates are traced
+    scalars.  Drawn from ONE key over the GLOBAL device axis so every
+    mesh shard sees the same fleet."""
+    k_death, k_birth = jax.random.split(key)
+    shape = live.shape
+    survive = ~jax.random.bernoulli(k_death, death_rate, shape)
+    join = jax.random.bernoulli(k_birth, birth_rate, shape)
+    return jnp.where(live > 0, survive, join).astype(jnp.float32)
+
+
+def liveness_schedule(num_devices: int, rounds: int, *, death_rate: float,
+                      birth_rate: float, seed: int = 0,
+                      init=None) -> np.ndarray:
+    """Host-side twin of the in-trace churn process: a ``[rounds, D]``
+    0/1 float liveness schedule for ``run_rounds_fused(live_mask=...)``
+    (same birth/death semantics, its own numpy stream — a *schedule
+    source*, not a bit-replay of the traced draw).  ``init`` (``[D]``,
+    default all-live) seeds round 0's transition."""
+    rng = np.random.default_rng([seed, 0x6C697665])
+    live = (np.ones((num_devices,), np.float32) if init is None
+            else np.asarray(init, np.float32))
+    out = np.zeros((rounds, num_devices), np.float32)
+    for t in range(rounds):
+        survive = rng.random(num_devices) >= death_rate
+        join = rng.random(num_devices) < birth_rate
+        live = np.where(live > 0, survive, join).astype(np.float32)
+        out[t] = live
+    return out
+
+
+def draw_fault_masks(key, rates, num_devices: int):
+    """This round's per-device fault draws: ``(crash, drop, corrupt,
+    noise)`` 0/1 float ``[D]`` vectors from one fault key (global axis —
+    mesh shards slice their rows locally)."""
+    k_crash, k_drop, k_corrupt, k_noise = jax.random.split(key, 4)
+    shape = (num_devices,)
+
+    def draw(k, rate):
+        return jax.random.bernoulli(k, rate, shape).astype(jnp.float32)
+
+    return (draw(k_crash, rates[RATE_CRASH]),
+            draw(k_drop, rates[RATE_DROP]),
+            draw(k_corrupt, rates[RATE_CORRUPT]),
+            draw(k_noise, rates[RATE_NOISE]))
+
+
+def corrupt_stacked(mode: str, tree, flags, scale):
+    """Apply wire corruption to the flagged rows of a ``[D, ...]`` stacked
+    upload tree: ``"scale"`` multiplies by the (traced) ``scale``,
+    ``"nan"`` replaces with non-finite garbage.  ``flags`` is ``[D]``
+    0/1 float; unflagged rows pass through bitwise."""
+    if mode not in CORRUPT_MODES:
+        raise ValueError(f"unknown corrupt_mode {mode!r}: "
+                         f"use {' | '.join(CORRUPT_MODES)}")
+
+    def leaf(x):
+        f = flags.reshape((-1,) + (1,) * (x.ndim - 1))
+        if mode == "nan":
+            return jnp.where(f > 0, jnp.float32(jnp.nan), x)
+        return jnp.where(f > 0, x * scale, x)
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def stacked_norms(tree) -> jax.Array:
+    """Per-device global L2 norm ``[D]`` over a stacked ``[D, ...]``
+    pytree — the guard's outlier statistic."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)).reshape(
+        l.shape[0], -1), axis=1) for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def stacked_finite(tree) -> jax.Array:
+    """Per-device all-finite flag ``[D] bool`` over a stacked pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    ok = jnp.ones((leaves[0].shape[0],), bool)
+    for l in leaves:
+        ok = ok & jnp.all(jnp.isfinite(l.reshape(l.shape[0], -1)), axis=1)
+    return ok
+
+
+def guard_verdict(norms, finite, mask, *, policy: str, factor):
+    """Fog-side guard decision over this round's received uploads.
+
+    ``norms`` / ``finite`` are the ``[D]`` upload statistics, ``mask`` the
+    received-arrival mask (1 = an upload reached the fog node), ``factor``
+    the traced outlier multiplier.  Returns ``(rejected, clipped, scale)``
+    ``[D]`` float vectors: ``rejected`` uploads must get zero Eq. 1 weight
+    (and their leaves zeroed — a 0-weight NaN still poisons a weighted
+    sum), ``clipped`` uploads (clip policy only) are scaled by ``scale``
+    back to the threshold.  Fully traced; the median is computed over the
+    masked finite arrivals via an inf-filled sort, so an empty round
+    yields an infinite threshold (no outliers) instead of NaN."""
+    if policy not in ("drop", "clip"):
+        raise ValueError(f"guard policy must be 'drop' or 'clip' inside "
+                         f"the trace, got {policy!r}")
+    m = jnp.asarray(mask, jnp.float32)
+    valid = (m > 0) & finite & jnp.isfinite(norms)
+    d = norms.shape[0]
+    filled = jnp.where(valid, norms, jnp.inf)
+    order = jnp.sort(filled)
+    count = jnp.sum(valid.astype(jnp.int32))
+    med = order[jnp.clip((count - 1) // 2, 0, d - 1)]
+    thresh = factor * med
+    # a degenerate all-zero median means there is no scale to compare
+    # against — disable outlier detection rather than rejecting everything
+    outlier = valid & (med > 0) & (norms > thresh)
+    nonfinite = (m > 0) & ~(finite & jnp.isfinite(norms))
+    if policy == "drop":
+        rejected = nonfinite | outlier
+        clipped = jnp.zeros_like(m, bool)
+        scale = jnp.ones_like(m)
+    else:
+        rejected = nonfinite
+        clipped = outlier
+        scale = jnp.where(outlier,
+                          thresh / jnp.maximum(norms, 1e-30),
+                          jnp.ones_like(m))
+    return (rejected.astype(jnp.float32), clipped.astype(jnp.float32),
+            scale.astype(jnp.float32))
+
+
+def faults_static_key(cfg: Optional[FaultConfig], num_classes: int):
+    """The STATIC part of a ``FaultConfig`` for the compiled-program
+    cache: only ``corrupt_mode`` (it selects traced ops) and the label
+    vocabulary (label-noise redraw bound) — every rate is traced."""
+    if cfg is None:
+        return None
+    return (cfg.corrupt_mode, int(num_classes))
+
+
+def guards_static_key(cfg: Optional[GuardConfig]):
+    """Static guard key: just the policy (``norm_factor`` is traced).
+    ``policy="off"`` normalizes to None — guards fully absent from the
+    trace."""
+    if cfg is None or cfg.policy == "off":
+        return None
+    return cfg.policy
+
+
+# ------------------------------------------------------------- telemetry
+# Per-device [T, D] telemetry rows the engines record when the matching
+# feature is on; drivers copy these into per-round report dicts.
+REPORT_KEYS = ("live", "crashed", "dropped", "corrupted", "rejected",
+               "clipped")
+
+
+def summarize_faults(recs) -> dict:
+    """Host-side fault/guard telemetry from fused recs (or any dict of
+    stacked ``[T, D]`` arrays): per-round live fractions and total
+    crash/drop/corrupt/reject/clip counts.  Keys absent from ``recs``
+    (flags that were off) are simply omitted."""
+    out: dict = {}
+    if "live" in recs:
+        live = np.asarray(recs["live"], np.float64)
+        out["live_fraction_per_round"] = [float(x) for x in live.mean(1)]
+        out["mean_live_fraction"] = float(live.mean())
+    for key in ("crashed", "dropped", "corrupted", "rejected", "clipped"):
+        if key in recs:
+            out[f"{key}_total"] = int(np.asarray(recs[key]).sum())
+    return out
+
+
+def report_summary(round_reports) -> dict:
+    """The same summary as ``summarize_faults``, built from the per-round
+    report dicts ``run_federated_rounds`` emits (the ``run_experiment``
+    contract: a churn-scenario repeat carries a ``"faults"`` entry)."""
+    stacked: dict = {}
+    for key in REPORT_KEYS:
+        if round_reports and key in round_reports[0]:
+            stacked[key] = [r[key] for r in round_reports]
+    return summarize_faults(stacked)

@@ -26,11 +26,13 @@ from repro.core import acquisition as acq
 from repro.core import async_engine as async_mod
 from repro.core import comms as comms_mod
 from repro.core import counters
+from repro.core import faults as faults_mod
 from repro.core import hetero as hetero_mod
 from repro.core.aggregation import (fedavg, fedavg_n, opt_model,
                                     weighted_average)
 from repro.core.async_engine import AsyncConfig
 from repro.core.comms import CommsConfig
+from repro.core.faults import FaultConfig, GuardConfig
 from repro.core.hetero import HeteroConfig
 from repro.core.mc_dropout import mc_logprobs
 from repro.core.pool import ActivePool
@@ -371,6 +373,23 @@ def _check_async_engine(async_cfg: Optional[AsyncConfig], engine: str,
             "(use AsyncConfig's dist/latency_skew instead)")
 
 
+def _check_faults_engine(faults: Optional[FaultConfig],
+                         guards: Optional[GuardConfig], engine: str) -> None:
+    """Churn, in-trace fault injection, and aggregation-side guards live
+    inside the compiled one-dispatch programs only — the host-aggregation
+    paths would need a completely separate (and slower) implementation."""
+    if faults is not None and engine not in ("fused", "async"):
+        raise ValueError(
+            f"faults=FaultConfig(...) requires engine='fused' or 'async' "
+            f"(got engine={engine!r}); fault injection is traced into the "
+            "one-dispatch programs")
+    if guards is not None and engine not in ("fused", "async"):
+        raise ValueError(
+            f"guards=GuardConfig(...) requires engine='fused' or 'async' "
+            f"(got engine={engine!r}); aggregation guards are traced into "
+            "the one-dispatch programs")
+
+
 def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigits],
                         seed_data: SyntheticDigits, test_set: SyntheticDigits,
                         *, trainer: Optional[Trainer] = None,
@@ -455,7 +474,9 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                          upload_fraction: float = 1.0, engine: str = "vmap",
                          mesh=None, comms: Optional[CommsConfig] = None,
                          hetero: Optional[HeteroConfig] = None,
-                         async_cfg: Optional[AsyncConfig] = None):
+                         async_cfg: Optional[AsyncConfig] = None,
+                         faults: Optional[FaultConfig] = None,
+                         guards: Optional[GuardConfig] = None):
     """Iterated rounds (paper: "the learning process can be iteratively
     carried out"): each round re-dispatches the aggregated model; devices
     keep their pools (labels accumulate across rounds).
@@ -493,6 +514,14 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
     compose with ``hetero=`` (the latency model IS the straggler model);
     ``upload_fraction`` is likewise rejected — arrivals are decided by the
     latency draws, not a Bernoulli mask.
+
+    ``faults=FaultConfig(...)`` / ``guards=GuardConfig(...)`` (fused and
+    async engines) inject device churn, crashes, dropped/corrupted uploads
+    and label noise IN-TRACE and turn on the fog's aggregation-side
+    robustness guards — see ``core.faults``.  Each round report then
+    carries the fault telemetry rows (``live``, ``crashed``, ``dropped``,
+    ``corrupted``, ``rejected``, ``clipped``) that the compiled program
+    recorded.
     """
     if engine not in ("vmap", "legacy", "classic", "fused", "async"):
         raise ValueError(
@@ -501,6 +530,7 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
     _check_comms_engine(comms, "fused" if engine == "async" else engine)
     _check_async_engine(async_cfg, engine, hetero)
     _check_hetero_engine(hetero, engine)
+    _check_faults_engine(faults, guards, engine)
     image_shape = device_data[0].images.shape[1:]
     total_cfg = replace(cfg, acquisitions=cfg.acquisitions * rounds)
     trainer = trainer or Trainer(total_cfg)
@@ -563,7 +593,10 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                          mesh=mesh)
         _, recs, params = eng.run_async(
             eng.init_state(params), rounds, async_cfg=async_cfg,
-            aggregation=cfg.aggregation, comms=comms)
+            aggregation=cfg.aggregation, comms=comms,
+            faults=faults, guards=guards)
+        fault_rows = {k: np.asarray(recs[k]) for k in faults_mod.REPORT_KEYS
+                      if k in recs}
         weights = np.asarray(recs["weights"])
         mask_out = np.asarray(recs["upload_mask"])
         accs = np.asarray(recs["device_accs"])
@@ -586,6 +619,7 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                     "uploaded_devices": uploaded.tolist(),
                 },
                 "staleness": staleness[t].tolist(),
+                **{k: v[t].tolist() for k, v in fault_rows.items()},
             })
         summary = comms_mod.comms_report(
             comms, params, mask_out, agg_accs=agg_accs,
@@ -605,7 +639,10 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                                         cfg.seed, rounds)
         _, recs, params = eng.run_rounds_fused(
             eng.init_state(params), rounds, upload_mask=mask,
-            aggregation=cfg.aggregation, comms=comms, hetero=hetero)
+            aggregation=cfg.aggregation, comms=comms, hetero=hetero,
+            faults=faults, guards=guards)
+        fault_rows = {k: np.asarray(recs[k]) for k in faults_mod.REPORT_KEYS
+                      if k in recs}
         weights = np.asarray(recs["weights"])
         mask_out = np.asarray(recs["upload_mask"])
         accs = np.asarray(recs["device_accs"])
@@ -627,6 +664,7 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                 },
                 **({"staleness": staleness[t].tolist()}
                    if staleness is not None else {}),
+                **{k: v[t].tolist() for k, v in fault_rows.items()},
             })
         summary = comms_mod.comms_report(
             comms, params, mask_out, agg_accs=agg_accs,
@@ -730,6 +768,36 @@ def async_config(num_devices: int = 64, *, seed: int = 0,
     return FederatedALConfig(**base)
 
 
+# Fault-tolerant-fleet scenario defaults (scenario="churn"): the same
+# non-IID small-budget fleet, but devices churn (death 0.1 / birth 0.4 per
+# round — steady-state ~20% of capacity slots dark), 5% of rounds crash
+# mid-round, 5% of uploads drop on the wire, 5% arrive corrupted (x50
+# norm blow-up), and 5% of rounds train on scrambled labels.  The fog's
+# norm/finiteness guards (drop policy) keep aggregation finite — the
+# BENCH_faults acceptance gate bounds the accuracy cost vs a clean run.
+DEFAULT_FAULTS = faults_mod.FaultConfig(
+    death_rate=0.1, birth_rate=0.4, crash_rate=0.05, drop_rate=0.05,
+    corrupt_rate=0.05, corrupt_mode="scale", corrupt_scale=50.0,
+    label_noise_rate=0.05)
+DEFAULT_GUARDS = faults_mod.GuardConfig(policy="drop", norm_factor=8.0)
+
+
+def churn_config(num_devices: int = 64, *, seed: int = 0,
+                 **overrides) -> FederatedALConfig:
+    """Preset for the fault-tolerant-fleet regime: the hetero-style small
+    per-device budget (churn bites hardest when every device's labels are
+    scarce) with size-aware ``fedavg_n`` weighting over whatever subset of
+    the fleet is alive AND accepted each round.  Pair with a
+    ``FaultConfig``/``GuardConfig`` (``DEFAULT_FAULTS``/``DEFAULT_GUARDS``
+    via ``run_experiment(scenario="churn")``)."""
+    base = dict(num_devices=num_devices, initial_train=20, acquisitions=2,
+                k_per_acquisition=5, pool_window=32, mc_samples=4,
+                train_steps_per_acq=10, initial_train_steps=20,
+                aggregation="fedavg_n", seed=seed)
+    base.update(overrides)
+    return FederatedALConfig(**base)
+
+
 def default_async(num_devices: int) -> AsyncConfig:
     """FedBuff-style ``AsyncConfig`` default, sized to the fleet: quorum at
     a quarter of the devices (min 1), a 4-simulated-second safety timer
@@ -748,7 +816,9 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
                    rounds: int = 1, engine: Optional[str] = None, mesh=None,
                    comms: Optional[CommsConfig] = None,
                    hetero: Optional[HeteroConfig] = None,
-                   async_cfg: Optional[AsyncConfig] = None):
+                   async_cfg: Optional[AsyncConfig] = None,
+                   faults: Optional[FaultConfig] = None,
+                   guards: Optional[GuardConfig] = None):
     """End-to-end experiment harness (used by benchmarks + examples).
 
     Units and defaults: ``n_train`` / ``n_test`` are sample counts
@@ -782,6 +852,15 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     accuracy-vs-SIMULATED-seconds trajectory (``sim_seconds``, not round
     counts), arrival statistics, and the staleness summary.
 
+    ``scenario="churn"`` is the fault-tolerant-fleet regime: the same
+    non-IID ``dirichlet_split`` fleet on the fused engine, but under
+    ``DEFAULT_FAULTS`` churn/crash/drop/corrupt/label-noise dynamics with
+    ``DEFAULT_GUARDS`` aggregation-side robustness guards (either
+    overridable via explicit ``faults=`` / ``guards=``; pass
+    ``guards=GuardConfig(policy="off")`` for the unguarded control).  Each
+    repeat then carries a ``"faults"`` telemetry entry (live fractions,
+    crash/drop/corrupt/reject/clip totals).
+
     Every repeat emits a comms telemetry dict (bytes/round, cumulative MB,
     compression ratio, accuracy-vs-bytes trajectory): multi-round repeats
     return ``{"rounds": [...], "comms": telemetry}``, single-round repeats
@@ -792,9 +871,9 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     from repro.data.digits import make_digit_dataset
     from repro.data.federated_split import dirichlet_split, federated_split
 
-    if scenario in ("massive", "hetero", "async"):
+    if scenario in ("massive", "hetero", "async", "churn"):
         maker = {"massive": massive_config, "hetero": hetero_config,
-                 "async": async_config}[scenario]
+                 "async": async_config, "churn": churn_config}[scenario]
         cfg = maker(num_devices) if cfg is None else cfg
         n_train = MASSIVE_SAMPLES_PER_DEVICE * cfg.num_devices
         if engine is None:
@@ -803,12 +882,18 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
             hetero = DEFAULT_HETERO
         if scenario == "async" and async_cfg is None:
             async_cfg = default_async(cfg.num_devices)
+        if scenario == "churn":
+            if faults is None:
+                faults = DEFAULT_FAULTS
+            if guards is None:
+                guards = DEFAULT_GUARDS
     elif scenario not in (None, "paper"):
         raise ValueError(
             f"unknown scenario {scenario!r}: "
-            "use paper | massive | hetero | async")
+            "use paper | massive | hetero | async | churn")
     if cfg is None:
-        raise ValueError("pass cfg or scenario='massive'/'hetero'/'async'")
+        raise ValueError(
+            "pass cfg or scenario='massive'/'hetero'/'async'/'churn'")
     engine = "vmap" if engine is None else engine
 
     reports = []
@@ -817,7 +902,7 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
         full = make_digit_dataset(n_train, seed=seed)
         test = make_digit_dataset(n_test, seed=seed + 5)
         seed_set = make_digit_dataset(cfg.initial_train, seed=seed + 11)
-        if scenario in ("hetero", "async"):
+        if scenario in ("hetero", "async", "churn"):
             shards = dirichlet_split(full, cfg.num_devices,
                                      alpha=HETERO_DIRICHLET_ALPHA, seed=seed)
         else:
@@ -827,7 +912,7 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
             _, round_reports = run_federated_rounds(
                 cfg_rep, shards, seed_set, test, rounds=rounds,
                 engine=engine, mesh=mesh, comms=comms, hetero=hetero,
-                async_cfg=async_cfg)
+                async_cfg=async_cfg, faults=faults, guards=guards)
             rep_report = {
                 "rounds": round_reports,
                 "comms": comms_mod.experiment_telemetry(round_reports),
@@ -838,7 +923,11 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
             if engine == "async":
                 rep_report["async"] = async_mod.report_telemetry(
                     round_reports)
+            if faults is not None or guards is not None:
+                rep_report["faults"] = faults_mod.report_summary(
+                    round_reports)
         else:
+            _check_faults_engine(faults, guards, engine)
             trainer = Trainer(cfg_rep)
             _, rep_report = run_federated_round(cfg_rep, shards, seed_set,
                                                 test, trainer=trainer,

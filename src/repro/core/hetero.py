@@ -33,6 +33,12 @@ first-class, in-compile axis with three traced ingredients, all consumed by
   state fields shard over the device mesh axis like every other ``[D, ...]``
   field.
 
+Fault interplay (``core.faults``): under churn the staleness counters age
+only LIVE slots — a dead slot's pending delta and age freeze with it (the
+backlog is not getting staler work appended), and a reborn slot resumes
+from that frozen state, delivering the backlog decay-weighted by its
+frozen age on its next successful upload.
+
 With ``straggler_rate == 0``, no profile, and ``decay`` anything, the
 hetero round is numerically the synchronous fused round (the equivalence
 contract ``tests/test_hetero.py`` enforces at 1e-5); with ``decay="none"``

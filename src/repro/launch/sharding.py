@@ -127,10 +127,15 @@ def shard_engine_state(mesh, state):
     re-laying-out the fleet on every dispatch; D must divide by mesh size.
 
     Covers every state field including the comms error-feedback ``residual``
-    buffer (a ``[D, ...]`` mirror of params — see ``core.comms``) and the
+    buffer (a ``[D, ...]`` mirror of params — see ``core.comms``), the
     heterogeneous-fleet ``pending`` delta buffer / ``staleness`` counters
-    (``core.hetero``); rank-0 leaves (none today, but cheap future-proofing)
-    replicate instead of taking the device-axis spec they cannot carry."""
+    (``core.hetero``), and the churn liveness vector ``live [D]``
+    (``core.faults``) — liveness shards like any other per-device scalar,
+    while the fault/churn *draws* are replicated facts: every shard draws
+    them from the same absolute-round key and slices its local rows, so no
+    extra collective is needed.  Rank-0 leaves (none today, but cheap
+    future-proofing) replicate instead of taking the device-axis spec they
+    cannot carry."""
     dev = NamedSharding(mesh, device_axis_spec())
     rep = NamedSharding(mesh, P())
     return jax.tree_util.tree_map(

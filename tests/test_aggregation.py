@@ -199,3 +199,38 @@ def test_ensemble_logits_is_log_mean_prob():
     out = ensemble_logits(apply_fn, stacked, x)
     probs = np.mean([jax.nn.softmax(apply_fn(m, x), -1) for m in ms], axis=0)
     np.testing.assert_allclose(np.exp(np.asarray(out)), probs, rtol=1e-4)
+
+
+def test_weight_normalizers_never_leak_nans_when_fleet_dark():
+    """The churn scenario's worst case: every device dead or rejected.  Both
+    normalizers must fall back to finite uniform weights — never NaN — even
+    when the raw basis itself contains zeros everywhere, and the fallback
+    must survive jit (no data-dependent Python branches)."""
+    from repro.core.aggregation import staleness_weights
+
+    raw = jnp.asarray([5.0, 1.0, 3.0, 2.0])
+    dead = jnp.zeros(4)
+    for fn in (lambda r, m: normalize_weights(r, m),
+               lambda r, m: staleness_weights(r, jnp.zeros(4, jnp.int32), m)):
+        w = fn(raw, dead)
+        assert np.isfinite(np.asarray(w)).all()
+        np.testing.assert_allclose(np.asarray(w), [0.25] * 4, atol=1e-6)
+        w = fn(jnp.zeros(4), dead)                    # zero basis AND no mask
+        assert np.isfinite(np.asarray(w)).all()
+        w = jax.jit(fn)(raw, dead)                    # traced fallback
+        assert np.isfinite(np.asarray(w)).all()
+
+
+def test_staleness_weights_zero_sum_among_arrivals_uniform():
+    """Arrivals whose decayed weights underflow to zero must get the
+    uniform-over-participants fallback, not NaN (exp decay at extreme
+    staleness underflows in float32)."""
+    from repro.core.aggregation import staleness_weights
+
+    raw = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    stale = jnp.asarray([300, 300, 0, 0], jnp.int32)   # 0.5**300 == 0.0
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    w = staleness_weights(raw, stale, mask, kind="exp", rate=0.5)
+    assert np.isfinite(np.asarray(w)).all()
+    np.testing.assert_allclose(np.asarray(w), [0.5, 0.5, 0.0, 0.0],
+                               atol=1e-6)

@@ -4,9 +4,11 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import (latest_round, load_pytree, load_round,
-                              save_pytree, save_round)
+from repro.checkpoint import (latest_round, load_engine_state, load_pytree,
+                              load_round, save_engine_state, save_pytree,
+                              save_round)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -52,3 +54,69 @@ def test_round_snapshots(tmp_path):
                                   np.full((2, 2), 2.0))
     assert back["metadata"]["acc"] == 0.5
     assert latest_round(str(tmp_path / "missing")) is None
+
+
+# ----------------------------------------------- engine-state checkpoints
+def _tiny_engine_state(*, with_buffers):
+    from repro.core.engine import EngineState
+    from repro.core.vpool import VPool
+
+    D = 3
+    params = {"w": jnp.arange(6, dtype=jnp.float32).reshape(D, 2)}
+    opt_state = {"m": jnp.zeros((D, 2)), "v": jnp.ones((D, 2)),
+                 "step": jnp.zeros((D,), jnp.int32)}
+    pool = VPool(labeled_mask=jnp.asarray([[True, False]] * D),
+                 labeled_idx=jnp.zeros((D, 4), jnp.int32),
+                 labeled_valid=jnp.zeros((D, 4), bool),
+                 n_filled=jnp.ones((D,), jnp.int32))
+    rng = jax.random.split(jax.random.key(42), D)
+    if not with_buffers:
+        return EngineState(params, opt_state, pool, rng)
+    return EngineState(
+        params, opt_state, pool, rng,
+        residual={"w": jnp.full((D, 2), 0.25)},
+        pending={"w": jnp.full((D, 2), -1.5)},
+        staleness=jnp.asarray([0, 2, 5], jnp.int32),
+        live=jnp.asarray([1.0, 0.0, 1.0], jnp.float32))
+
+
+def test_engine_state_roundtrip_with_buffers(tmp_path):
+    """Full EngineState — typed PRNG keys, the VPool NamedTuple, and every
+    extension buffer (residual/pending/staleness/live) — must survive the
+    msgpack roundtrip field-for-field."""
+    state = _tiny_engine_state(with_buffers=True)
+    path = str(tmp_path / "es.msgpack")
+    save_engine_state(path, state, metadata={"next_round": 7})
+    back, meta = load_engine_state(path)
+    assert meta["next_round"] == 7
+    assert type(back).__name__ == "EngineState"
+    assert type(back.pool).__name__ == "VPool"
+    np.testing.assert_array_equal(np.asarray(jax.random.key_data(back.rng)),
+                                  np.asarray(jax.random.key_data(state.rng)))
+    for a, b in zip(jax.tree_util.tree_leaves(state._replace(rng=())),
+                    jax.tree_util.tree_leaves(back._replace(rng=()))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert back.pool.labeled_valid.dtype == bool
+    assert back.staleness.dtype == jnp.int32
+
+
+def test_engine_state_roundtrip_empty_defaults(tmp_path):
+    """A plain-path state (no comms/hetero/churn) carries empty-``()``
+    extension buffers; they must round-trip as EXACTLY ``()`` so the
+    restored state takes the same engine code paths as the saved one."""
+    state = _tiny_engine_state(with_buffers=False)
+    path = str(tmp_path / "es0.msgpack")
+    save_engine_state(path, state)
+    back, meta = load_engine_state(path)
+    assert meta == {}
+    assert back.residual == () and back.pending == ()
+    assert back.staleness == () and back.live == ()
+    np.testing.assert_array_equal(np.asarray(back.params["w"]),
+                                  np.asarray(state.params["w"]))
+
+
+def test_load_engine_state_rejects_plain_checkpoints(tmp_path):
+    path = str(tmp_path / "plain.msgpack")
+    save_pytree(path, {"v": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="engine-state"):
+        load_engine_state(path)

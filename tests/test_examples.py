@@ -22,6 +22,7 @@ pytestmark = pytest.mark.slow
 EXAMPLES = [
     ("examples.quickstart", ["--quick"]),
     ("examples.async_fleet", ["--quick"]),
+    ("examples.churn_fleet", ["--quick"]),
     ("examples.massive_fleet", ["--quick"]),
     ("examples.massive_cascade", ["--quick"]),
     ("examples.train_lm_selection", ["--quick"]),

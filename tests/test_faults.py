@@ -1,0 +1,504 @@
+"""Fault-tolerant fleets (core.faults): the tentpole's contracts.
+
+* zero faults + guards on ≡ the plain fused path (≤ 1e-5), for both the
+  round-synchronous and async engines, under vmap AND the shard_map mesh;
+* faulted rounds stay ONE dispatch (churn + crashes + corruption + guards
+  compiled into the same scan);
+* dead capacity slots are bitwise inert: zero Eq. 1 weight, frozen pools;
+* non-finite / norm-outlier uploads never reach the fog model (drop and
+  clip policies), including the all-rejected round (keep previous model,
+  no NaN weights);
+* checkpoint → restore → continue reproduces the uninterrupted run, with
+  the fault trace replayed from absolute round indices.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_engine_state, save_engine_state
+from repro.core import counters
+from repro.core.async_engine import AsyncConfig
+from repro.core.comms import CommsConfig
+from repro.core.engine import EdgeEngine
+from repro.core.faults import (FaultConfig, GuardConfig, fault_keys,
+                               guard_verdict, liveness_schedule,
+                               summarize_faults)
+from repro.core.federated import (FederatedALConfig, Trainer, churn_config,
+                                  run_experiment, run_federated_rounds)
+from repro.core.hetero import HeteroConfig
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.launch.mesh import make_device_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROUNDS = 2
+
+# A "messy fleet" config exercising every fault channel at once.
+MESSY = FaultConfig(death_rate=0.2, birth_rate=0.5, crash_rate=0.2,
+                    drop_rate=0.2, corrupt_rate=0.3, corrupt_mode="nan",
+                    label_noise_rate=0.3, seed=5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # 8 devices so the mesh tests divide evenly over the CI sharded job's
+    # 8 fake host devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)
+    cfg = FederatedALConfig(num_devices=8, acquisitions=2, mc_samples=4,
+                            k_per_acquisition=3, pool_window=16,
+                            train_steps_per_acq=4, initial_train=10,
+                            initial_train_steps=5, seed=7)
+    full = make_digit_dataset(160, seed=1)
+    test = make_digit_dataset(48, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def _engine(cfg, shards, seed_set, test, *, rounds=ROUNDS, mesh=None):
+    total = cfg.acquisitions * rounds
+    trainer = Trainer(replace(cfg, acquisitions=total))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total, mesh=mesh)
+    params0 = trainer.init_params(jax.random.key(0))
+    return eng, params0
+
+
+def _leaves_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+def _all_finite(tree):
+    return all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+# ------------------------------------------------------------- equivalence
+def test_zero_faults_guards_match_plain(setup):
+    """Full liveness + zero fault rates + guards armed must be the plain
+    fused path to float tolerance (the fault layer forces delta-form
+    aggregation — exact because Σα = 1, modulo summation order), for both
+    guard policies."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, rs, fs = eng.run_rounds_fused(eng.init_state(params0), ROUNDS)
+    for policy in ("drop", "clip"):
+        _, rf, ff = eng.run_rounds_fused(
+            eng.init_state(params0), ROUNDS, faults=FaultConfig(),
+            guards=GuardConfig(policy=policy))
+        _leaves_close(fs, ff)
+        np.testing.assert_allclose(np.asarray(rs["weights"]),
+                                   np.asarray(rf["weights"]), atol=1e-6)
+        assert np.asarray(rf["rejected"]).sum() == 0
+        assert np.asarray(rf["live"]).all()
+
+
+def test_zero_faults_match_plain_under_mesh(setup):
+    """Same contract under the shard_map device mesh (1 host device in a
+    plain run, 8 in the CI sharded job): fault draws and liveness are
+    global-fleet facts replicated to every shard."""
+    cfg, shards, seed_set, test = setup
+    eng_v, params0 = _engine(cfg, shards, seed_set, test)
+    _, _, fv = eng_v.run_rounds_fused(eng_v.init_state(params0), ROUNDS)
+    eng_m, _ = _engine(cfg, shards, seed_set, test, mesh=make_device_mesh())
+    _, rm, fm = eng_m.run_rounds_fused(
+        eng_m.init_state(params0), ROUNDS, faults=FaultConfig(),
+        guards=GuardConfig(policy="drop"))
+    _leaves_close(fv, fm)
+    assert np.asarray(rm["rejected"]).sum() == 0
+
+
+def test_faulted_mesh_matches_vmap(setup):
+    """A fully-faulted run must be identical (≤ 1e-5) between the vmap and
+    shard_map engines: liveness, fault draws, and guard verdicts are drawn
+    from the same global key stream on every shard."""
+    cfg, shards, seed_set, test = setup
+    g = GuardConfig(policy="drop")
+    eng_v, params0 = _engine(cfg, shards, seed_set, test)
+    _, rv, fv = eng_v.run_rounds_fused(eng_v.init_state(params0), ROUNDS,
+                                       faults=MESSY, guards=g)
+    eng_m, _ = _engine(cfg, shards, seed_set, test, mesh=make_device_mesh())
+    _, rm, fm = eng_m.run_rounds_fused(eng_m.init_state(params0), ROUNDS,
+                                       faults=MESSY, guards=g)
+    _leaves_close(fv, fm)
+    for key in ("live", "crashed", "dropped", "corrupted", "rejected"):
+        np.testing.assert_array_equal(np.asarray(rv[key]),
+                                      np.asarray(rm[key]))
+
+
+def test_async_zero_faults_match_plain(setup):
+    """The async event loop with the fault layer armed but inert must match
+    the plain async run (vmap and mesh)."""
+    cfg, shards, seed_set, test = setup
+    ac = AsyncConfig(quorum=3, timer=4.0, dist="exp", mean_latency=1.0,
+                     latency_skew=4.0)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, _, f0 = eng.run_async(eng.init_state(params0), ROUNDS, async_cfg=ac)
+    _, rf, f1 = eng.run_async(eng.init_state(params0), ROUNDS, async_cfg=ac,
+                              faults=FaultConfig(),
+                              guards=GuardConfig(policy="drop"))
+    _leaves_close(f0, f1)
+    assert np.asarray(rf["rejected"]).sum() == 0
+    eng_m, _ = _engine(cfg, shards, seed_set, test, mesh=make_device_mesh())
+    _, _, fm = eng_m.run_async(eng_m.init_state(params0), ROUNDS,
+                               async_cfg=ac, faults=FaultConfig(),
+                               guards=GuardConfig(policy="drop"))
+    _leaves_close(f0, fm)
+
+
+# ---------------------------------------------------------- one dispatch
+def test_faulted_rounds_single_dispatch(setup):
+    """Churn + crashes + NaN corruption + guards + label noise compile into
+    the same single-dispatch scan as the plain engine."""
+    cfg, shards, seed_set, test = setup
+    g = GuardConfig(policy="drop")
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                         faults=MESSY, guards=g)          # warmup/compile
+    state = eng.init_state(params0)
+    counters.reset_dispatches()
+    _, recs, final = eng.run_rounds_fused(state, ROUNDS, faults=MESSY,
+                                          guards=g)
+    assert counters.dispatch_count() == 1
+    assert np.asarray(recs["live"]).shape == (ROUNDS, cfg.num_devices)
+    assert _all_finite(final)
+
+
+def test_async_faulted_single_dispatch(setup):
+    cfg, shards, seed_set, test = setup
+    ac = AsyncConfig(quorum=3, timer=4.0, dist="exp", mean_latency=1.0,
+                     latency_skew=4.0)
+    g = GuardConfig(policy="drop")
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    eng.run_async(eng.init_state(params0), ROUNDS, async_cfg=ac,
+                  faults=MESSY, guards=g)                 # warmup/compile
+    state = eng.init_state(params0)
+    counters.reset_dispatches()
+    _, recs, fog = eng.run_async(state, ROUNDS, async_cfg=ac, faults=MESSY,
+                                 guards=g)
+    assert counters.dispatch_count() == 1
+    assert _all_finite(fog)
+    assert np.asarray(recs["live"]).shape == (ROUNDS, cfg.num_devices)
+
+
+# ------------------------------------------------------------ device churn
+def test_host_liveness_schedule_dead_slots_inert(setup):
+    """A host-provided live_mask kills capacity slots: a dead device gets
+    zero Eq. 1 weight and its pool freezes (no training, no labeling)."""
+    cfg, shards, seed_set, test = setup
+    lm = np.ones((ROUNDS, cfg.num_devices), np.float32)
+    lm[:, 3] = 0.0
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, final = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                          live_mask=lm)
+    w = np.asarray(recs["weights"])
+    assert (w[:, 3] == 0).all()
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+    n = np.asarray(recs["n_labeled"])
+    assert n[0, 3] == n[1, 3]                  # dead pool frozen
+    assert (n[1, :3] > n[0, :3]).all()         # live pools keep labeling
+    assert _all_finite(final)
+
+
+def test_churn_process_total_death_keeps_model(setup):
+    """death_rate=1, birth_rate=0: the whole fleet dies in round 0 and the
+    fog model must never move — zero weights, frozen pools, initial-model
+    accuracy in every round, and no NaNs from empty aggregation."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, final = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS,
+        faults=FaultConfig(death_rate=1.0, birth_rate=0.0))
+    assert np.asarray(recs["live"]).sum() == 0
+    assert np.asarray(recs["weights"]).sum() == 0
+    n = np.asarray(recs["n_labeled"])
+    np.testing.assert_array_equal(n[0], n[1])
+    _leaves_close(params0, final)              # fog model untouched
+    assert _all_finite(final)
+
+
+def test_crash_rate_one_freezes_fleet(setup):
+    """crash_rate=1 with everyone alive: every local round is lost mid-
+    flight — no uploads reach the fog, no pool advances."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, final = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS, faults=FaultConfig(crash_rate=1.0))
+    assert np.asarray(recs["crashed"]).all()
+    assert np.asarray(recs["weights"]).sum() == 0
+    n = np.asarray(recs["n_labeled"])
+    np.testing.assert_array_equal(n[0], n[1])
+    _leaves_close(params0, final)
+
+
+def test_liveness_schedule_helper():
+    m = liveness_schedule(32, 50, death_rate=0.1, birth_rate=0.4, seed=0)
+    assert m.shape == (50, 32)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    # steady state ~ birth/(birth+death) = 0.8 live
+    assert 0.6 <= m[25:].mean() <= 0.95
+    np.testing.assert_array_equal(
+        m, liveness_schedule(32, 50, death_rate=0.1, birth_rate=0.4, seed=0))
+    np.testing.assert_array_equal(
+        liveness_schedule(8, 4, death_rate=0.0, birth_rate=0.0), 1.0)
+
+
+# ----------------------------------------------------- aggregation guards
+def test_nan_corruption_guard_keeps_fog_finite(setup):
+    """NaN-corrupted uploads must be rejected before the weighted sum: the
+    guarded fog model stays finite while the unguarded control is poisoned
+    the first time a corrupted upload lands."""
+    cfg, shards, seed_set, test = setup
+    fc = FaultConfig(corrupt_rate=0.6, corrupt_mode="nan", seed=3)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, final = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS, faults=fc,
+        guards=GuardConfig(policy="drop"))
+    assert _all_finite(final)
+    assert np.asarray(recs["rejected"]).sum() >= 1
+    # every corrupted-and-received upload was rejected
+    np.testing.assert_array_equal(np.asarray(recs["corrupted"]),
+                                  np.asarray(recs["rejected"]))
+    _, _, final_un = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                          faults=fc)
+    assert not _all_finite(final_un)           # the degradation being guarded
+
+
+def test_norm_outlier_clip_vs_drop(setup):
+    """Scale-corrupted uploads (finite but x1e4 norm) trip the norm-outlier
+    guard: drop zeroes their weight, clip rescales them to the median
+    threshold — both keep the fog finite, and they disagree."""
+    cfg, shards, seed_set, test = setup
+    fc = FaultConfig(corrupt_rate=0.4, corrupt_mode="scale",
+                     corrupt_scale=1e4, seed=2)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, rd, fd = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                     faults=fc,
+                                     guards=GuardConfig(policy="drop"))
+    _, rc, fc_final = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                           faults=fc,
+                                           guards=GuardConfig(policy="clip"))
+    assert _all_finite(fd) and _all_finite(fc_final)
+    assert np.asarray(rd["rejected"]).sum() >= 1
+    assert np.asarray(rc["clipped"]).sum() >= 1
+    assert np.asarray(rc["rejected"]).sum() == 0   # finite → clip, not drop
+    assert any(not np.allclose(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree_util.tree_leaves(fd),
+                               jax.tree_util.tree_leaves(fc_final)))
+
+
+def test_all_rejected_round_keeps_previous_model(setup):
+    """corrupt_rate=1 + NaN mode + drop guard: every upload is rejected, so
+    the round must aggregate nothing — zero weights (not the uniform
+    fallback, which would average NaNs) and initial-model accuracy."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, recs, final = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS,
+        faults=FaultConfig(corrupt_rate=1.0, corrupt_mode="nan"),
+        guards=GuardConfig(policy="drop"))
+    w = np.asarray(recs["weights"])
+    assert w.sum() == 0 and np.isfinite(w).all()
+    _leaves_close(params0, final)
+    preds = jnp.argmax(eng.trainer.eval_logits_raw(
+        params0, eng.test_images), -1)
+    base_acc = float(jnp.mean((preds == eng.test_labels).astype(jnp.float32)))
+    np.testing.assert_allclose(np.asarray(recs["agg_acc"]), base_acc,
+                               atol=1e-6)
+
+
+def test_guard_verdict_unit():
+    """The verdict kernel directly: nonfinite always rejected; outliers by
+    policy; an all-zero fleet (median 0) must not flag everyone."""
+    norms = jnp.asarray([1.0, 1.2, 0.9, 100.0], jnp.float32)
+    finite = jnp.asarray([True, True, False, True])
+    mask = jnp.ones(4, jnp.float32)
+    rej, clip, scale = guard_verdict(norms, finite, mask,
+                                     policy="drop", factor=8.0)
+    np.testing.assert_array_equal(np.asarray(rej), [0, 0, 1, 1])
+    rej, clip, scale = guard_verdict(norms, finite, mask,
+                                     policy="clip", factor=8.0)
+    np.testing.assert_array_equal(np.asarray(rej), [0, 0, 1, 0])
+    np.testing.assert_array_equal(np.asarray(clip), [0, 0, 0, 1])
+    assert float(scale[3]) < 1.0
+    zeros = jnp.zeros(4, jnp.float32)
+    rej, clip, _ = guard_verdict(zeros, jnp.ones(4, bool), mask,
+                                 policy="drop", factor=8.0)
+    assert np.asarray(rej).sum() == 0 and np.asarray(clip).sum() == 0
+
+
+def test_label_noise_changes_training(setup):
+    """label_noise_rate=1 scrambles every device's labels every round — the
+    fog model must differ from the clean run (the noise reaches the loss)."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, _, f0 = eng.run_rounds_fused(eng.init_state(params0), ROUNDS)
+    _, _, f1 = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS,
+        faults=FaultConfig(label_noise_rate=1.0))
+    assert any(not np.allclose(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree_util.tree_leaves(f0),
+                               jax.tree_util.tree_leaves(f1)))
+    assert _all_finite(f1)
+
+
+# ------------------------------------------------------------ resumability
+def test_resume_matches_uninterrupted_faulted_run(setup, tmp_path):
+    """Checkpoint at round 2 of a fully-faulted 4-round run, restore, and
+    continue: the fault trace replays from absolute round indices, so the
+    final model must match the uninterrupted run ≤ 1e-5."""
+    cfg, shards, seed_set, test = setup
+    g = GuardConfig(policy="drop")
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds=4)
+    _, _, f_full = eng.run_rounds_fused(eng.init_state(params0), 4,
+                                        faults=MESSY, guards=g)
+    st, _, _ = eng.run_rounds_fused(eng.init_state(params0), 2,
+                                    faults=MESSY, guards=g)
+    path = str(tmp_path / "faulted.msgpack")
+    save_engine_state(path, st, metadata={"next_round": 2})
+    st2, meta = load_engine_state(path)
+    st2 = eng.resume_state(st2, next_round=meta["next_round"])
+    _, _, f_res = eng.run_rounds_fused(st2, 2, start_round=2,
+                                       faults=MESSY, guards=g)
+    _leaves_close(f_full, f_res)
+
+
+def test_resume_with_comms_and_hetero_state(setup, tmp_path):
+    """Resume must carry EVERY extension buffer: error-feedback residuals
+    (comms), the straggler backlog + staleness counters (hetero), and the
+    liveness vector (churn) all ride through the checkpoint."""
+    cfg, shards, seed_set, test = setup
+    cc = CommsConfig(compression="int8", error_feedback=True)
+    hc = HeteroConfig(straggler_rate=0.3, decay="exp", decay_rate=0.5,
+                      buffer_stale=True)
+    fc = FaultConfig(death_rate=0.1, birth_rate=0.4, seed=6)
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds=4)
+    _, _, f_full = eng.run_rounds_fused(eng.init_state(params0), 4,
+                                        comms=cc, hetero=hc, faults=fc)
+    st, _, _ = eng.run_rounds_fused(eng.init_state(params0), 2,
+                                    comms=cc, hetero=hc, faults=fc)
+    path = str(tmp_path / "stacked.msgpack")
+    save_engine_state(path, st, metadata={"next_round": 2})
+    st2, meta = load_engine_state(path)
+    assert st2.residual != () and st2.pending != ()
+    assert np.asarray(st2.staleness).shape == (cfg.num_devices,)
+    assert np.asarray(st2.live).shape == (cfg.num_devices,)
+    st2 = eng.resume_state(st2, next_round=meta["next_round"])
+    _, _, f_res = eng.run_rounds_fused(st2, 2, start_round=2,
+                                       comms=cc, hetero=hc, faults=fc)
+    _leaves_close(f_full, f_res)
+
+
+def test_async_resume_exact(setup, tmp_path):
+    """Async checkpoints are EXACT: the event clock restarts from the saved
+    rng, so restore-and-continue must equal chained continuation bitwise."""
+    cfg, shards, seed_set, test = setup
+    ac = AsyncConfig(quorum=3, timer=4.0, dist="exp", mean_latency=1.0,
+                     latency_skew=4.0)
+    g = GuardConfig(policy="drop")
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds=4)
+    st, _, _ = eng.run_async(eng.init_state(params0), 2, async_cfg=ac,
+                             faults=MESSY, guards=g)
+    path = str(tmp_path / "async.msgpack")
+    save_engine_state(path, st, metadata={"next_event": 2})
+    _, _, fog_chain = eng.run_async(st, 2, async_cfg=ac, start_event=2,
+                                    faults=MESSY, guards=g)
+    st2, meta = load_engine_state(path)
+    st2 = eng._shard_state(st2)
+    _, _, fog_res = eng.run_async(st2, 2, async_cfg=ac,
+                                  start_event=meta["next_event"],
+                                  faults=MESSY, guards=g)
+    _leaves_close(fog_chain, fog_res, atol=0)
+
+
+# ------------------------------------------------------------- validation
+def test_fault_config_validation():
+    with pytest.raises(ValueError, match="death_rate"):
+        FaultConfig(death_rate=1.5)
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultConfig(corrupt_mode="flip")
+    with pytest.raises(ValueError, match="corrupt_scale"):
+        FaultConfig(corrupt_scale=0.0)
+    with pytest.raises(ValueError, match="restart_mult"):
+        FaultConfig(restart_mult=0.5)
+    with pytest.raises(ValueError, match="policy"):
+        GuardConfig(policy="median")
+    with pytest.raises(ValueError, match="norm_factor"):
+        GuardConfig(norm_factor=1.0)
+
+
+def test_faults_reject_optimal_aggregation(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    with pytest.raises(ValueError, match="optimal"):
+        eng.run_rounds_fused(eng.init_state(params0), 1,
+                             aggregation="optimal", faults=FaultConfig())
+
+
+def test_live_mask_conflicts_with_churn_process(setup):
+    """A host liveness schedule AND in-trace churn rates would run two
+    different liveness processes — must raise."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    lm = np.ones((1, cfg.num_devices), np.float32)
+    with pytest.raises(ValueError, match="live_mask"):
+        eng.run_rounds_fused(eng.init_state(params0), 1, live_mask=lm,
+                             faults=FaultConfig(death_rate=0.1,
+                                                birth_rate=0.4))
+
+
+def test_faults_require_compiled_engine(setup):
+    cfg, shards, seed_set, test = setup
+    with pytest.raises(ValueError, match="fused"):
+        run_federated_rounds(cfg, shards, seed_set, test, rounds=1,
+                             engine="vmap", faults=FaultConfig())
+    with pytest.raises(ValueError, match="fused"):
+        run_federated_rounds(cfg, shards, seed_set, test, rounds=1,
+                             engine="classic",
+                             guards=GuardConfig(policy="drop"))
+
+
+def test_fault_keys_absolute_indexing():
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(fault_keys(FaultConfig(seed=1), 2, 3))),
+        np.asarray(jax.random.key_data(fault_keys(FaultConfig(seed=1), 0, 5)))[2:])
+
+
+# --------------------------------------------------------------- drivers
+@pytest.mark.slow
+def test_run_experiment_churn_scenario():
+    reports = run_experiment(scenario="churn", num_devices=6, rounds=2,
+                             n_test=64)
+    rep = reports[0]
+    assert len(rep["rounds"]) == 2
+    for r in rep["rounds"]:
+        assert 0.0 <= r["aggregated_acc"] <= 1.0
+        assert len(r["live"]) == 6
+        assert len(r["rejected"]) == 6
+    fs = rep["faults"]
+    assert 0.0 <= fs["mean_live_fraction"] <= 1.0
+    assert fs["rejected_total"] >= 0
+    assert rep["comms"] is not None
+
+
+def test_churn_config_preset():
+    cfg = churn_config(32)
+    assert cfg.num_devices == 32
+    assert cfg.aggregation == "fedavg_n"
+    cfg = churn_config(8, acquisitions=3)
+    assert (cfg.num_devices, cfg.acquisitions) == (8, 3)
+
+
+def test_summarize_faults_shapes():
+    recs = {"live": np.array([[1, 0], [1, 1]], np.float32),
+            "rejected": np.array([[0, 1], [0, 0]], np.float32)}
+    s = summarize_faults(recs)
+    assert s["live_fraction_per_round"] == [0.5, 1.0]
+    assert s["mean_live_fraction"] == 0.75
+    assert s["rejected_total"] == 1
+    assert "crashed_total" not in s
