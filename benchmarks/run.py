@@ -38,6 +38,7 @@ BENCHES = [
     ("hetero", "benchmarks.bench_hetero", "bench_hetero"),
     ("async", "benchmarks.bench_async", "bench_async"),
     ("faults", "benchmarks.bench_faults", "bench_faults"),
+    ("topology", "benchmarks.bench_topology", "bench_topology"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

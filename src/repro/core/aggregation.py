@@ -49,27 +49,56 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+def masked_normalize(weights, mask=None, *, segment_ids=None,
+                     num_segments: Optional[int] = None) -> jax.Array:
+    """THE arrival-weight normalization: raw weights → convex coefficients.
+
+    Every Eq. 1 weighting in the repo funnels through here —
+    ``normalize_weights`` (and with it ``fedavg_n`` /
+    ``weighted_average_stacked``), ``staleness_weights``, and the engine's
+    guard/topology re-normalizations — so the zero-sum→uniform NaN guard
+    lives in exactly one place:
+
+    * Σ(w·mask) = 0 over a (segment's) participants → uniform over those
+      participants;
+    * no participants at all → uniform over the whole (segment's) slot set.
+
+    Flat mode (``segment_ids=None``): one normalization over the full
+    vector, Σα = 1.  Segment mode (``segment_ids`` [D] int, ``num_segments``
+    G static): an independent normalization per segment — the intra-fog
+    Eq. 1 coefficients of ``core.topology``, with the same per-segment
+    degenerate-case guards, Σ_{i∈g} α_i = 1 for every segment g.  Fully
+    traced — safe under jit/vmap/shard_map.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    m = jnp.ones_like(w) if mask is None else jnp.asarray(mask, jnp.float32)
+    w = w * m
+    if segment_ids is None:
+        wsum = jnp.sum(w)
+        msum = jnp.sum(m)
+        uniform = jnp.where(msum > 0, m / jnp.maximum(msum, 1.0),
+                            jnp.full_like(w, 1.0 / w.shape[0]))
+        return jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), uniform)
+    if num_segments is None:
+        raise ValueError("segment_ids requires a static num_segments")
+    ids = jnp.asarray(segment_ids, jnp.int32)
+    wsum = jax.ops.segment_sum(w, ids, num_segments=num_segments)[ids]
+    msum = jax.ops.segment_sum(m, ids, num_segments=num_segments)[ids]
+    size = jax.ops.segment_sum(jnp.ones_like(w), ids,
+                               num_segments=num_segments)[ids]
+    uniform = jnp.where(msum > 0, m / jnp.maximum(msum, 1.0),
+                        1.0 / jnp.maximum(size, 1.0))
+    return jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), uniform)
+
+
 def normalize_weights(weights, mask=None) -> jax.Array:
     """Raw per-device weights → convex combination coefficients α (Eq. 1).
 
     ``mask`` (optional, [D] bool/float) zeroes out non-participants (the
     paper's asynchronization tolerance: devices that did not upload this
-    round).  Degenerate cases fall back instead of producing NaN:
-
-    * Σ(w·mask) = 0 (e.g. every uploaded model scored 0 validation accuracy
-      in an early untrained round) → uniform over participants;
-    * no participants at all → uniform over every device.
-
-    Fully traced — safe under jit/vmap/shard_map.
-    """
-    w = jnp.asarray(weights, jnp.float32)
-    m = jnp.ones_like(w) if mask is None else jnp.asarray(mask, jnp.float32)
-    w = w * m
-    wsum = jnp.sum(w)
-    msum = jnp.sum(m)
-    uniform = jnp.where(msum > 0, m / jnp.maximum(msum, 1.0),
-                        jnp.full_like(w, 1.0 / w.shape[0]))
-    return jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), uniform)
+    round).  Degenerate cases fall back instead of producing NaN — see
+    ``masked_normalize``, the single home of that guard."""
+    return masked_normalize(weights, mask)
 
 
 def staleness_decay(staleness, *, kind: str = "exp",
@@ -95,16 +124,20 @@ def staleness_decay(staleness, *, kind: str = "exp",
 
 
 def staleness_weights(raw, staleness, mask=None, *, kind: str = "exp",
-                      rate: float = 0.5) -> jax.Array:
+                      rate: float = 0.5, segment_ids=None,
+                      num_segments: Optional[int] = None) -> jax.Array:
     """Staleness-aware Eq. 1 coefficients: ``alpha_i ∝ raw_i · decay(s_i)``
-    normalized over the ``mask`` arrivals (zero-sum guarded like
-    ``normalize_weights``).  ``raw`` is the synchronous weight basis —
-    labeled counts n_i for ``fedavg_n``, validation accuracy, or ones —
-    so ``kind="none"`` (or all-zero staleness) reduces exactly to the
-    synchronous weighting over arrivals."""
+    normalized over the ``mask`` arrivals (zero-sum guarded in
+    ``masked_normalize``, the single home of that guard).  ``raw`` is the
+    synchronous weight basis — labeled counts n_i for ``fedavg_n``,
+    validation accuracy, or ones — so ``kind="none"`` (or all-zero
+    staleness) reduces exactly to the synchronous weighting over arrivals.
+    With ``segment_ids``/``num_segments`` the normalization is per fog
+    group (intra-fog Eq. 1 — see ``core.topology``)."""
     w = jnp.asarray(raw, jnp.float32) * staleness_decay(
         staleness, kind=kind, rate=rate)
-    return normalize_weights(w, mask)
+    return masked_normalize(w, mask, segment_ids=segment_ids,
+                            num_segments=num_segments)
 
 
 def weighted_average(models: Sequence, weights: Sequence[float], *,

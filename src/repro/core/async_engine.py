@@ -234,7 +234,7 @@ def _where_mask(mask, on_true, on_false):
 
 def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                    async_key, faults_key=None, guards_key=None,
-                   churn_mode: str = "none"):
+                   churn_mode: str = "none", topo_key=None):
     """The whole event loop — every aggregation event, every candidate
     device round, every staleness-decayed delta fold-in — as ONE compiled
     program (a ``lax.scan`` over aggregation events).
@@ -261,6 +261,19 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
     4. arrivals reset staleness and are flagged for re-dispatch; everyone
        still in flight ages by one model version iff a commit happened.
 
+    ``topo_key`` (``(num_groups, local_steps)`` or None) threads the fog
+    tier (``core.topology``) through the event loop: the fog model carry
+    becomes a ``[G, ...]`` stack, each arrival folds into ITS OWN fog
+    group's model (intra-fog Eq. 1 with per-group staleness weights), and
+    every ``local_steps``-th event is a SYNC event that collapses the tier
+    — the β-mixed inter-fog base plus the flat staleness-decayed arrivals,
+    broadcast back to every group.  ``G=1`` with ``local_steps=1`` makes
+    every event a sync event with β ≡ 1.0, reproducing the flat loop
+    bitwise.  The guard verdict is per-group (one fog's byzantine burst
+    cannot skew another's threshold) and staleness ages against the model
+    the device actually dispatched from — its group's on local events, the
+    global on sync events.
+
     ``faults_key`` / ``guards_key`` / ``churn_mode`` mirror the
     ``core.faults`` statics of ``EdgeEngine._get_rounds_fused_jit``.
     Event-time semantics: churn (always the in-trace birth/death process —
@@ -276,9 +289,10 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
     engine, with the fog commit gated on accepted (not merely arrived)
     uploads.
     """
-    from repro.core.engine import _compiled
+    from repro.core import topology as topo_mod
+    from repro.core.engine import (_compiled, _fleet_collectives,
+                                   _fleet_spec, fleet_shards)
     from repro.core.federated import _donate_argnums
-    from repro.launch.mesh import DEVICE_AXIS
 
     def build():
         from jax.experimental.shard_map import shard_map
@@ -298,37 +312,41 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
         fault_like = faults_on or guards_on or churn_on
         if faults_on:
             corrupt_mode, num_classes = faults_key
+        topo_on = topo_key is not None
+        G = topo_key[0] if topo_on else 1
         step = engine._acquisition_step(False)
         R = engine.cfg.acquisitions
         round_unroll = R if engine.unroll else 1
         has_val = engine.test_images is not None
         mesh = engine.mesh
-        axis = DEVICE_AXIS if mesh is not None else None
+        on_mesh = mesh is not None
         D = engine.num_devices
-        D_local = D // (1 if mesh is None else mesh.shape[DEVICE_AXIS])
+        D_local = D // fleet_shards(mesh)
         trainer = engine.trainer
         eval_fn = trainer.eval_logits_raw
         tmap = jax.tree_util.tree_map
-
-        def gather(v):  # local [D_local] per-device scalar → global [D]
-            return v if axis is None else jax.lax.all_gather(
-                v, axis, tiled=True)
-
-        def local(v):   # global [D, ...] → this shard's [D_local] rows
-            if axis is None:
-                return v
-            off = jax.lax.axis_index(axis) * D_local
-            return jax.lax.dynamic_slice_in_dim(v, off, D_local, axis=0)
+        gather, local, fpsum = _fleet_collectives(mesh, D)
 
         def events_all(state, images, labels, seed_x, seed_y, val_x, val_y,
                        keys_all, lat_keys, means_g, quorum, timer, mix_rate,
-                       fkeys, frates, gfactor):
+                       fkeys, frates, gfactor, group_ids, sync_flags):
             n_pad = labels.shape[1]
+            if topo_on:
+                gid_l = local(group_ids)
+                # global-eval mix: each fog's slot share of the fleet (a
+                # size-weighted model average is the cloud-side estimate
+                # between sync events; 1.0 at G=1 → bitwise the flat fog)
+                gfrac = jax.ops.segment_sum(
+                    jnp.ones((D,), jnp.float32), group_ids,
+                    num_segments=G) / D
 
             def one_event(carry, xs):
                 (fog, params, opt_state, pool, rng, residual, pending,
                  staleness, next_done, dispatch, t_now, live) = carry
-                keys_r, lat_key, fkey = xs
+                if topo_on:
+                    keys_r, lat_key, fkey, sync_f = xs
+                else:
+                    keys_r, lat_key, fkey = xs
 
                 # ---- 0. churn + fault draws for this event (one fault key
                 # per event, folded at the absolute index)
@@ -371,9 +389,14 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                     labels_r = jnp.where(noise_l[:, None] > 0,
                                          noisy_l, labels)
 
-                # ---- 1. dispatch + candidate round (masked commit)
-                fog_b = tmap(lambda a: jnp.broadcast_to(
-                    a[None], (D_local,) + a.shape), fog)
+                # ---- 1. dispatch + candidate round (masked commit):
+                # every slot reads ITS fog group's model (flat = the one
+                # implicit group, a plain broadcast)
+                if topo_on:
+                    fog_b = topo_mod.take_group_rows(fog, gid_l)
+                else:
+                    fog_b = tmap(lambda a: jnp.broadcast_to(
+                        a[None], (D_local,) + a.shape), fog)
                 params = _where_mask(dispatch, fog_b, params)
                 opt_state = _where_mask(dispatch, trainer.opt.init(params),
                                         opt_state)
@@ -475,7 +498,9 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                     finite_g = gather(faults_mod.stacked_finite(sent))
                     reject_g, clip_g, scale_g = faults_mod.guard_verdict(
                         norms_g, finite_g, recv_g, policy=guards_key,
-                        factor=gfactor)
+                        factor=gfactor,
+                        group_ids=group_ids if topo_on else None,
+                        num_groups=G if topo_on else None)
                     accept_g = recv_g * (1.0 - reject_g)
                     if guards_key == "clip":
                         scale_l = local(scale_g)
@@ -497,12 +522,44 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                 accept_any = jnp.sum(accept_g) > 0
                 w_g = jnp.where(accept_any, w_g, jnp.zeros_like(w_g))
 
-                agg_delta = agg_mod.weighted_sum_stacked(sent, local(w_g))
-                if axis is not None:
-                    agg_delta = jax.lax.psum(agg_delta, axis)
-                fog_new = tmap(lambda f, d: f + mix_rate * d, fog, agg_delta)
-                fog = tmap(lambda a, b: jnp.where(accept_any, a, b),
-                           fog_new, fog)
+                agg_delta = fpsum(
+                    agg_mod.weighted_sum_stacked(sent, local(w_g)))
+                if topo_on:
+                    # intra-fog Eq. 1: each accepted delta folds into ITS
+                    # fog group with per-group staleness-decayed alphas; a
+                    # silent group keeps its model (the where discards the
+                    # per-segment uniform fallback, which would fold
+                    # in-flight pending deltas in early)
+                    decayed = raw * agg_mod.staleness_decay(
+                        stale_g, kind=decay, rate=decay_rate)
+                    alpha, beta, group_any = topo_mod.two_tier_weights(
+                        decayed, accept_g, group_ids, G)
+                    fold = fpsum(topo_mod.segment_sum_stacked(
+                        sent, local(alpha), gid_l, G))
+                    fog_cand = tmap(lambda f, d: f + mix_rate * d, fog, fold)
+                    fog_cand = tmap(
+                        lambda a, b: jnp.where(group_any.reshape(
+                            (-1,) + (1,) * (a.ndim - 1)), a, b),
+                        fog_cand, fog)
+                    # sync event: inter-fog Eq. 1 collapses the tier — the
+                    # β-mixed fog base plus the FLAT staleness-decayed
+                    # arrivals, broadcast back to every group (β ≡ 1.0 at
+                    # G=1, so this IS the flat update bitwise)
+                    base = topo_mod.group_reduce_stacked(fog, beta)
+                    glob = tmap(lambda b, d: b + mix_rate * d,
+                                base, agg_delta)
+                    fog_sync = tmap(lambda a: jnp.broadcast_to(
+                        a[None], (G,) + a.shape), glob)
+                    fog_sync = tmap(
+                        lambda a, b: jnp.where(accept_any, a, b),
+                        fog_sync, fog)
+                    fog = tmap(lambda a, b: jnp.where(sync_f > 0, a, b),
+                               fog_sync, fog_cand)
+                else:
+                    fog_new = tmap(lambda f, d: f + mix_rate * d,
+                                   fog, agg_delta)
+                    fog = tmap(lambda a, b: jnp.where(accept_any, a, b),
+                               fog_new, fog)
 
                 # ---- 4. bookkeeping: re-dispatch arrivals, age the rest
                 # (staleness is measured in committed model versions, so a
@@ -513,7 +570,15 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                 # carry already-applied deltas)
                 pending = _where_mask(
                     arrived_l, tmap(jnp.zeros_like, pending), pending)
-                aging = accept_any.astype(jnp.int32)
+                if topo_on:
+                    # staleness counts versions of the model a device
+                    # dispatched FROM: its group's on local events, the
+                    # global on sync events
+                    aging = jnp.where(sync_f > 0, accept_any,
+                                      jnp.take(group_any, gid_l))
+                    aging = aging.astype(jnp.int32)
+                else:
+                    aging = accept_any.astype(jnp.int32)
                 if churn_on:
                     # dead devices have nothing in flight to grow stale
                     aging = aging * (live > 0).astype(jnp.int32)
@@ -541,9 +606,18 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                     rec["clipped"] = clip_g
                     rec["upload_norms"] = norms_g
                     rec["accepted"] = accept_g
+                if topo_on:
+                    rec["fog_sync"] = (sync_f > 0).astype(jnp.float32)
+                    rec["beta"] = beta
+                    rec["group_accept"] = jax.ops.segment_sum(
+                        accept_g, group_ids, num_segments=G)
                 if has_val:
                     rec["device_accs"] = accs_g
-                    preds = jnp.argmax(eval_fn(fog, val_x), -1)
+                    # cloud-side estimate: the slot-share-weighted fog mix
+                    # (== the fog model itself at G=1)
+                    eval_model = (topo_mod.group_reduce_stacked(fog, gfrac)
+                                  if topo_on else fog)
+                    preds = jnp.argmax(eval_fn(eval_model, val_x), -1)
                     rec["agg_acc"] = jnp.mean(
                         (preds == val_y).astype(jnp.float32))
                 return (fog, params, opt_state, pool, rng, residual,
@@ -552,31 +626,47 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
 
             # prologue encoded as carry init: everyone is freshly
             # dispatched the fog model (= any state row — init/set_params
-            # broadcast identical rows) at t = 0
-            fog0 = tmap(lambda a: a[0], state.params)
+            # broadcast identical rows) at t = 0.  With a topology the
+            # [G, ...] fog stack is rebuilt from one exact representative
+            # row per group (rows within a group are identical by the
+            # dispatch protocol; the one-hot segment-sum + fleet psum
+            # recovers them under any mesh factorization)
+            if topo_on:
+                fidx = jax.ops.segment_min(
+                    jnp.arange(D, dtype=jnp.int32), group_ids,
+                    num_segments=G)
+                repr_l = local(jnp.zeros((D,), jnp.float32)
+                               .at[fidx].set(1.0))
+                fog0 = fpsum(topo_mod.segment_sum_stacked(
+                    state.params, repr_l, gid_l, G))
+            else:
+                fog0 = tmap(lambda a: a[0], state.params)
             carry = (fog0, state.params, state.opt_state, state.pool,
                      state.rng, state.residual, state.pending,
                      state.staleness,
                      jnp.zeros((D_local,), jnp.float32),
                      jnp.ones((D_local,), jnp.float32),
                      jnp.float32(0.0), state.live)
-            carry, recs = jax.lax.scan(one_event, carry,
-                                       (keys_all, lat_keys, fkeys))
+            xs_rows = (keys_all, lat_keys, fkeys)
+            if topo_on:
+                xs_rows = xs_rows + (sync_flags,)
+            carry, recs = jax.lax.scan(one_event, carry, xs_rows)
             (fog, params, opt_state, pool, rng, residual, pending,
              staleness, _nd, _disp, _t, live) = carry
             out_state = type(state)(params, opt_state, pool, rng,
                                     residual, pending, staleness, live)
             return out_state, recs, fog
 
-        if mesh is not None:
-            dev = P(DEVICE_AXIS)
+        if on_mesh:
+            dev = _fleet_spec(mesh)
             events_all = shard_map(
                 events_all, mesh=mesh,
-                # fkeys / frates / gfactor replicate: fault draws are
-                # global-fleet facts every shard derives identically
+                # fkeys / frates / gfactor / group_ids / sync_flags
+                # replicate: fault draws and the topology are global-fleet
+                # facts every shard derives identically
                 in_specs=(dev, dev, dev, P(), P(), P(), P(),
-                          P(None, DEVICE_AXIS), P(), P(), P(), P(), P(),
-                          P(), P(), P()),
+                          _fleet_spec(mesh, None), P(), P(), P(), P(),
+                          P(), P(), P(), P(), P(), P()),
                 # recs and the fog model are replicated (all_gather / psum
                 # results); state stays sharded
                 out_specs=(dev, P(), P()), check_rep=False)
@@ -585,7 +675,7 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
 
     key = engine._cache_key("async_events", False) + (
         events, aggregation, comms_key, async_key, faults_key, guards_key,
-        churn_mode)
+        churn_mode, topo_key)
     return _compiled(key, build)
 
 
@@ -593,7 +683,7 @@ def run_events_fused(engine, state, events: int, *,
                      async_cfg: AsyncConfig,
                      aggregation: str = "fedavg_n",
                      comms=None, start_event: int = 0,
-                     faults=None, guards=None):
+                     faults=None, guards=None, topology=None):
     """``events`` fog aggregation events — rounds-free FedAsync/FedBuff
     dynamics — in ONE dispatch.
 
@@ -631,6 +721,19 @@ def run_events_fused(engine, state, events: int, *,
     and ``quorum >= D``, every event is a full barrier and the result
     matches ``run_rounds_fused`` ≤ 1e-5.
 
+    ``topology`` (``core.topology.FogTopology``) runs the event loop over
+    the two-tier fog hierarchy: arrivals fold into their OWN fog group's
+    model every event (intra-fog Eq. 1), the tier collapses to a global
+    model only on every ``local_steps``-th event (inter-fog Eq. 1, the
+    fog→cloud sync — between syncs no bytes cross the upper tier), the
+    per-fog ``latency_scale`` profile multiplies the device latency means,
+    and guards / staleness go per-group.  ``uniform_topology(D, 1)``
+    reproduces the flat event loop bitwise.  Telemetry gains per-event
+    ``fog_sync`` / ``beta`` / ``group_accept`` rows; ``agg_acc`` becomes
+    the slot-share-weighted fog mix between syncs.  ``compute_scale`` has
+    no effect here (the async loop has no step-limit surface — model
+    compute speed through the latency profile instead).
+
     ``faults`` / ``guards`` (``core.faults``) inject event-time faults and
     enable the fog-side aggregation guards — see
     ``EdgeEngine.run_rounds_fused`` for the shared surface.  Async churn
@@ -651,6 +754,8 @@ def run_events_fused(engine, state, events: int, *,
             "construct EdgeEngine with test_set")
     engine._check_capacity(state, rounds=events)
     D = engine.num_devices
+    if topology is not None:
+        topology.validate_for(D)
 
     comms_key = None
     if comms is not None and comms.compression != "none":
@@ -692,7 +797,19 @@ def run_events_fused(engine, state, events: int, *,
     async_key = (async_cfg.dist, float(async_cfg.sigma),
                  async_cfg.quorum is not None, async_cfg.timer is not None,
                  async_cfg.decay, float(async_cfg.decay_rate))
-    means = jnp.asarray(device_latency_means(async_cfg, D))
+    means_np = device_latency_means(async_cfg, D)
+    topo_key = None
+    if topology is not None:
+        from repro.core import topology as topo_mod
+        topo_key = (topology.num_groups, int(topology.local_steps))
+        means_np = topo_mod.topology_latency_means(topology, means_np)
+        group_ids = jnp.asarray(topology.ids)
+        sync_rows = jnp.asarray(
+            topo_mod.sync_schedule(topology, events, start_event))
+    else:
+        group_ids = jnp.zeros((D,), jnp.int32)
+        sync_rows = jnp.ones((events,), jnp.float32)
+    means = jnp.asarray(means_np)
     # event 0 consumes the incoming state's keys; later events follow the
     # absolute-index schedule (the run_rounds_fused chaining contract)
     later = [engine.device_keys(start_event + t) for t in range(1, events)]
@@ -712,14 +829,14 @@ def run_events_fused(engine, state, events: int, *,
     gfactor = jnp.float32(guards.norm_factor if guards is not None
                           else 0.0)
     fn = _get_async_jit(engine, events, aggregation, comms_key, async_key,
-                        faults_key, guards_key, churn_mode)
+                        faults_key, guards_key, churn_mode, topo_key)
     counters.count_dispatch()
     state, recs, fog = fn(state, engine.images, engine.labels,
                           engine.seed_images, engine.seed_labels,
                           engine.test_images, engine.test_labels,
                           keys_all, lat_keys, means, quorum, timer,
                           jnp.float32(async_cfg.mix_rate), fkeys, frates,
-                          gfactor)
+                          gfactor, group_ids, sync_rows)
     return state, recs, fog
 
 

@@ -101,17 +101,33 @@ class CommsConfig:
         sample (float32 image + int32 label bytes) to the uplink — the
         "ship the data, not the model" scenario family; accounting-only,
         nothing enters the compiled program.
+    ``fog_compression``
+        ``"none" | "int8" | "topk"`` (default ``"none"``).  Separate codec
+        for the UPPER tier of a hierarchical fleet
+        (``core.topology.FogTopology``): on fog→cloud sync rounds each fog
+        group's aggregated delta is compressed with this codec before the
+        inter-fog Eq. 1 (in-compile on the fused engine; also drives the
+        fog→cloud byte accounting in ``tier_report``).  The two tiers are
+        independent — e.g. raw edge→fog uploads over the cheap local link
+        with ``int8`` across the expensive fog→cloud backhaul.  Ignored
+        without a topology.
     """
 
     compression: str = "none"
     topk_fraction: float = 0.05
     error_feedback: bool = True
     upload_samples: bool = False
+    fog_compression: str = "none"
 
     def __post_init__(self):
         if self.compression not in COMPRESSIONS:
             raise ValueError(
                 f"unknown compression {self.compression!r}: "
+                f"use {' | '.join(COMPRESSIONS)}"
+            )
+        if self.fog_compression not in COMPRESSIONS:
+            raise ValueError(
+                f"unknown fog_compression {self.fog_compression!r}: "
                 f"use {' | '.join(COMPRESSIONS)}"
             )
         if not 0.0 < self.topk_fraction <= 1.0:
@@ -335,6 +351,151 @@ def attach_round_comms(reports, summary) -> None:
     static = {k: summary[k] for k in STATIC_FIELDS}
     for rep, entry in zip(reports, summary["rounds"]):
         rep["comms"] = {**static, **entry}
+
+
+def tier_report(
+    cfg: Optional[CommsConfig],
+    params_template,
+    upload_mask,
+    topology,
+    *,
+    start_round: int = 0,
+) -> Dict[str, Any]:
+    """Per-tier byte accounting for a hierarchical (fog-topology) run.
+
+    Splits the link accounting of ``comms_report`` across the two tiers of
+    ``core.topology.FogTopology``:
+
+    * **edge→fog** — every round, each uploading device ships its (edge-
+      codec-compressed) delta plus metadata to ITS fog node.  When the
+      topology carries an ``uplink_scale`` profile the report also prices
+      these bytes in relative cost units (bytes × the group's per-byte
+      cost) — accounting only.
+    * **fog→cloud** — only on sync rounds (``(t+1) % local_steps == 0``,
+      absolute-indexed from ``start_round``): each of the G fog groups
+      ships ONE aggregated delta, compressed with ``cfg.fog_compression``,
+      plus metadata; the cloud re-dispatches one model per group
+      (cloud→fog downlink).  Between syncs NOTHING crosses this tier —
+      that is the hierarchy's entire bandwidth case.
+
+    ``flat_cross_tier_uplink_bytes`` is what the same participation record
+    would have shipped across the upper tier WITHOUT the fog tier (every
+    upload straight to the cloud, edge codec); the headline
+    ``cross_tier_reduction`` ratio divides it by the actual fog→cloud
+    bytes (``inf`` when nothing synced) — the quantity
+    ``benchmarks/bench_topology.py`` gates on (≥3x at G=16).
+    """
+    mask = np.asarray(upload_mask, np.float64)
+    rounds, D = mask.shape
+    topology.validate_for(D)
+    from repro.core.topology import sync_schedule
+
+    sync = np.asarray(sync_schedule(topology, rounds, start_round),
+                      np.float64)
+    G = topology.num_groups
+    pbytes = param_bytes(params_template)
+    ubytes = upload_bytes(cfg, params_template)
+    fog_cfg = (CommsConfig(compression=cfg.fog_compression,
+                           topk_fraction=cfg.topk_fraction)
+               if cfg is not None else None)
+    fbytes = upload_bytes(fog_cfg, params_template)
+    scale = (np.asarray(topology.uplink_scale, np.float64)[topology.ids]
+             if topology.uplink_scale is not None else None)
+
+    per_round = []
+    cum_edge = 0
+    cum_cloud = 0
+    for t in range(rounds):
+        uploads = int(mask[t].sum())
+        edge_up = uploads * (ubytes + METADATA_BYTES_PER_UPLOAD)
+        synced = bool(sync[t] > 0)
+        cloud_up = G * (fbytes + METADATA_BYTES_PER_UPLOAD) if synced else 0
+        cum_edge += edge_up
+        cum_cloud += cloud_up
+        rec = {
+            "round": t,
+            "uploads": uploads,
+            "fog_sync": synced,
+            "edge_fog_uplink_bytes": edge_up,
+            "fog_cloud_uplink_bytes": cloud_up,
+            "fog_edge_downlink_bytes": D * pbytes,
+            "cloud_fog_downlink_bytes": G * pbytes if synced else 0,
+            "cumulative_edge_fog_bytes": cum_edge,
+            "cumulative_fog_cloud_bytes": cum_cloud,
+        }
+        if scale is not None:
+            rec["edge_fog_uplink_cost"] = float(
+                (mask[t] * scale).sum()
+                * (ubytes + METADATA_BYTES_PER_UPLOAD))
+        per_round.append(rec)
+
+    flat_cloud = int(mask.sum()) * (ubytes + METADATA_BYTES_PER_UPLOAD)
+    return {
+        "num_groups": G,
+        "local_steps": int(topology.local_steps),
+        "sync_rounds": int(sync.sum()),
+        "edge_compression": "none" if cfg is None else cfg.compression,
+        "fog_compression": ("none" if cfg is None
+                            else cfg.fog_compression),
+        "fog_upload_bytes_per_group": fbytes,
+        "rounds": per_round,
+        "edge_fog_bytes_total": cum_edge,
+        "fog_cloud_bytes_total": cum_cloud,
+        "flat_cross_tier_uplink_bytes": flat_cloud,
+        "cross_tier_reduction": (flat_cloud / cum_cloud
+                                 if cum_cloud else float("inf")),
+    }
+
+
+TIER_STATIC_FIELDS = (
+    "num_groups", "local_steps", "edge_compression", "fog_compression",
+    "fog_upload_bytes_per_group",
+)
+
+
+def attach_round_tiers(reports, summary) -> None:
+    """Merge a ``tier_report`` into per-round federated reports in place:
+    each round dict gains a ``"tiers"`` entry (static topology facts +
+    that round's per-tier byte counts) — the hierarchical sibling of
+    ``attach_round_comms``."""
+    static = {k: summary[k] for k in TIER_STATIC_FIELDS}
+    for rep, entry in zip(reports, summary["rounds"]):
+        rep["tiers"] = {**static, **entry}
+
+
+def tier_telemetry(round_reports) -> Optional[Dict[str, Any]]:
+    """Experiment-level per-tier telemetry from per-round federated reports
+    carrying ``"tiers"`` entries (``attach_round_tiers``): static topology
+    facts, cumulative per-tier byte totals, and the headline
+    ``cross_tier_reduction`` — edge→fog bytes over fog→cloud bytes, i.e.
+    the factor by which the fog tier cut the bytes crossing to the cloud
+    (``inf`` when no round synced)."""
+    rounds = [r for r in round_reports if "tiers" in r]
+    if not rounds:
+        return None
+    last = rounds[-1]["tiers"]
+    edge = last["cumulative_edge_fog_bytes"]
+    cloud = last["cumulative_fog_cloud_bytes"]
+    return {
+        "num_groups": last["num_groups"],
+        "local_steps": last["local_steps"],
+        "edge_compression": last["edge_compression"],
+        "fog_compression": last["fog_compression"],
+        "sync_rounds": sum(1 for r in rounds if r["tiers"]["fog_sync"]),
+        "edge_fog_bytes_total": edge,
+        "fog_cloud_bytes_total": cloud,
+        "cross_tier_reduction": (edge / cloud if cloud else float("inf")),
+        "bytes_per_round": [
+            {
+                "round": r["round"],
+                "edge_fog_uplink_bytes": r["tiers"]["edge_fog_uplink_bytes"],
+                "fog_cloud_uplink_bytes": r["tiers"][
+                    "fog_cloud_uplink_bytes"],
+                "fog_sync": r["tiers"]["fog_sync"],
+            }
+            for r in rounds
+        ],
+    }
 
 
 def experiment_telemetry(round_reports) -> Optional[Dict[str, Any]]:

@@ -66,8 +66,9 @@ from repro.core import comms as comms_mod
 from repro.core import counters, vpool
 from repro.core import faults as faults_mod
 from repro.core import hetero as hetero_mod
+from repro.core import topology as topo_mod
 from repro.kernels.acquisition_scores import acquisition_scores_fused
-from repro.launch.mesh import DEVICE_AXIS
+from repro.launch.mesh import DEVICE_AXIS, FOG_AXIS
 
 _AGGREGATIONS = ("average", "weighted", "optimal", "fedavg_n")
 
@@ -85,6 +86,68 @@ def _compiled(key, build):
     if fn is None:
         fn = _COMPILED_CACHE[key] = build()
     return fn
+
+
+def fleet_axes(mesh) -> Optional[tuple]:
+    """Mesh axis names the [D] fleet axis shards over, fog-major, or None
+    off-mesh.  ``("fog", "device")`` on a 2-D hierarchical mesh
+    (``launch.mesh.make_fog_mesh``), ``("device",)`` on the classic 1-D
+    mesh — the single source the fused engines derive their gather/local
+    slicing, psum reductions, and PartitionSpecs from."""
+    if mesh is None:
+        return None
+    return tuple(a for a in (FOG_AXIS, DEVICE_AXIS) if a in mesh.axis_names)
+
+
+def fleet_shards(mesh) -> int:
+    """Total shard count of the fleet axis (product over fleet mesh axes)."""
+    axes = fleet_axes(mesh)
+    if not axes:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fleet_spec(mesh, *leading) -> P:
+    """PartitionSpec placing the fleet axes on the dim after ``leading``
+    entries: ``_fleet_spec(mesh)`` shards dim 0, ``_fleet_spec(mesh, None)``
+    dim 1 (per-round [T, D] rows) — a tuple entry on 2-D meshes."""
+    axes = fleet_axes(mesh)
+    entry = axes[0] if len(axes) == 1 else axes
+    return P(*leading, entry)
+
+
+def _fleet_collectives(mesh, D: int):
+    """(gather, local, psum) closures over the fleet mesh axes.
+
+    ``gather`` reassembles a global [D, ...] from this shard's local rows
+    (all_gather minor axis first, so the concatenation order matches the
+    fog-major layout of ``_fleet_spec``); ``local`` slices this shard's
+    rows back out of a replicated global; ``psum`` sums partials over every
+    fleet axis (group-local psum over "device" + fog-axis psum over "fog"
+    on the 2-D mesh).  Off-mesh all three are identities."""
+    axes = fleet_axes(mesh)
+    if not axes:
+        return (lambda v: v), (lambda v: v), (lambda v: v)
+    D_local = D // fleet_shards(mesh)
+
+    def gather(v):
+        for a in reversed(axes):
+            v = jax.lax.all_gather(v, a, tiled=True)
+        return v
+
+    def local(v):
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return jax.lax.dynamic_slice_in_dim(v, idx * D_local, D_local, axis=0)
+
+    def psum(x):
+        return jax.lax.psum(x, axes if len(axes) > 1 else axes[0])
+
+    return gather, local, psum
 
 
 class EngineState(NamedTuple):
@@ -177,12 +240,14 @@ class EdgeEngine:
             if DEVICE_AXIS not in mesh.axis_names:
                 raise ValueError(
                     f"mesh must carry a {DEVICE_AXIS!r} axis "
-                    f"(launch.mesh.make_device_mesh); got {mesh.axis_names}")
-            shards = mesh.shape[DEVICE_AXIS]
+                    f"(launch.mesh.make_device_mesh / make_fog_mesh); "
+                    f"got {mesh.axis_names}")
+            shards = fleet_shards(mesh)
             if len(device_data) % shards:
                 raise ValueError(
                     f"num_devices={len(device_data)} must divide evenly over "
-                    f"the {shards}-way {DEVICE_AXIS!r} mesh axis")
+                    f"the {shards}-way fleet mesh "
+                    f"{tuple(fleet_axes(mesh))}")
         # XLA:CPU loses intra-op threading inside while-loop bodies (~3x on
         # the conv train step), so on CPU both scans are unrolled into a
         # straight-line program; on TPU the rolled while-loop compiles faster
@@ -192,7 +257,7 @@ class EdgeEngine:
         self.images, self.labels, self.valid = stack_device_data(device_data)
         if mesh is not None:
             # commit the fleet data to its shards once, not per dispatch
-            sharding = NamedSharding(mesh, P(DEVICE_AXIS))
+            sharding = NamedSharding(mesh, _fleet_spec(mesh))
             self.images = jax.device_put(self.images, sharding)
             self.labels = jax.device_put(self.labels, sharding)
         n_pad = self.images.shape[1]
@@ -393,7 +458,7 @@ class EdgeEngine:
             if mesh is not None:
                 # Shard the device axis: each mesh shard vmaps its D/shards
                 # local devices; no collectives needed for a plain round.
-                dev = P(DEVICE_AXIS)
+                dev = _fleet_spec(mesh)
                 n_extra = 4 if record_curves else 2
                 round_all = shard_map(
                     round_all, mesh=mesh,
@@ -437,7 +502,8 @@ class EdgeEngine:
     def _get_rounds_fused_jit(self, rounds: int, aggregation: str,
                               mask_mode: str, comms_key=None,
                               hetero_key=None, faults_key=None,
-                              guards_key=None, churn_mode: str = "none"):
+                              guards_key=None, churn_mode: str = "none",
+                              topo_key=None):
         """T whole rounds — device AL + Eq. 1 aggregation + re-dispatch — as
         ONE compiled program (an outer scan over rounds).
 
@@ -494,6 +560,22 @@ class EdgeEngine:
         renormalize over the ACCEPTED arrivals, an all-rejected round
         keeping the previous fog model.  With all three off the emitted
         program is the unchanged pre-fault one.
+
+        ``topo_key`` is the hierarchical-fog static tuple ``(num_groups,
+        local_steps, fog_compression, has_compute_profile)`` (or None =
+        flat fleet) from a ``core.topology.FogTopology``.  With it the
+        round carries [G, ...] fog models and aggregates in TWO Eq. 1
+        levels: intra-fog (per-group masked normalization + segment sums
+        over the stacked axis) every round, inter-fog (β over group
+        arrival masses) only on sync rounds (the traced ``sync_flags`` xs
+        row — between syncs nothing crosses the fog→cloud tier and each
+        device is re-dispatched its own group's fog model).  A group with
+        no accepted arrivals keeps its previous fog model (a dead fog
+        group is all its slots dark).  Because β_g is each group's share
+        of the total arrival mass, the sync-round global is the FLAT
+        Eq. 1 model — G=1/local_steps=1 reduces bitwise to the flat
+        program.  ``fog_compression`` optionally runs a second codec on
+        the fog→cloud link (the per-group delta sums, vmapped over G).
         """
 
         def build():
@@ -512,10 +594,23 @@ class EdgeEngine:
             guards_on = guards_key is not None
             churn_on = churn_mode != "none"
             fault_like = faults_on or guards_on or churn_on
+            topo_on = topo_key is not None
+            if topo_on:
+                G, t_steps, fog_comp, topo_steps = topo_key
+                fog_local = t_steps > 1     # any non-sync rounds at all?
+                fog_compress = fog_comp != "none"
+                fog_cc = (comms_mod.CommsConfig(compression=fog_comp)
+                          if fog_compress else None)
+            else:
+                G, fog_local, fog_compress, fog_cc, topo_steps = (
+                    1, False, False, None, False)
             # faults and guards need the per-device upload tree explicitly
             # (to corrupt / norm-check / zero it), so they force the exact
-            # delta-form aggregation even without a codec
-            delta_form_always = compress or faults_on or guards_on
+            # delta-form aggregation even without a codec; the fog-tier
+            # codec compresses per-group DELTA sums, so it does too
+            delta_form_always = (compress or faults_on or guards_on
+                                 or fog_compress)
+            use_steps = h_steps or topo_steps
             if faults_on:
                 corrupt_mode, num_classes = faults_key
             step = self._acquisition_step(False)
@@ -523,27 +618,23 @@ class EdgeEngine:
             round_unroll = R if self.unroll else 1
             has_val = self.test_images is not None
             mesh = self.mesh
-            axis = DEVICE_AXIS if mesh is not None else None
+            on_mesh = mesh is not None
             D = self.num_devices
-            D_local = D // (1 if mesh is None else mesh.shape[DEVICE_AXIS])
+            D_local = D // fleet_shards(mesh)
             trainer = self.trainer
             eval_fn = trainer.eval_logits_raw
             tmap = jax.tree_util.tree_map
-
-            def gather(v):  # local [D_local] per-device scalar → global [D]
-                return v if axis is None else jax.lax.all_gather(
-                    v, axis, tiled=True)
-
-            def local(v):   # global [D, ...] → this shard's [D_local] rows
-                if axis is None:
-                    return v
-                off = jax.lax.axis_index(axis) * D_local
-                return jax.lax.dynamic_slice_in_dim(v, off, D_local, axis=0)
+            # local [D_local] scalar ↔ global [D] and the fleet psum —
+            # identities off-mesh, fog-major 2-D aware on a fog mesh
+            gather, local, fpsum = _fleet_collectives(mesh, D)
 
             def rounds_all(state, images, labels, seed_x, seed_y,
                            val_x, val_y, keys_all, mask_arg, fraction,
-                           step_limits, live_arg, fkeys, frates, gfactor):
+                           step_limits, live_arg, fkeys, frates, gfactor,
+                           group_ids, sync_flags, fog_keys):
                 n_pad = labels.shape[1]
+                if topo_on:
+                    gid_l = local(group_ids)
 
                 def _where_vec(vec_l, on_true, on_false):
                     # leafwise per-device select over stacked [D_local, ...]
@@ -554,8 +645,13 @@ class EdgeEngine:
                         on_true, on_false)
 
                 def one_round(carry, xs):
-                    (params, opt_state, pool, _, residual, pending,
-                     staleness, live) = carry
+                    if topo_on:
+                        (params, opt_state, pool, _, residual, pending,
+                         staleness, live, fog) = carry
+                        *xs, sync_f, fogkey = xs
+                    else:
+                        (params, opt_state, pool, _, residual, pending,
+                         staleness, live) = carry
                     if mask_mode == "bernoulli":
                         keys_r, mask_key, live_row, fkey = xs
                         # same key on every shard → consistent global draw
@@ -614,7 +710,7 @@ class EdgeEngine:
                             lambda cc, _: step(
                                 cc, images_d, labels_d, seed_x, seed_y,
                                 None, None,
-                                steps_d if h_steps else None),
+                                steps_d if use_steps else None),
                             c, None, length=R, unroll=round_unroll)
 
                     (params2, opt2, pool2, rng2), _ = jax.vmap(device_round)(
@@ -712,7 +808,9 @@ class EdgeEngine:
                         finite_g = gather(faults_mod.stacked_finite(sent))
                         reject_g, clip_g, scale_g = faults_mod.guard_verdict(
                             norms_g, finite_g, recv_g, policy=guards_key,
-                            factor=gfactor)
+                            factor=gfactor,
+                            group_ids=group_ids if topo_on else None,
+                            num_groups=G if topo_on else None)
                         accept_g = recv_g * (1.0 - reject_g)
                         if guards_key == "clip":
                             scale_l = local(scale_g)
@@ -729,11 +827,19 @@ class EdgeEngine:
                         # staleness-aware Eq. 1: arrivals weighted by
                         # raw_i · decay(age of their backlog)
                         stale_g = gather(staleness)
-                        w_g = agg_mod.staleness_weights(
-                            raw, stale_g, accept_g, kind=h_decay,
-                            rate=h_rate)
+                        decayed = raw * agg_mod.staleness_decay(
+                            stale_g, kind=h_decay, rate=h_rate)
                     else:
-                        w_g = agg_mod.normalize_weights(raw, accept_g)
+                        decayed = raw
+                    w_g = agg_mod.masked_normalize(decayed, accept_g)
+                    if topo_on:
+                        # both Eq. 1 levels' coefficients: intra-fog alpha
+                        # (per-group normalization of the SAME decayed
+                        # basis) and inter-fog beta (group arrival-mass
+                        # shares, so alpha·beta is the flat weight)
+                        alpha, beta, group_any = topo_mod.two_tier_weights(
+                            decayed, accept_g, group_ids, G)
+                        accept_any = jnp.sum(accept_g) > 0
                     if hetero_on or fault_like:
                         # a zero-accept round aggregates NOTHING: the
                         # no-participant uniform fallback of
@@ -748,15 +854,36 @@ class EdgeEngine:
                         w_g = jnp.where(accept_any, w_g,
                                         jnp.zeros_like(w_g))
 
+                    fog_delta = None
                     if delta_form_always:
                         # delta-form Eq. 1: BASE + Σ αᵢ·uᵢ (exact for
                         # C = identity and no faults because Σα = 1); only
                         # the weighted sum is psum'd
-                        agg = agg_mod.weighted_sum_stacked(sent, local(w_g))
-                        if axis is not None:
-                            agg = jax.lax.psum(agg, axis)
-                        agg = tmap(jnp.add,
-                                   tmap(lambda a: a[0], params_prev), agg)
+                        agg = fpsum(
+                            agg_mod.weighted_sum_stacked(sent, local(w_g)))
+                        if topo_on:
+                            # inter-fog delta form: Σ_g β_g·F_g is the
+                            # sync base (β ≡ 1.0 at G=1, so this is the
+                            # flat BASE bitwise); the flat weighted delta
+                            # sum rides on top unless the fog-tier codec
+                            # compresses the per-group delta sums first
+                            base = topo_mod.group_reduce_stacked(fog, beta)
+                            if fog_compress or fog_local:
+                                fog_delta = fpsum(topo_mod.segment_sum_stacked(
+                                    sent, local(alpha), gid_l, G))
+                            if fog_compress:
+                                fog_qkeys = jax.vmap(
+                                    lambda i: jax.random.fold_in(fogkey, i))(
+                                        jnp.arange(G))
+                                fog_sent = jax.vmap(
+                                    lambda k, d: comms_mod.compress_tree(
+                                        fog_cc, k, d))(fog_qkeys, fog_delta)
+                                agg = topo_mod.group_reduce_stacked(
+                                    fog_sent, beta)
+                            agg = tmap(jnp.add, base, agg)
+                        else:
+                            agg = tmap(jnp.add,
+                                       tmap(lambda a: a[0], params_prev), agg)
                     else:
                         # direct Eq. 1 — and, for buffering hetero rounds,
                         # + Σ αᵢ·pendingᵢ, algebraically identical to the
@@ -764,19 +891,56 @@ class EdgeEngine:
                         # program when nothing is pending, which is what
                         # keeps the zero-straggler equivalence at float
                         # tolerance instead of drifting round over round
+                        # (and makes the topo sync round BITWISE flat:
+                        # alpha·beta telescopes to the flat weights)
                         agg = agg_mod.weighted_sum_stacked(params, local(w_g))
                         if h_buffer:
                             agg = tmap(jnp.add, agg,
                                        agg_mod.weighted_sum_stacked(
                                            pending, local(w_g)))
-                        if axis is not None:
-                            agg = jax.lax.psum(agg, axis)
+                        agg = fpsum(agg)
                     if hetero_on or fault_like:
                         # zero-accept guard: no surviving uploads → the
                         # fog node re-dispatches its previous model
+                        keep = (tmap(lambda a: a[0], fog) if topo_on
+                                else tmap(lambda a: a[0], params_prev))
                         agg = tmap(
                             lambda a, b: jnp.where(accept_any, a, b),
-                            agg, tmap(lambda a: a[0], params_prev))
+                            agg, keep)
+
+                    if topo_on:
+                        # ---- two-tier select: sync rounds broadcast the
+                        # global model to every fog group; fog-local rounds
+                        # advance each group's own model (intra-fog Eq. 1
+                        # only — nothing crosses the fog→cloud tier); a
+                        # group with no accepted arrivals keeps its model
+                        fog_sync = tmap(
+                            lambda a: jnp.broadcast_to(
+                                a[None], (G,) + a.shape), agg)
+                        fog_sync = tmap(
+                            lambda a, b: jnp.where(accept_any, a, b),
+                            fog_sync, fog)
+                        if fog_local:
+                            if delta_form_always:
+                                fog_cand = tmap(jnp.add, fog, fog_delta)
+                            else:
+                                fog_cand = fpsum(topo_mod.segment_sum_stacked(
+                                    params, local(alpha), gid_l, G))
+                                if h_buffer:
+                                    fog_cand = tmap(
+                                        jnp.add, fog_cand,
+                                        fpsum(topo_mod.segment_sum_stacked(
+                                            pending, local(alpha), gid_l, G)))
+                            fog_cand = tmap(
+                                lambda a, b: jnp.where(
+                                    group_any.reshape(
+                                        (-1,) + (1,) * (a.ndim - 1)),
+                                    a, b), fog_cand, fog)
+                            fog = tmap(
+                                lambda a, b: jnp.where(sync_f > 0, a, b),
+                                fog_sync, fog_cand)
+                        else:
+                            fog = fog_sync
                     if h_buffer:
                         # straggler bookkeeping: transmitted backlogs clear
                         # (a DROPPED upload still clears — the device
@@ -796,6 +960,14 @@ class EdgeEngine:
 
                     rec = {"weights": w_g, "upload_mask": mask_g,
                            "n_labeled": counts_g}
+                    if topo_on:
+                        # per-tier telemetry: whether this round crossed
+                        # the fog→cloud link, the inter-fog Eq. 1 weights,
+                        # and per-group accepted-arrival counts
+                        rec["fog_sync"] = (sync_f > 0).astype(jnp.float32)
+                        rec["beta"] = beta
+                        rec["group_accept"] = jax.ops.segment_sum(
+                            accept_g, group_ids, num_segments=G)
                     if churn_on:
                         rec["live"] = live_g
                     if faults_on:
@@ -815,36 +987,71 @@ class EdgeEngine:
                         rec["agg_acc"] = jnp.mean(
                             (preds == val_y).astype(jnp.float32))
 
-                    # ---- re-dispatch: fresh optimizer, pools persist
-                    params = jax.tree_util.tree_map(
-                        lambda a: jnp.broadcast_to(
-                            a[None], (D_local,) + a.shape), agg)
+                    # ---- re-dispatch: fresh optimizer, pools persist.
+                    # With a topology every slot reads its own GROUP's fog
+                    # model (one gather per leaf; after a sync round all
+                    # rows are the global model, matching the flat
+                    # broadcast bitwise)
+                    if topo_on:
+                        params = topo_mod.take_group_rows(fog, gid_l)
+                    else:
+                        params = jax.tree_util.tree_map(
+                            lambda a: jnp.broadcast_to(
+                                a[None], (D_local,) + a.shape), agg)
                     opt_state = trainer.opt.init(params)
-                    return (params, opt_state, pool, rng, residual, pending,
-                            staleness, live), rec
+                    out = (params, opt_state, pool, rng, residual, pending,
+                           staleness, live)
+                    if topo_on:
+                        out = out + (fog,)
+                    return out, rec
 
                 carry = (state.params, state.opt_state, state.pool, state.rng,
                          state.residual, state.pending, state.staleness,
                          state.live)
-                carry, recs = jax.lax.scan(one_round, carry,
-                                           (keys_all, mask_arg, live_arg,
-                                            fkeys))
-                final = jax.tree_util.tree_map(lambda a: a[0], carry[0])
-                return EngineState(*carry), recs, final
+                xs_rows = (keys_all, mask_arg, live_arg, fkeys)
+                if topo_on:
+                    # rebuild the [G, ...] fog models from the dispatched
+                    # rows: one exact representative row per group (first
+                    # slot), recovered shard-agnostically by a one-hot
+                    # segment sum + fleet psum (rows within a group are
+                    # identical by the dispatch protocol, so this also
+                    # covers resuming a run that ended between syncs)
+                    fidx = jax.ops.segment_min(jnp.arange(D), group_ids,
+                                               num_segments=G)
+                    repr_l = local(
+                        jnp.zeros((D,), jnp.float32).at[fidx].set(1.0))
+                    fog0 = fpsum(topo_mod.segment_sum_stacked(
+                        state.params, repr_l, gid_l, G))
+                    carry = carry + (fog0,)
+                    xs_rows = xs_rows + (sync_flags, fog_keys)
+                carry, recs = jax.lax.scan(one_round, carry, xs_rows)
+                if topo_on:
+                    # well-defined single returned model under any mesh:
+                    # the slot-share-weighted fog mix (shares are 1.0 at
+                    # G=1 → bitwise the flat row 0; after a sync round all
+                    # groups are identical so the mix is exact there too)
+                    gfrac = jax.ops.segment_sum(
+                        jnp.ones((D,), jnp.float32), group_ids,
+                        num_segments=G) / D
+                    final = topo_mod.group_reduce_stacked(carry[8], gfrac)
+                else:
+                    final = jax.tree_util.tree_map(lambda a: a[0], carry[0])
+                return EngineState(*carry[:8]), recs, final
 
             if mesh is not None:
-                dev = P(DEVICE_AXIS)
-                keys_spec = P(None, DEVICE_AXIS)
+                dev = _fleet_spec(mesh)
+                keys_spec = _fleet_spec(mesh, None)
                 mask_spec = (P() if mask_mode == "bernoulli"
-                             else P(None, DEVICE_AXIS))
+                             else _fleet_spec(mesh, None))
                 rounds_all = shard_map(
                     rounds_all, mesh=mesh,
-                    # live_arg / fkeys / frates / gfactor are replicated:
-                    # liveness rows and fault draws are global-fleet facts
+                    # live_arg / fkeys / frates / gfactor / group_ids /
+                    # sync_flags / fog_keys are replicated: liveness rows,
+                    # fault draws, and the topology are global-fleet facts
                     # every shard derives identically and slices locally
                     in_specs=(dev, dev, dev, P(), P(), P(), P(),
                               keys_spec, mask_spec, P(), dev,
-                              P(), P(), P(), P()),
+                              P(), P(), P(), P(), P(), P(), P()),
                     # recs and the aggregated model are replicated
                     # (all_gather / psum results), state stays sharded
                     out_specs=(dev, P(), P()), check_rep=False)
@@ -854,14 +1061,14 @@ class EdgeEngine:
 
         key = self._cache_key("rounds_fused", False) + (
             rounds, aggregation, mask_mode, comms_key, hetero_key,
-            faults_key, guards_key, churn_mode)
+            faults_key, guards_key, churn_mode, topo_key)
         return _compiled(key, build)
 
     def run_rounds_fused(self, state: EngineState, rounds: int, *,
                          upload_mask=None, upload_fraction: float = 1.0,
                          aggregation: str = "fedavg_n", start_round: int = 0,
                          comms=None, hetero=None, faults=None, guards=None,
-                         live_mask=None):
+                         live_mask=None, topology=None):
         """T federated rounds (device AL + fog aggregation + re-dispatch) in
         ONE dispatch.
 
@@ -940,6 +1147,22 @@ class EdgeEngine:
         with the current fog model at the next dispatch.  All of it
         composes with ``comms``, ``hetero``, and the mesh, and the round
         stays ONE dispatch.
+
+        ``topology`` (``core.topology.FogTopology``) runs the rounds as a
+        two-tier edge×fog hierarchy: every round each fog group aggregates
+        its OWN slots (intra-fog Eq. 1 — per-group masked normalization,
+        a group with no accepted arrivals keeps its model), and only every
+        ``local_steps``-th round the G fog models aggregate to a global
+        one (inter-fog Eq. 1, β ∝ group arrival mass) and cross the
+        fog→cloud link — per-tier byte accounting in
+        ``core.comms.tier_report``.  ``uniform_topology(D, 1)`` reduces
+        bitwise to the flat program; composes with ``comms`` (plus an
+        optional second ``comms.fog_compression`` codec on the fog→cloud
+        deltas), ``hetero``, ``faults``/``guards`` (guard medians go
+        per-group), and both the 1-D and the 2-D ``("fog", "device")``
+        mesh (``launch.mesh.make_fog_mesh``), still in ONE dispatch.
+        ``aggregation="optimal"`` selects one argmax model, which has no
+        two-level decomposition, and is rejected.
         """
         if aggregation not in _AGGREGATIONS:
             raise ValueError(f"unknown aggregation {aggregation!r}: "
@@ -969,6 +1192,14 @@ class EdgeEngine:
                 "faults.death_rate/birth_rate for the in-trace churn "
                 "process, not both (set the rates to 0 to drive churn "
                 "from the schedule)")
+        if topology is not None:
+            topology.validate_for(self.num_devices)
+            if aggregation == "optimal":
+                raise ValueError(
+                    "aggregation='optimal' picks one argmax model — there "
+                    "is no two-level Eq. 1 decomposition to run per fog "
+                    "group; use average | weighted | fedavg_n with a "
+                    "topology")
         self._check_capacity(state, rounds=rounds)
         D = self.num_devices
         comms_key = None
@@ -1021,6 +1252,19 @@ class EdgeEngine:
             # hetero off: drop any carried buffers so the compiled carry
             # structure matches (mirrors the residual hygiene above)
             state = state._replace(pending=(), staleness=())
+        topo_key = None
+        if topology is not None:
+            # the per-group compute profile composes with (caps) any
+            # hetero step budgets; fog codec choice is static, the rest
+            # of the topology (group ids, cadence flags) rides as traced
+            # arguments so regrouping at equal G reuses the executable
+            step_limits = topo_mod.topology_step_limits(
+                topology, D, self.cfg.train_steps_per_acq,
+                base=step_limits)
+            fog_comp = (getattr(comms, "fog_compression", "none")
+                        if comms is not None else "none")
+            topo_key = (topology.num_groups, int(topology.local_steps),
+                        fog_comp, topology.compute_scale is not None)
         # churn/fault statics.  churn_mode is "process" whenever faults are
         # on (zero birth/death rates leave the fleet fully live), so
         # fault-rate sweeps share one executable.
@@ -1081,24 +1325,41 @@ class EdgeEngine:
                               else 0.0)
         fn = self._get_rounds_fused_jit(rounds, aggregation, mask_mode,
                                         comms_key, hetero_key, faults_key,
-                                        guards_key, churn_mode)
+                                        guards_key, churn_mode, topo_key)
         # the compute profile is a traced [D] argument (profile sweeps reuse
         # the executable); a full-budget fill-in rides along when unused
         sl = jnp.asarray(
             step_limits if step_limits is not None
             else np.full((D,), self.cfg.train_steps_per_acq, np.int32))
+        # topology rides as traced arguments: the [D] group-id vector, the
+        # [rounds] fog→cloud sync flags (absolute-indexed, so chained calls
+        # keep the cadence), and per-round fog-codec keys (own stream,
+        # folded at absolute round indices); inert fill-ins when off
+        if topology is not None:
+            group_ids = jnp.asarray(topology.ids)
+            sync_rows = jnp.asarray(
+                topo_mod.sync_schedule(topology, rounds, start_round))
+            fbase = jax.random.key(self.cfg.seed + 0x666F67)
+            fog_keys = jax.vmap(lambda t: jax.random.fold_in(fbase, t))(
+                jnp.arange(start_round, start_round + rounds))
+        else:
+            group_ids = jnp.zeros((D,), jnp.int32)
+            sync_rows = jnp.ones((rounds,), jnp.float32)
+            fog_keys = jax.random.split(jax.random.key(0), rounds)
         counters.count_dispatch()
         state, recs, final = fn(state, self.images, self.labels,
                                 self.seed_images, self.seed_labels,
                                 self.test_images, self.test_labels,
                                 keys_all, mask_arg, fraction, sl,
-                                live_arg, fkeys, frates, gfactor)
+                                live_arg, fkeys, frates, gfactor,
+                                group_ids, sync_rows, fog_keys)
         return state, recs, final
 
     # -------------------------------------------------- async event loop
     def run_async(self, state: EngineState, events: int, *, async_cfg,
                   aggregation: str = "fedavg_n", comms=None,
-                  start_event: int = 0, faults=None, guards=None):
+                  start_event: int = 0, faults=None, guards=None,
+                  topology=None):
         """Rounds-free FedAsync/FedBuff aggregation: ``events`` quorum- or
         timer-triggered fog aggregation events over a continuous-time
         device latency model, in ONE dispatch — see
@@ -1112,7 +1373,7 @@ class EdgeEngine:
         return run_events_fused(self, state, events, async_cfg=async_cfg,
                                 aggregation=aggregation, comms=comms,
                                 start_event=start_event, faults=faults,
-                                guards=guards)
+                                guards=guards, topology=topology)
 
     # ------------------------------------------------------------ drivers
     def run_round(self, state: EngineState, *, record_curves: bool = True):

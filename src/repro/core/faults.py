@@ -202,19 +202,29 @@ def update_liveness(key, live, death_rate, birth_rate) -> jax.Array:
 
 def liveness_schedule(num_devices: int, rounds: int, *, death_rate: float,
                       birth_rate: float, seed: int = 0,
-                      init=None) -> np.ndarray:
+                      init=None, group_ids=None) -> np.ndarray:
     """Host-side twin of the in-trace churn process: a ``[rounds, D]``
     0/1 float liveness schedule for ``run_rounds_fused(live_mask=...)``
     (same birth/death semantics, its own numpy stream — a *schedule
     source*, not a bit-replay of the traced draw).  ``init`` (``[D]``,
-    default all-live) seeds round 0's transition."""
+    default all-live) seeds round 0's transition.
+
+    ``group_ids`` ([D] ints, e.g. ``FogTopology.ids``) switches to
+    GROUP-correlated churn: one draw per fog group, broadcast to its
+    slots — a fog node going dark takes its whole edge group with it
+    (the failure mode hierarchical fleets actually see).  The engine's
+    per-group zero-accept guard then keeps that fog's model frozen."""
     rng = np.random.default_rng([seed, 0x6C697665])
+    ids = None if group_ids is None else np.asarray(group_ids, np.int64)
+    n_draw = num_devices if ids is None else int(ids.max()) + 1
     live = (np.ones((num_devices,), np.float32) if init is None
             else np.asarray(init, np.float32))
     out = np.zeros((rounds, num_devices), np.float32)
     for t in range(rounds):
-        survive = rng.random(num_devices) >= death_rate
-        join = rng.random(num_devices) < birth_rate
+        survive = rng.random(n_draw) >= death_rate
+        join = rng.random(n_draw) < birth_rate
+        if ids is not None:
+            survive, join = survive[ids], join[ids]
         live = np.where(live > 0, survive, join).astype(np.float32)
         out[t] = live
     return out
@@ -272,7 +282,8 @@ def stacked_finite(tree) -> jax.Array:
     return ok
 
 
-def guard_verdict(norms, finite, mask, *, policy: str, factor):
+def guard_verdict(norms, finite, mask, *, policy: str, factor,
+                  group_ids=None, num_groups: Optional[int] = None):
     """Fog-side guard decision over this round's received uploads.
 
     ``norms`` / ``finite`` are the ``[D]`` upload statistics, ``mask`` the
@@ -283,17 +294,36 @@ def guard_verdict(norms, finite, mask, *, policy: str, factor):
     sum), ``clipped`` uploads (clip policy only) are scaled by ``scale``
     back to the threshold.  Fully traced; the median is computed over the
     masked finite arrivals via an inf-filled sort, so an empty round
-    yields an infinite threshold (no outliers) instead of NaN."""
+    yields an infinite threshold (no outliers) instead of NaN.
+
+    With a fog topology (``group_ids`` [D] + static ``num_groups``) each
+    fog node guards only ITS OWN arrivals: the outlier median is computed
+    per group, so one fog's byzantine burst cannot skew another fog's
+    threshold.  ``num_groups=1`` reproduces the flat verdict exactly
+    (same masked-median over the whole fleet)."""
     if policy not in ("drop", "clip"):
         raise ValueError(f"guard policy must be 'drop' or 'clip' inside "
                          f"the trace, got {policy!r}")
     m = jnp.asarray(mask, jnp.float32)
     valid = (m > 0) & finite & jnp.isfinite(norms)
     d = norms.shape[0]
-    filled = jnp.where(valid, norms, jnp.inf)
-    order = jnp.sort(filled)
-    count = jnp.sum(valid.astype(jnp.int32))
-    med = order[jnp.clip((count - 1) // 2, 0, d - 1)]
+
+    def masked_median(v):
+        filled = jnp.where(v, norms, jnp.inf)
+        order = jnp.sort(filled)
+        count = jnp.sum(v.astype(jnp.int32))
+        return order[jnp.clip((count - 1) // 2, 0, d - 1)]
+
+    if group_ids is None:
+        med = masked_median(valid)
+    else:
+        if num_groups is None:
+            raise ValueError("group_ids requires a static num_groups")
+        ids = jnp.asarray(group_ids, jnp.int32)
+        meds = jax.vmap(
+            lambda g: masked_median(valid & (ids == g)))(
+                jnp.arange(num_groups, dtype=jnp.int32))
+        med = meds[ids]                    # [D]: each slot vs ITS fog's median
     thresh = factor * med
     # a degenerate all-zero median means there is no scale to compare
     # against — disable outlier detection rather than rejecting everything

@@ -337,22 +337,42 @@ def upload_mask_schedule(num_devices: int, upload_fraction: float, seed: int,
     return mask
 
 
+# One reject-list for every in-compile feature (the engines that trace
+# it): the _check_*_engine helpers below all read this table, so a new
+# engine or feature is one row here, not four scattered tuples.
+_FEATURE_ENGINES = {
+    "comms compression": ("fused",),
+    "hetero": ("fused",),
+    "async_cfg": ("async",),
+    "faults": ("fused", "async"),
+    "guards": ("fused", "async"),
+    "topology": ("fused", "async"),
+}
+
+
+def _require_engine(feature: str, engine: str, why: str) -> None:
+    allowed = _FEATURE_ENGINES[feature]
+    if engine not in allowed:
+        names = " or ".join(f"'{e}'" for e in allowed)
+        raise ValueError(f"{feature} requires engine={names} "
+                         f"(got engine={engine!r}); {why}")
+
+
 def _check_comms_engine(comms: Optional[CommsConfig], engine: str) -> None:
     """Lossy upload codecs exist only inside the fused program; accounting
     (compression='none') works on every path."""
-    if comms is not None and comms.compression != "none" and engine != "fused":
-        raise ValueError(
-            f"comms compression={comms.compression!r} requires "
-            f"engine='fused' (got engine={engine!r}); host-side paths "
-            "support byte accounting only")
+    if comms is not None and comms.compression != "none":
+        _require_engine(
+            "comms compression", engine,
+            "host-side paths support byte accounting only")
 
 
 def _check_hetero_engine(hetero: Optional[HeteroConfig], engine: str) -> None:
     """Straggler buffering, staleness counters, and the traced compute
     profile live inside the fused multi-round program only."""
-    if hetero is not None and engine != "fused":
-        raise ValueError(
-            f"hetero rounds require engine='fused' (got engine={engine!r}); "
+    if hetero is not None:
+        _require_engine(
+            "hetero", engine,
             "use run_federated_rounds(..., engine='fused', hetero=...)")
 
 
@@ -362,9 +382,9 @@ def _check_async_engine(async_cfg: Optional[AsyncConfig], engine: str,
     on a round-synchronous engine (or a round-synchronous ``HeteroConfig``
     on the async engine — the latency model IS the straggler model there)
     would silently run the wrong participation dynamics."""
-    if async_cfg is not None and engine != "async":
-        raise ValueError(
-            f"async_cfg requires engine='async' (got engine={engine!r}); "
+    if async_cfg is not None:
+        _require_engine(
+            "async_cfg", engine,
             "use run_federated_rounds(..., engine='async', async_cfg=...)")
     if engine == "async" and hetero is not None:
         raise ValueError(
@@ -378,16 +398,23 @@ def _check_faults_engine(faults: Optional[FaultConfig],
     """Churn, in-trace fault injection, and aggregation-side guards live
     inside the compiled one-dispatch programs only — the host-aggregation
     paths would need a completely separate (and slower) implementation."""
-    if faults is not None and engine not in ("fused", "async"):
-        raise ValueError(
-            f"faults=FaultConfig(...) requires engine='fused' or 'async' "
-            f"(got engine={engine!r}); fault injection is traced into the "
-            "one-dispatch programs")
-    if guards is not None and engine not in ("fused", "async"):
-        raise ValueError(
-            f"guards=GuardConfig(...) requires engine='fused' or 'async' "
-            f"(got engine={engine!r}); aggregation guards are traced into "
-            "the one-dispatch programs")
+    if faults is not None:
+        _require_engine(
+            "faults", engine,
+            "fault injection is traced into the one-dispatch programs")
+    if guards is not None:
+        _require_engine(
+            "guards", engine,
+            "aggregation guards are traced into the one-dispatch programs")
+
+
+def _check_topology_engine(topology, engine: str) -> None:
+    """Two-tier fog aggregation is traced into the one-dispatch programs
+    (segment reductions + the [G, ...] fog carry)."""
+    if topology is not None:
+        _require_engine(
+            "topology", engine,
+            "two-tier aggregation is traced into the one-dispatch programs")
 
 
 def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigits],
@@ -476,7 +503,8 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                          hetero: Optional[HeteroConfig] = None,
                          async_cfg: Optional[AsyncConfig] = None,
                          faults: Optional[FaultConfig] = None,
-                         guards: Optional[GuardConfig] = None):
+                         guards: Optional[GuardConfig] = None,
+                         topology=None):
     """Iterated rounds (paper: "the learning process can be iteratively
     carried out"): each round re-dispatches the aggregated model; devices
     keep their pools (labels accumulate across rounds).
@@ -522,6 +550,14 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
     carries the fault telemetry rows (``live``, ``crashed``, ``dropped``,
     ``corrupted``, ``rejected``, ``clipped``) that the compiled program
     recorded.
+
+    ``topology=FogTopology(...)`` (fused and async engines) runs the
+    two-tier edge×fog hierarchy (``core.topology``): fog groups aggregate
+    their own slots every round/event, the fog→cloud tier syncs only every
+    ``local_steps``-th one, and each report carries per-tier telemetry —
+    ``fog_sync`` / ``beta`` / ``group_accept`` rows plus a byte-exact
+    ``"tiers"`` entry (``comms.tier_report``) splitting edge→fog from
+    fog→cloud traffic.
     """
     if engine not in ("vmap", "legacy", "classic", "fused", "async"):
         raise ValueError(
@@ -531,6 +567,7 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
     _check_async_engine(async_cfg, engine, hetero)
     _check_hetero_engine(hetero, engine)
     _check_faults_engine(faults, guards, engine)
+    _check_topology_engine(topology, engine)
     image_shape = device_data[0].images.shape[1:]
     total_cfg = replace(cfg, acquisitions=cfg.acquisitions * rounds)
     trainer = trainer or Trainer(total_cfg)
@@ -594,7 +631,14 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
         _, recs, params = eng.run_async(
             eng.init_state(params), rounds, async_cfg=async_cfg,
             aggregation=cfg.aggregation, comms=comms,
-            faults=faults, guards=guards)
+            faults=faults, guards=guards, topology=topology)
+        if topology is not None:
+            # run_events_fused returns the [G, ...] fog stack; collapse it
+            # to the slot-share-weighted mix (== flat model at G=1)
+            from repro.core import topology as topo_mod
+            frac = jnp.asarray(topology.group_sizes(), jnp.float32)
+            frac = frac / float(len(device_data))
+            params = topo_mod.group_reduce_stacked(params, frac)
         fault_rows = {k: np.asarray(recs[k]) for k in faults_mod.REPORT_KEYS
                       if k in recs}
         weights = np.asarray(recs["weights"])
@@ -604,6 +648,9 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
         sim_time = np.asarray(recs["sim_time"])
         staleness = np.asarray(recs["staleness"])
         timer_fired = np.asarray(recs["timer_fired"])
+        topo_rows = ({k: np.asarray(recs[k])
+                      for k in ("fog_sync", "beta", "group_accept")}
+                     if topology is not None else {})
         for t in range(rounds):
             uploaded = np.nonzero(mask_out[t])[0]
             reports.append({
@@ -619,12 +666,20 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                     "uploaded_devices": uploaded.tolist(),
                 },
                 "staleness": staleness[t].tolist(),
+                **({"fog_sync": bool(topo_rows["fog_sync"][t]),
+                    "beta": topo_rows["beta"][t].tolist(),
+                    "group_accept": topo_rows["group_accept"][t].tolist()}
+                   if topology is not None else {}),
                 **{k: v[t].tolist() for k, v in fault_rows.items()},
             })
         summary = comms_mod.comms_report(
             comms, params, mask_out, agg_accs=agg_accs,
             n_labeled=recs["n_labeled"], image_shape=image_shape)
         comms_mod.attach_round_comms(reports, summary)
+        if topology is not None:
+            tier_summary = comms_mod.tier_report(comms, params, mask_out,
+                                                 topology)
+            comms_mod.attach_round_tiers(reports, tier_summary)
         return params, reports
 
     if engine == "fused":
@@ -640,9 +695,12 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
         _, recs, params = eng.run_rounds_fused(
             eng.init_state(params), rounds, upload_mask=mask,
             aggregation=cfg.aggregation, comms=comms, hetero=hetero,
-            faults=faults, guards=guards)
+            faults=faults, guards=guards, topology=topology)
         fault_rows = {k: np.asarray(recs[k]) for k in faults_mod.REPORT_KEYS
                       if k in recs}
+        topo_rows = ({k: np.asarray(recs[k])
+                      for k in ("fog_sync", "beta", "group_accept")}
+                     if topology is not None else {})
         weights = np.asarray(recs["weights"])
         mask_out = np.asarray(recs["upload_mask"])
         accs = np.asarray(recs["device_accs"])
@@ -664,12 +722,20 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                 },
                 **({"staleness": staleness[t].tolist()}
                    if staleness is not None else {}),
+                **({"fog_sync": bool(topo_rows["fog_sync"][t]),
+                    "beta": topo_rows["beta"][t].tolist(),
+                    "group_accept": topo_rows["group_accept"][t].tolist()}
+                   if topology is not None else {}),
                 **{k: v[t].tolist() for k, v in fault_rows.items()},
             })
         summary = comms_mod.comms_report(
             comms, params, mask_out, agg_accs=agg_accs,
             n_labeled=recs["n_labeled"], image_shape=image_shape)
         comms_mod.attach_round_comms(reports, summary)
+        if topology is not None:
+            tier_summary = comms_mod.tier_report(comms, params, mask_out,
+                                                 topology)
+            comms_mod.attach_round_tiers(reports, tier_summary)
         return params, reports
 
     # reports carry aggregate metrics only (matching the classic path), so
@@ -708,65 +774,21 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
 MASSIVE_DEVICE_COUNTS = (64, 256, 1024)
 MASSIVE_SAMPLES_PER_DEVICE = 40
 
-
-def massive_config(num_devices: int = 256, *, seed: int = 0,
-                   **overrides) -> FederatedALConfig:
-    """Preset for the massively-distributed regime (D ∈ {64, 256, 1024},
-    ~40 samples/device): small windows, few acquisitions, and size-aware
-    Eq. 1 weighting (``fedavg_n`` — with this many unbalanced tiny shards,
-    uniform averaging measurably over-weights the small ones)."""
-    base = dict(num_devices=num_devices, initial_train=20, acquisitions=2,
-                k_per_acquisition=5, pool_window=32, mc_samples=4,
-                train_steps_per_acq=10, initial_train_steps=20,
-                aggregation="fedavg_n", seed=seed)
-    base.update(overrides)
-    return FederatedALConfig(**base)
-
+# Non-IID shard concentration every scenario except paper/massive uses.
+HETERO_DIRICHLET_ALPHA = 0.5
 
 # Heterogeneous-fleet scenario defaults (scenario="hetero"): non-IID
 # Dirichlet shards plus the Industry-4.0 failure modes — 30% of uploads
 # miss their round (buffered + staleness-decayed, not discarded) and a
 # quarter of the fleet is compute-limited to half the local fit steps.
-HETERO_DIRICHLET_ALPHA = 0.5
 DEFAULT_HETERO = hetero_mod.HeteroConfig(
     straggler_rate=0.3, decay="exp", decay_rate=0.5, buffer_stale=True,
     slow_fraction=0.25, slow_steps_fraction=0.5)
-
-
-def hetero_config(num_devices: int = 64, *, seed: int = 0,
-                  **overrides) -> FederatedALConfig:
-    """Preset for the heterogeneous-fleet regime: the massive-style small
-    per-device budget (the regime where stragglers bite hardest) with
-    size-aware Eq. 1 weighting for ``dirichlet_split``'s non-IID shards.
-    Pair with a ``HeteroConfig`` (``DEFAULT_HETERO`` via
-    ``run_experiment(scenario="hetero")``)."""
-    base = dict(num_devices=num_devices, initial_train=20, acquisitions=2,
-                k_per_acquisition=5, pool_window=32, mc_samples=4,
-                train_steps_per_acq=10, initial_train_steps=20,
-                aggregation="fedavg_n", seed=seed)
-    base.update(overrides)
-    return FederatedALConfig(**base)
-
 
 # Rounds-free async scenario (scenario="async"): same non-IID small-budget
 # fleet as hetero, but the fog node aggregates on a FedBuff quorum / safety
 # timer over a continuous-time latency model instead of a round barrier.
 ASYNC_LATENCY_SKEW = 10.0
-
-
-def async_config(num_devices: int = 64, *, seed: int = 0,
-                 **overrides) -> FederatedALConfig:
-    """Preset ``FederatedALConfig`` for the async event-loop regime — the
-    hetero-style small per-device budget with size-aware ``fedavg_n``
-    weighting.  Pair with an ``AsyncConfig`` (``default_async(D)`` via
-    ``run_experiment(scenario="async")``)."""
-    base = dict(num_devices=num_devices, initial_train=20, acquisitions=2,
-                k_per_acquisition=5, pool_window=32, mc_samples=4,
-                train_steps_per_acq=10, initial_train_steps=20,
-                aggregation="fedavg_n", seed=seed)
-    base.update(overrides)
-    return FederatedALConfig(**base)
-
 
 # Fault-tolerant-fleet scenario defaults (scenario="churn"): the same
 # non-IID small-budget fleet, but devices churn (death 0.1 / birth 0.4 per
@@ -781,21 +803,70 @@ DEFAULT_FAULTS = faults_mod.FaultConfig(
     label_noise_rate=0.05)
 DEFAULT_GUARDS = faults_mod.GuardConfig(policy="drop", norm_factor=8.0)
 
+# Hierarchical fog scenario defaults (scenario="fog"): the non-IID
+# small-budget fleet partitioned into fog groups that sync to the cloud
+# only every DEFAULT_FOG_LOCAL_STEPS-th round — the cross-tier bandwidth
+# saving benchmarks/bench_topology.py gates on.
+DEFAULT_FOG_LOCAL_STEPS = 4
 
-def churn_config(num_devices: int = 64, *, seed: int = 0,
-                 **overrides) -> FederatedALConfig:
-    """Preset for the fault-tolerant-fleet regime: the hetero-style small
-    per-device budget (churn bites hardest when every device's labels are
-    scarce) with size-aware ``fedavg_n`` weighting over whatever subset of
-    the fleet is alive AND accepted each round.  Pair with a
-    ``FaultConfig``/``GuardConfig`` (``DEFAULT_FAULTS``/``DEFAULT_GUARDS``
-    via ``run_experiment(scenario="churn")``)."""
+
+def _small_budget_config(num_devices: int, seed: int,
+                         overrides) -> FederatedALConfig:
+    """The shared small-per-device-budget preset every scenario uses
+    (~40 samples/device: small windows, few acquisitions, size-aware
+    ``fedavg_n`` Eq. 1 weighting — with many unbalanced tiny shards,
+    uniform averaging measurably over-weights the small ones)."""
     base = dict(num_devices=num_devices, initial_train=20, acquisitions=2,
                 k_per_acquisition=5, pool_window=32, mc_samples=4,
                 train_steps_per_acq=10, initial_train_steps=20,
                 aggregation="fedavg_n", seed=seed)
     base.update(overrides)
     return FederatedALConfig(**base)
+
+
+def massive_config(num_devices: int = 256, *, seed: int = 0,
+                   **overrides) -> FederatedALConfig:
+    """Preset for the massively-distributed regime (D ∈ {64, 256, 1024},
+    ~40 samples/device) — the shared small-budget preset on uniform IID
+    shards."""
+    return _small_budget_config(num_devices, seed, overrides)
+
+
+def hetero_config(num_devices: int = 64, *, seed: int = 0,
+                  **overrides) -> FederatedALConfig:
+    """Preset for the heterogeneous-fleet regime (the small budget is where
+    stragglers bite hardest; ``dirichlet_split`` non-IID shards).  Pair
+    with a ``HeteroConfig`` (``DEFAULT_HETERO`` via
+    ``run_experiment(scenario="hetero")``)."""
+    return _small_budget_config(num_devices, seed, overrides)
+
+
+def async_config(num_devices: int = 64, *, seed: int = 0,
+                 **overrides) -> FederatedALConfig:
+    """Preset ``FederatedALConfig`` for the async event-loop regime.  Pair
+    with an ``AsyncConfig`` (``default_async(D)`` via
+    ``run_experiment(scenario="async")``)."""
+    return _small_budget_config(num_devices, seed, overrides)
+
+
+def churn_config(num_devices: int = 64, *, seed: int = 0,
+                 **overrides) -> FederatedALConfig:
+    """Preset for the fault-tolerant-fleet regime (churn bites hardest when
+    every device's labels are scarce; Eq. 1 weights cover whatever subset
+    is alive AND accepted each round).  Pair with a ``FaultConfig``/
+    ``GuardConfig`` (``DEFAULT_FAULTS``/``DEFAULT_GUARDS`` via
+    ``run_experiment(scenario="churn")``)."""
+    return _small_budget_config(num_devices, seed, overrides)
+
+
+def fog_config(num_devices: int = 64, *, seed: int = 0,
+               **overrides) -> FederatedALConfig:
+    """Preset for the hierarchical fog-topology regime — the shared
+    small-budget fleet partitioned into fog groups (``default_topology``)
+    with two-tier Eq. 1 aggregation.  Pair with a
+    ``core.topology.FogTopology`` (via ``run_experiment(scenario="fog")``
+    or ``run_federated_rounds(topology=...)``)."""
+    return _small_budget_config(num_devices, seed, overrides)
 
 
 def default_async(num_devices: int) -> AsyncConfig:
@@ -810,6 +881,68 @@ def default_async(num_devices: int) -> AsyncConfig:
                        decay="poly", decay_rate=0.5)
 
 
+def default_topology(num_devices: int, num_groups: Optional[int] = None):
+    """Scenario-default ``FogTopology``: balanced contiguous groups (G =
+    D/16 clamped to [2, 16] unless given) syncing to the cloud every
+    ``DEFAULT_FOG_LOCAL_STEPS``-th round."""
+    from repro.core.topology import uniform_topology
+
+    if num_groups is None:
+        num_groups = max(2, min(16, num_devices // 16))
+    num_groups = min(num_groups, num_devices)
+    return uniform_topology(num_devices, num_groups,
+                            local_steps=DEFAULT_FOG_LOCAL_STEPS)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One registered experiment regime: its preset maker, data split,
+    native engine, and the dynamics configs it turns on by default.
+
+    ``config`` builds the scenario's ``FederatedALConfig`` preset
+    (``None`` = the caller must pass an explicit ``cfg``); ``split`` is
+    ``"uniform"`` (``federated_split``) or ``"dirichlet"`` (non-IID,
+    ``HETERO_DIRICHLET_ALPHA``); ``engine`` the native engine an explicit
+    ``engine=`` overrides; ``dynamics(cfg)`` the default
+    hetero/async/faults/guards/topology kwargs ``run_experiment`` fills in
+    when the caller left them None."""
+
+    description: str
+    split: str
+    engine: str
+    config: Optional[Callable[..., FederatedALConfig]] = None
+    dynamics: Callable[[FederatedALConfig], Dict[str, object]] = \
+        lambda cfg: {}
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    "paper": Scenario(
+        description="paper Algorithm 1 on uniform shards (explicit cfg)",
+        split="uniform", engine="vmap"),
+    "massive": Scenario(
+        description="massively-distributed fleet, aggregation in-compile",
+        split="uniform", engine="fused", config=massive_config),
+    "hetero": Scenario(
+        description="straggler/staleness-aware heterogeneous fleet",
+        split="dirichlet", engine="fused", config=hetero_config,
+        dynamics=lambda cfg: {"hetero": DEFAULT_HETERO}),
+    "async": Scenario(
+        description="rounds-free FedAsync/FedBuff event loop",
+        split="dirichlet", engine="async", config=async_config,
+        dynamics=lambda cfg: {"async_cfg": default_async(cfg.num_devices)}),
+    "churn": Scenario(
+        description="device churn + fault injection + aggregation guards",
+        split="dirichlet", engine="fused", config=churn_config,
+        dynamics=lambda cfg: {"faults": DEFAULT_FAULTS,
+                              "guards": DEFAULT_GUARDS}),
+    "fog": Scenario(
+        description="hierarchical two-tier edge×fog aggregation",
+        split="dirichlet", engine="fused", config=fog_config,
+        dynamics=lambda cfg: {
+            "topology": default_topology(cfg.num_devices)}),
+}
+
+
 def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
                    n_train: int = 4000, n_test: int = 1000, repeats: int = 1,
                    scenario: Optional[str] = None, num_devices: int = 256,
@@ -818,7 +951,8 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
                    hetero: Optional[HeteroConfig] = None,
                    async_cfg: Optional[AsyncConfig] = None,
                    faults: Optional[FaultConfig] = None,
-                   guards: Optional[GuardConfig] = None):
+                   guards: Optional[GuardConfig] = None,
+                   topology=None):
     """End-to-end experiment harness (used by benchmarks + examples).
 
     Units and defaults: ``n_train`` / ``n_test`` are sample counts
@@ -861,6 +995,20 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     repeat then carries a ``"faults"`` telemetry entry (live fractions,
     crash/drop/corrupt/reject/clip totals).
 
+    ``scenario="fog"`` is the hierarchical regime: the same non-IID
+    ``dirichlet_split`` fleet on the fused engine, aggregated through a
+    two-tier edge→fog→cloud ``FogTopology``
+    (``default_topology(num_devices)`` — balanced groups, cloud sync
+    every ``DEFAULT_FOG_LOCAL_STEPS``-th round — unless an explicit
+    ``topology=FogTopology(...)`` is passed).  Each repeat then carries a
+    ``"tiers"`` telemetry entry with per-tier byte totals and the
+    ``cross_tier_reduction`` headline (edge→fog bytes that did NOT cross
+    to the cloud, the hierarchy's bandwidth win).
+
+    All scenario names live in the ``SCENARIOS`` registry (one entry per
+    regime: preset maker, data split, native engine, default dynamics);
+    an unknown name raises ``ValueError`` listing the valid ones.
+
     Every repeat emits a comms telemetry dict (bytes/round, cumulative MB,
     compression ratio, accuracy-vs-bytes trajectory): multi-round repeats
     return ``{"rounds": [...], "comms": telemetry}``, single-round repeats
@@ -871,29 +1019,32 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     from repro.data.digits import make_digit_dataset
     from repro.data.federated_split import dirichlet_split, federated_split
 
-    if scenario in ("massive", "hetero", "async", "churn"):
-        maker = {"massive": massive_config, "hetero": hetero_config,
-                 "async": async_config, "churn": churn_config}[scenario]
-        cfg = maker(num_devices) if cfg is None else cfg
-        n_train = MASSIVE_SAMPLES_PER_DEVICE * cfg.num_devices
+    scn = None
+    if scenario is not None:
+        if scenario not in SCENARIOS:
+            raise ValueError(
+                f"unknown scenario {scenario!r}: use "
+                + " | ".join(SCENARIOS))
+        scn = SCENARIOS[scenario]
+        if scn.config is not None:
+            cfg = scn.config(num_devices) if cfg is None else cfg
+            n_train = MASSIVE_SAMPLES_PER_DEVICE * cfg.num_devices
         if engine is None:
-            engine = "async" if scenario == "async" else "fused"
-        if scenario == "hetero" and hetero is None:
-            hetero = DEFAULT_HETERO
-        if scenario == "async" and async_cfg is None:
-            async_cfg = default_async(cfg.num_devices)
-        if scenario == "churn":
-            if faults is None:
-                faults = DEFAULT_FAULTS
-            if guards is None:
-                guards = DEFAULT_GUARDS
-    elif scenario not in (None, "paper"):
-        raise ValueError(
-            f"unknown scenario {scenario!r}: "
-            "use paper | massive | hetero | async | churn")
+            engine = scn.engine
     if cfg is None:
-        raise ValueError(
-            "pass cfg or scenario='massive'/'hetero'/'async'/'churn'")
+        presets = " | ".join(k for k, s in SCENARIOS.items()
+                             if s.config is not None)
+        raise ValueError(f"pass cfg or a preset scenario ({presets})")
+    if scn is not None:
+        # scenario-native dynamics fill in ONLY what the caller left None
+        defaults = scn.dynamics(cfg)
+        hetero = hetero if hetero is not None else defaults.get("hetero")
+        async_cfg = (async_cfg if async_cfg is not None
+                     else defaults.get("async_cfg"))
+        faults = faults if faults is not None else defaults.get("faults")
+        guards = guards if guards is not None else defaults.get("guards")
+        topology = (topology if topology is not None
+                    else defaults.get("topology"))
     engine = "vmap" if engine is None else engine
 
     reports = []
@@ -902,7 +1053,7 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
         full = make_digit_dataset(n_train, seed=seed)
         test = make_digit_dataset(n_test, seed=seed + 5)
         seed_set = make_digit_dataset(cfg.initial_train, seed=seed + 11)
-        if scenario in ("hetero", "async", "churn"):
+        if scn is not None and scn.split == "dirichlet":
             shards = dirichlet_split(full, cfg.num_devices,
                                      alpha=HETERO_DIRICHLET_ALPHA, seed=seed)
         else:
@@ -912,7 +1063,8 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
             _, round_reports = run_federated_rounds(
                 cfg_rep, shards, seed_set, test, rounds=rounds,
                 engine=engine, mesh=mesh, comms=comms, hetero=hetero,
-                async_cfg=async_cfg, faults=faults, guards=guards)
+                async_cfg=async_cfg, faults=faults, guards=guards,
+                topology=topology)
             rep_report = {
                 "rounds": round_reports,
                 "comms": comms_mod.experiment_telemetry(round_reports),
@@ -926,8 +1078,11 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
             if faults is not None or guards is not None:
                 rep_report["faults"] = faults_mod.report_summary(
                     round_reports)
+            if topology is not None:
+                rep_report["tiers"] = comms_mod.tier_telemetry(round_reports)
         else:
             _check_faults_engine(faults, guards, engine)
+            _check_topology_engine(topology, engine)
             trainer = Trainer(cfg_rep)
             _, rep_report = run_federated_round(cfg_rep, shards, seed_set,
                                                 test, trainer=trainer,

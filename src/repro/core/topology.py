@@ -1,0 +1,248 @@
+"""Hierarchical fog topology: two-tier edge×fog aggregation (paper §II).
+
+The paper's architecture is cloud → fog → edge: fog nodes aggregate their
+own edge group before anything moves upward ("Fog enabled distributed
+training architecture for federated learning", Kumar & Srirama 2024, and
+the per-fog latency/uplink profiles of "Federated Fog Computing for Remote
+Industry 4.0 Applications" motivate the tiering).  Until this module the
+engine modeled a single implicit fog node over a flat [D] device axis —
+every scenario was secretly single-fog.
+
+``FogTopology`` makes the fog tier a first-class STATIC config:
+
+* ``group_ids`` — a [D] vector assigning every device slot to one of G fog
+  groups.  Static (it shapes the compiled program's segment reductions),
+  host-validated against the engine's fleet size.
+* ``local_steps`` — the per-tier aggregation cadence: fog groups aggregate
+  their own slots every round (intra-fog Eq. 1); the fog models cross the
+  fog→cloud link only every ``local_steps``-th round (inter-fog Eq. 1).
+  Between sync rounds NO bytes cross the upper tier — the ≥3x cross-tier
+  uplink saving ``benchmarks/bench_topology.py`` gates on.
+* per-fog profiles — ``latency_scale`` (async event-loop latency
+  multiplier per group), ``compute_scale`` (fraction of the local fit
+  steps a group's slots get, composing with ``core.hetero`` step limits),
+  ``uplink_scale`` (relative per-byte uplink cost, accounting only).
+
+Two-tier Eq. 1 (both levels reuse ``aggregation.masked_normalize``):
+
+    intra-fog:  F_g ← Σ_{i∈g} α_i W_i,   α = masked_normalize(w·accept | g)
+    inter-fog:  W   ← Σ_g   β_g F_g,     β = masked_normalize(Σ_{i∈g} w·accept)
+
+Because β_g is each group's share of the TOTAL arrival weight mass,
+α_i·β_{g(i)} equals the flat normalized weight — so a sync round's global
+model is the flat engine's model, and ``G=1`` (where β ≡ 1.0 exactly:
+x/max(x, 1e-30) == 1.0 in IEEE for x ≥ 1e-30) reduces bitwise to today's
+flat program.  ``tests/test_topology.py`` enforces the equivalence at 1e-5
+under vmap AND the 2-D ("fog", "device") mesh (``launch.mesh.make_fog_mesh``).
+
+Groups are decoupled from mesh shards: segment reductions produce [G, ...]
+partials per shard which psum over BOTH mesh axes, so any group layout
+runs on any mesh factorization.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .aggregation import masked_normalize
+
+
+@dataclass(frozen=True)
+class FogTopology:
+    """Static two-tier fleet layout: G fog groups over the [D] device axis.
+
+    ``group_ids``
+        tuple of D ints in ``[0, num_groups)`` — device slot i reports to
+        fog group ``group_ids[i]``.  Length is validated against the
+        engine's fleet size (``validate_for``); a mismatch raises.
+    ``num_groups``
+        int G ≥ 1.  Every group must own at least one slot.
+    ``local_steps``
+        int ≥ 1 (default 1).  Fog→cloud sync cadence: round t crosses the
+        upper tier iff ``(t+1) % local_steps == 0`` (absolute round index,
+        so checkpoint/resume replays the same cadence).  1 = every round
+        syncs (the flat-equivalent cadence).
+    ``latency_scale`` / ``compute_scale`` / ``uplink_scale``
+        optional per-group profiles, each a tuple of G positive floats.
+        ``latency_scale`` multiplies the async engine's per-device latency
+        means; ``compute_scale`` caps a group's local fit steps to that
+        fraction (composes with ``hetero.device_step_limits`` by taking
+        the elementwise min); ``uplink_scale`` weights the edge→fog byte
+        accounting in ``comms.tier_report`` (accounting only — it does
+        not enter the compiled program).
+    """
+
+    group_ids: Tuple[int, ...]
+    num_groups: int
+    local_steps: int = 1
+    latency_scale: Optional[Tuple[float, ...]] = None
+    compute_scale: Optional[Tuple[float, ...]] = None
+    uplink_scale: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.num_groups < 1:
+            raise ValueError(f"num_groups must be >= 1, got {self.num_groups}")
+        if self.local_steps < 1:
+            raise ValueError(
+                f"local_steps must be >= 1, got {self.local_steps}")
+        ids = np.asarray(self.group_ids, np.int64)
+        if ids.size == 0:
+            raise ValueError("group_ids must be non-empty")
+        if ids.min() < 0 or ids.max() >= self.num_groups:
+            raise ValueError(
+                f"group_ids must lie in [0, {self.num_groups}), got range "
+                f"[{ids.min()}, {ids.max()}]")
+        present = np.unique(ids)
+        if present.size != self.num_groups:
+            missing = sorted(set(range(self.num_groups)) - set(present.tolist()))
+            raise ValueError(f"every fog group needs at least one device "
+                             f"slot; empty groups: {missing}")
+        for name in ("latency_scale", "compute_scale", "uplink_scale"):
+            prof = getattr(self, name)
+            if prof is None:
+                continue
+            if len(prof) != self.num_groups:
+                raise ValueError(f"{name} must have one entry per fog group "
+                                 f"({self.num_groups}), got {len(prof)}")
+            if min(prof) <= 0.0:
+                raise ValueError(f"{name} entries must be > 0, got {prof}")
+
+    def validate_for(self, num_devices: int) -> None:
+        """Raise cleanly when the group-id vector does not cover the fleet."""
+        if len(self.group_ids) != num_devices:
+            raise ValueError(
+                f"topology group_ids has length {len(self.group_ids)} but "
+                f"the fleet has {num_devices} device slots")
+
+    @property
+    def ids(self) -> np.ndarray:
+        return np.asarray(self.group_ids, np.int32)
+
+    def group_sizes(self) -> np.ndarray:
+        """[G] slot count per fog group."""
+        return np.bincount(self.ids, minlength=self.num_groups).astype(
+            np.int32)
+
+
+def uniform_topology(num_devices: int, num_groups: int,
+                     **kwargs) -> FogTopology:
+    """Balanced contiguous grouping: slot i → group ``i·G // D`` (block
+    layout, group sizes differ by at most one).  The standard way to build
+    a topology; ``uniform_topology(D, 1)`` is the flat-equivalent layout."""
+    ids = (np.arange(num_devices, dtype=np.int64) * num_groups) // max(
+        num_devices, 1)
+    return FogTopology(group_ids=tuple(int(i) for i in ids),
+                       num_groups=num_groups, **kwargs)
+
+
+def sync_schedule(topo: FogTopology, rounds: int,
+                  start_round: int = 0) -> np.ndarray:
+    """[rounds] float32 sync flags: 1.0 where the round crosses the
+    fog→cloud tier.  Absolute-indexed from ``start_round`` so chained /
+    resumed runs replay the cadence the uninterrupted run would have."""
+    t = start_round + np.arange(rounds, dtype=np.int64)
+    return ((t + 1) % topo.local_steps == 0).astype(np.float32)
+
+
+def group_representatives(topo: FogTopology) -> np.ndarray:
+    """[D] float32 one-hot-per-group selector: 1.0 at the FIRST slot of
+    each group.  Segment-summing ``repr·params`` recovers one exact
+    representative row per group — how the engines rebuild the [G, ...]
+    fog models from dispatched per-device rows at run entry (rows within
+    a group are identical by the dispatch protocol)."""
+    ids = topo.ids
+    first = np.zeros(ids.shape[0], np.float32)
+    _, first_idx = np.unique(ids, return_index=True)
+    first[first_idx] = 1.0
+    return first
+
+
+def topology_step_limits(topo: FogTopology, num_devices: int,
+                         train_steps: int,
+                         base: Optional[np.ndarray] = None
+                         ) -> Optional[np.ndarray]:
+    """Per-device step budgets [D] int32 from the per-group compute
+    profile, composed with an existing hetero profile ``base`` by
+    elementwise min (a fog group's compute ceiling caps its slots).
+    Host-side numpy; enters the program as a traced [D] argument."""
+    if topo.compute_scale is None:
+        return base
+    scale = np.asarray(topo.compute_scale, np.float64)[topo.ids]
+    limits = np.clip(np.round(scale * train_steps), 1,
+                     train_steps).astype(np.int32)
+    if base is not None:
+        limits = np.minimum(limits, np.asarray(base, np.int32))
+    return limits
+
+
+def topology_latency_means(topo: FogTopology,
+                           means: np.ndarray) -> np.ndarray:
+    """Apply the per-fog latency profile to per-device latency means [D]
+    (async engine): a group behind a slow uplink is uniformly slower."""
+    if topo.latency_scale is None:
+        return np.asarray(means, np.float32)
+    scale = np.asarray(topo.latency_scale, np.float32)[topo.ids]
+    return np.asarray(means, np.float32) * scale
+
+
+# ------------------------------------------------------------- traced helpers
+def segment_sum_stacked(stacked, coeff, ids, num_groups: int):
+    """Per-group Σ_{i∈g} coeff_i · leaf[i] over the leading [D_local] axis:
+    the intra-fog Eq. 1 reduction.  Returns a [G, ...] pytree of LOCAL
+    partials — under shard_map the caller psums them over every fleet mesh
+    axis (group-local psum + fog-axis psum), which is exact because groups
+    are decoupled from shards."""
+
+    def red(leaf):
+        cb = coeff.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jax.ops.segment_sum(cb * leaf.astype(jnp.float32), ids,
+                                   num_segments=num_groups).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(red, stacked)
+
+
+def group_reduce_stacked(fog_stacked, beta):
+    """Inter-fog Eq. 1: Σ_g β_g · F_g over the leading [G, ...] axis."""
+
+    def red(leaf):
+        bb = beta.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(bb * leaf.astype(jnp.float32), axis=0).astype(
+            leaf.dtype)
+
+    return jax.tree_util.tree_map(red, fog_stacked)
+
+
+def take_group_rows(fog_stacked, ids):
+    """Dispatch: device slot i reads its fog group's model — [G, ...] →
+    [D_local, ...] via one gather per leaf (rows of a group identical by
+    construction, so a post-sync take equals the flat broadcast bitwise)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.take(leaf, ids, axis=0), fog_stacked)
+
+
+def two_tier_weights(raw_decayed, accept, ids, num_groups: int):
+    """Both Eq. 1 levels' coefficients from one global weight vector.
+
+    ``raw_decayed`` [D] is the flat weight basis (already staleness-decayed
+    when hetero is on), ``accept`` [D] the arrival/guard mask.  Returns
+
+    * ``alpha`` [D]: intra-fog coefficients, Σ_{i∈g} α_i = 1 per group
+      (per-segment zero-sum→uniform guard in ``masked_normalize``);
+    * ``beta`` [G]: inter-fog coefficients ∝ each group's total arrival
+      mass, so α_i·β_{g(i)} is the flat normalized weight;
+    * ``group_any`` [G] bool: whether the group saw ANY accepted arrival —
+      a silent group keeps its previous fog model (a dead fog group is all
+      its slots dark).
+    """
+    w = jnp.asarray(raw_decayed, jnp.float32)
+    a = jnp.asarray(accept, jnp.float32)
+    alpha = masked_normalize(w, a, segment_ids=ids, num_segments=num_groups)
+    mass = jax.ops.segment_sum(w * a, ids, num_segments=num_groups)
+    group_any = jax.ops.segment_sum(a, ids, num_segments=num_groups) > 0
+    beta = masked_normalize(mass, group_any.astype(jnp.float32))
+    return alpha, beta, group_any

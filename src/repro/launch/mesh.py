@@ -94,6 +94,13 @@ def make_debug_mesh(devices: int | None = None):
 # Mesh axis name the edge engine shards its fleet over.
 DEVICE_AXIS = "device"
 
+# Second fleet mesh axis for the hierarchical fog tier (core.topology):
+# a 2-D ("fog", "device") mesh shards the [D] slot axis fog-major, so a
+# fog shard holds whole contiguous blocks of slots and the two-tier
+# aggregation runs as a group-local psum over DEVICE_AXIS followed by a
+# fog-axis psum over FOG_AXIS.
+FOG_AXIS = "fog"
+
 
 def make_device_mesh(shards: int | None = None):
     """1-D mesh for the federated fleet's device axis (``EdgeEngine(mesh=...)``).
@@ -107,6 +114,33 @@ def make_device_mesh(shards: int | None = None):
     """
     n = shards or len(jax.devices())
     return jax.make_mesh((n,), (DEVICE_AXIS,))
+
+
+def make_fog_mesh(fog_shards: int | None = None,
+                  device_shards: int | None = None):
+    """2-D ``("fog", "device")`` mesh for hierarchical fleets.
+
+    The engine's ``[D, ...]`` stacked state shards its leading axis over
+    BOTH axes (``P((FOG_AXIS, DEVICE_AXIS))``, fog-major): global slot
+    ``(f·device_shards + d)·D_local + k`` lives on mesh coordinate
+    ``(f, d)``.  Fog groups (``core.topology.FogTopology``) are decoupled
+    from the mesh factorization — segment reductions psum over both axes —
+    but aligning groups with fog shards keeps intra-fog traffic on the
+    faster axis.  Defaults: ``fog_shards × device_shards`` covering every
+    visible device, fog-major (validated on CI-sized fake multi-host
+    meshes via ``--xla_force_host_platform_device_count``).
+    """
+    n = len(jax.devices())
+    if fog_shards is None:
+        fog_shards = n // (device_shards or 1) if device_shards else n
+        device_shards = device_shards or 1
+    elif device_shards is None:
+        device_shards = n // fog_shards
+    if fog_shards < 1 or device_shards < 1:
+        raise ValueError(f"mesh shape ({fog_shards}, {device_shards}) "
+                         f"must be positive")
+    return jax.make_mesh((fog_shards, device_shards),
+                         (FOG_AXIS, DEVICE_AXIS))
 
 
 def batch_axes(mesh) -> tuple:

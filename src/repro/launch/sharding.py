@@ -114,11 +114,24 @@ def param_shardings(mesh, params_or_shapes):
 
 
 # ----------------------------------------------------- federated device axis
-def device_axis_spec() -> P:
+def fleet_axes(mesh=None) -> tuple:
+    """Mesh axis names the fleet's leading [D] slot axis shards over,
+    fog-major: ``("fog", "device")`` on a 2-D hierarchical mesh
+    (``launch.mesh.make_fog_mesh``), ``("device",)`` on the classic 1-D
+    mesh, and the 1-D default when no mesh is given."""
+    from repro.launch.mesh import DEVICE_AXIS, FOG_AXIS
+    if mesh is None:
+        return (DEVICE_AXIS,)
+    return tuple(a for a in (FOG_AXIS, DEVICE_AXIS) if a in mesh.axis_names)
+
+
+def device_axis_spec(mesh=None) -> P:
     """Partial spec sharding a leading ``[D, ...]`` device axis over the
-    fleet mesh (``launch.mesh.make_device_mesh``); trailing dims replicate."""
-    from repro.launch.mesh import DEVICE_AXIS
-    return P(DEVICE_AXIS)
+    fleet mesh; trailing dims replicate.  With a 2-D ``("fog", "device")``
+    mesh the leading dim shards over BOTH axes (fog-major), matching the
+    engine's global slot ordering."""
+    axes = fleet_axes(mesh)
+    return P(axes if len(axes) > 1 else axes[0])
 
 
 def shard_engine_state(mesh, state):
@@ -135,8 +148,9 @@ def shard_engine_state(mesh, state):
     them from the same absolute-round key and slices its local rows, so no
     extra collective is needed.  Rank-0 leaves (none today, but cheap
     future-proofing) replicate instead of taking the device-axis spec they
-    cannot carry."""
-    dev = NamedSharding(mesh, device_axis_spec())
+    cannot carry.  On a 2-D ``("fog", "device")`` mesh the leading axis
+    splits over both fleet axes fog-major (``device_axis_spec(mesh)``)."""
+    dev = NamedSharding(mesh, device_axis_spec(mesh))
     rep = NamedSharding(mesh, P())
     return jax.tree_util.tree_map(
         lambda a: jax.device_put(a, dev if getattr(a, "ndim", 0) else rep),

@@ -1,0 +1,484 @@
+"""Hierarchical fog topology (core.topology): the tentpole's contracts.
+
+* ``G=1`` reduces to flat federation ≤ 1e-5 — under vmap and under the
+  2-D ``("fog", "device")`` mesh, on the synchronous fused engine AND the
+  async event loop, plain and composed with an int8 comms codec + hetero
+  straggler backlog + churn/guards;
+* the two-tier run stays ONE compiled dispatch;
+* ``two_tier_weights`` telescopes: α_i·β_{g(i)} is the flat Eq. 1 weight;
+* ``masked_normalize`` guards every zero-sum/empty segment in one place;
+* per-group guard medians localize a byzantine burst to its own fog;
+* ``comms.tier_report`` byte math and the ``SCENARIOS`` registry behave;
+* ``launch.sharding.shard_engine_state`` places every ``EngineState``
+  field (including the empty-``()`` defaults) on a 2-D fog mesh.
+"""
+import os
+import subprocess
+import sys
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comms as comms_mod
+from repro.core import counters
+from repro.core import topology as topo_mod
+from repro.core.aggregation import masked_normalize
+from repro.core.async_engine import AsyncConfig
+from repro.core.comms import CommsConfig
+from repro.core.engine import EdgeEngine, EngineState
+from repro.core.faults import FaultConfig, GuardConfig, guard_verdict
+from repro.core.federated import (SCENARIOS, FederatedALConfig, Trainer,
+                                  default_topology, fog_config,
+                                  run_experiment, run_federated_rounds)
+from repro.core.hetero import HeteroConfig
+from repro.core.topology import (FogTopology, sync_schedule,
+                                 two_tier_weights, uniform_topology)
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.launch.mesh import make_fog_mesh
+from repro.launch.sharding import (device_axis_spec, fleet_axes,
+                                   shard_engine_state)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROUNDS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = FederatedALConfig(num_devices=8, acquisitions=1, mc_samples=2,
+                            k_per_acquisition=2, pool_window=8,
+                            train_steps_per_acq=2, initial_train=6,
+                            initial_train_steps=3, seed=11)
+    full = make_digit_dataset(128, seed=1)
+    test = make_digit_dataset(32, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def _engine(cfg, shards, seed_set, test, *, rounds=ROUNDS, mesh=None):
+    total = cfg.acquisitions * rounds
+    trainer = Trainer(replace(cfg, acquisitions=total))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total, mesh=mesh)
+    params0 = trainer.init_params(jax.random.key(0))
+    return eng, params0
+
+
+def _leaves_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+# ------------------------------------------------------- topology config
+def test_fog_topology_validates():
+    with pytest.raises(ValueError, match="num_groups"):
+        FogTopology(group_ids=(0,), num_groups=0)
+    with pytest.raises(ValueError, match="local_steps"):
+        FogTopology(group_ids=(0,), num_groups=1, local_steps=0)
+    with pytest.raises(ValueError, match="lie in"):
+        FogTopology(group_ids=(0, 2), num_groups=2)
+    with pytest.raises(ValueError, match="empty groups"):
+        FogTopology(group_ids=(0, 0), num_groups=2)
+    with pytest.raises(ValueError, match="one entry per fog group"):
+        FogTopology(group_ids=(0, 1), num_groups=2, latency_scale=(1.0,))
+    with pytest.raises(ValueError, match="> 0"):
+        FogTopology(group_ids=(0, 1), num_groups=2, compute_scale=(1.0, 0.0))
+    topo = FogTopology(group_ids=(0, 1, 1), num_groups=2)
+    with pytest.raises(ValueError, match="length 3 .* 4 device slots"):
+        topo.validate_for(4)
+
+
+def test_uniform_topology_balanced():
+    topo = uniform_topology(10, 3, local_steps=2)
+    sizes = topo.group_sizes()
+    assert sizes.sum() == 10 and sizes.max() - sizes.min() <= 1
+    # contiguous block layout
+    assert (np.diff(topo.ids) >= 0).all()
+    assert uniform_topology(6, 1).num_groups == 1
+
+
+def test_sync_schedule_absolute_indexing():
+    topo = uniform_topology(4, 2, local_steps=3)
+    full = sync_schedule(topo, 9)
+    np.testing.assert_array_equal(full,
+                                  [0, 0, 1, 0, 0, 1, 0, 0, 1])
+    # a resumed run replays the tail of the uninterrupted cadence
+    np.testing.assert_array_equal(sync_schedule(topo, 5, start_round=4),
+                                  full[4:])
+
+
+def test_default_topology_clamps():
+    topo = default_topology(256)
+    assert topo.num_groups == 16
+    assert default_topology(40).num_groups == 2
+    assert default_topology(3).num_groups <= 3
+
+
+# ---------------------------------------------------- two-tier weights
+def test_two_tier_weights_telescope_to_flat():
+    ids = jnp.asarray([0, 0, 1, 1, 1, 2], jnp.int32)
+    w = jnp.asarray([0.5, 1.5, 2.0, 0.1, 0.4, 3.0], jnp.float32)
+    accept = jnp.asarray([1, 1, 1, 0, 1, 1], jnp.float32)
+    alpha, beta, group_any = two_tier_weights(w, accept, ids, 3)
+    # alpha: convex within each group over accepted arrivals
+    for g in range(3):
+        np.testing.assert_allclose(
+            np.asarray(alpha)[np.asarray(ids) == g].sum(), 1.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(beta).sum(), 1.0, atol=1e-6)
+    assert np.asarray(group_any).all()
+    flat = masked_normalize(w, accept)
+    np.testing.assert_allclose(
+        np.asarray(alpha * jnp.take(beta, ids) * accept),
+        np.asarray(flat), atol=1e-6)
+
+
+def test_two_tier_weights_silent_group():
+    ids = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    w = jnp.asarray([1.0, 3.0, 2.0, 2.0], jnp.float32)
+    accept = jnp.asarray([1, 1, 0, 0], jnp.float32)
+    alpha, beta, group_any = two_tier_weights(w, accept, ids, 2)
+    assert np.asarray(group_any).tolist() == [True, False]
+    # the silent group contributes zero inter-fog weight, and nothing is NaN
+    np.testing.assert_allclose(np.asarray(beta), [1.0, 0.0], atol=1e-6)
+    assert np.isfinite(np.asarray(alpha)).all()
+
+
+def test_masked_normalize_zero_sum_guards():
+    # flat: zero weight mass over participants -> uniform over participants
+    out = masked_normalize(jnp.zeros(4), jnp.asarray([1.0, 1.0, 0.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(out), [1 / 3, 1 / 3, 0.0, 1 / 3],
+                               atol=1e-6)
+    # flat: no participants at all -> uniform over every slot
+    out = masked_normalize(jnp.ones(4), jnp.zeros(4))
+    np.testing.assert_allclose(np.asarray(out), [0.25] * 4, atol=1e-6)
+    # segment mode: each degenerate segment guards independently
+    ids = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    out = masked_normalize(jnp.asarray([0.0, 0.0, 1.0, 3.0]),
+                           jnp.asarray([1.0, 1.0, 1.0, 1.0]),
+                           segment_ids=ids, num_segments=2)
+    np.testing.assert_allclose(np.asarray(out), [0.5, 0.5, 0.25, 0.75],
+                               atol=1e-6)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ------------------------------------------------------ per-group guards
+def test_guard_verdict_per_group_median():
+    # group 1's uploads are ~100x larger than group 0's: legitimate scale
+    # difference, not an attack.  A FLAT median would reject all of group 1;
+    # per-group medians accept everyone.
+    norms = jnp.asarray([1.0, 1.1, 0.9, 100.0, 110.0, 90.0], jnp.float32)
+    finite = jnp.ones(6, bool)
+    mask = jnp.ones(6, jnp.float32)
+    ids = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+    rej_flat, _, _ = guard_verdict(norms, finite, mask, policy="drop",
+                                   factor=jnp.float32(8.0))
+    assert np.asarray(rej_flat)[3:].sum() == 3.0   # flat median ~1 rejects g1
+    rej, _, _ = guard_verdict(norms, finite, mask, policy="drop",
+                              factor=jnp.float32(8.0), group_ids=ids,
+                              num_groups=2)
+    assert np.asarray(rej).sum() == 0.0
+    # ...while a genuine within-group outlier is still caught
+    norms = norms.at[4].set(5000.0)
+    rej, _, _ = guard_verdict(norms, finite, mask, policy="drop",
+                              factor=jnp.float32(8.0), group_ids=ids,
+                              num_groups=2)
+    np.testing.assert_array_equal(np.asarray(rej),
+                                  [0, 0, 0, 0, 1, 0])
+
+
+def test_guard_verdict_num_groups_one_is_flat():
+    norms = jnp.asarray([1.0, 2.0, 50.0, 3.0], jnp.float32)
+    finite = jnp.ones(4, bool)
+    mask = jnp.ones(4, jnp.float32)
+    flat = guard_verdict(norms, finite, mask, policy="clip",
+                         factor=jnp.float32(4.0))
+    g1 = guard_verdict(norms, finite, mask, policy="clip",
+                       factor=jnp.float32(4.0),
+                       group_ids=jnp.zeros(4, jnp.int32), num_groups=1)
+    for a, b in zip(flat, g1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- tier accounting
+def test_tier_report_byte_math():
+    params = {"w": np.zeros((10, 10), np.float32)}
+    topo = uniform_topology(8, 2, local_steps=2)
+    mask = np.ones((4, 8), np.float32)
+    rep = comms_mod.tier_report(None, params, mask, topo)
+    meta = comms_mod.METADATA_BYTES_PER_UPLOAD
+    pbytes = comms_mod.param_bytes(params)
+    assert rep["sync_rounds"] == 2
+    assert rep["edge_fog_bytes_total"] == 4 * 8 * (pbytes + meta)
+    assert rep["fog_cloud_bytes_total"] == 2 * 2 * (pbytes + meta)
+    assert rep["flat_cross_tier_uplink_bytes"] == rep["edge_fog_bytes_total"]
+    np.testing.assert_allclose(rep["cross_tier_reduction"], 8.0)
+    rounds = rep["rounds"]
+    assert [r["fog_sync"] for r in rounds] == [False, True, False, True]
+    assert rounds[0]["fog_cloud_uplink_bytes"] == 0
+    assert rounds[0]["cloud_fog_downlink_bytes"] == 0
+
+
+def test_tier_report_fog_codec_and_uplink_cost():
+    params = {"w": np.zeros((64,), np.float32)}
+    topo = uniform_topology(4, 2, local_steps=1, uplink_scale=(1.0, 3.0))
+    mask = np.ones((2, 4), np.float32)
+    cfg = CommsConfig(compression="int8", fog_compression="int8")
+    rep = comms_mod.tier_report(cfg, params, mask, topo)
+    assert rep["fog_compression"] == "int8"
+    assert rep["fog_upload_bytes_per_group"] < comms_mod.param_bytes(params)
+    # per-byte cost weights the edge->fog ledger: mean scale here is 2x
+    r0 = rep["rounds"][0]
+    np.testing.assert_allclose(r0["edge_fog_uplink_cost"],
+                               2.0 * r0["edge_fog_uplink_bytes"])
+
+
+def test_tier_report_validates_length():
+    topo = uniform_topology(4, 2)
+    with pytest.raises(ValueError, match="length 4"):
+        comms_mod.tier_report(None, {"w": np.zeros(3)},
+                              np.ones((2, 6)), topo)
+
+
+def test_comms_config_rejects_bad_fog_codec():
+    with pytest.raises(ValueError, match="fog_compression"):
+        CommsConfig(fog_compression="gzip")
+
+
+# ---------------------------------------------------- scenario registry
+def test_unknown_scenario_lists_valid_names():
+    with pytest.raises(ValueError) as ei:
+        run_experiment(scenario="fogg")
+    msg = str(ei.value)
+    for name in SCENARIOS:
+        assert name in msg
+
+
+def test_fog_scenario_registered():
+    scn = SCENARIOS["fog"]
+    assert scn.engine == "fused" and scn.split == "dirichlet"
+    dyn = scn.dynamics(fog_config(64))
+    assert dyn["topology"].num_groups > 1
+
+
+def test_topology_requires_compiled_engine(setup):
+    cfg, shards, seed_set, test = setup
+    with pytest.raises(ValueError, match="engine="):
+        run_federated_rounds(cfg, shards, seed_set, test, rounds=1,
+                             engine="vmap",
+                             topology=uniform_topology(8, 2))
+
+
+def test_topology_wrong_length_raises(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    with pytest.raises(ValueError, match="length 4"):
+        eng.run_rounds_fused(eng.init_state(params0), 1,
+                             topology=uniform_topology(4, 2))
+
+
+# --------------------------------------------- 2-D mesh state placement
+def test_shard_engine_state_fog_mesh_specs(setup):
+    cfg, shards, seed_set, test = setup
+    mesh = make_fog_mesh(device_shards=1)   # (n, 1) over whatever exists
+    assert mesh.axis_names == ("fog", "device")
+    assert fleet_axes(mesh) == ("fog", "device")
+    dev_spec = device_axis_spec(mesh)
+    assert dev_spec[0] == ("fog", "device")
+
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    state = eng.init_state(params0)
+    assert state.residual == () and state.pending == ()
+    assert state.staleness == () and state.live == ()
+    sharded = shard_engine_state(mesh, state)
+    # empty-() defaults survive placement untouched
+    assert sharded.residual == () and sharded.pending == ()
+    assert sharded.staleness == () and sharded.live == ()
+    for field in ("params", "opt_state", "pool", "rng"):
+        for leaf in jax.tree_util.tree_leaves(getattr(sharded, field)):
+            if getattr(leaf, "ndim", 0) == 0:
+                assert leaf.sharding.spec == ()   # rank-0: replicated
+            else:
+                spec = leaf.sharding.spec
+                assert spec[0] == ("fog", "device"), (field, spec)
+                assert all(s is None for s in spec[1:])
+    # populated hetero/faults buffers shard like any other [D, ...] field
+    full = state._replace(
+        staleness=jnp.zeros((cfg.num_devices,), jnp.int32),
+        live=jnp.ones((cfg.num_devices,), jnp.float32))
+    sharded = shard_engine_state(mesh, full)
+    assert sharded.staleness.sharding.spec[0] == ("fog", "device")
+    assert sharded.live.sharding.spec[0] == ("fog", "device")
+
+
+# -------------------------------------------------- engine equivalence
+def test_g1_matches_flat_fused(setup):
+    """G=1, local_steps=1 is the degenerate hierarchy: one fog group over
+    the whole fleet, syncing every round — byte-for-byte flat Eq. 1."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, rf, ff = eng.run_rounds_fused(eng.init_state(params0), ROUNDS)
+    counters.reset_dispatches()
+    _, r1, f1 = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS,
+        topology=uniform_topology(cfg.num_devices, 1))
+    assert counters.dispatch_count() == 1
+    _leaves_close(ff, f1)
+    np.testing.assert_allclose(np.asarray(rf["agg_acc"]),
+                               np.asarray(r1["agg_acc"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1["beta"]), 1.0)
+    assert np.asarray(r1["fog_sync"]).all()
+
+
+def test_g1_matches_flat_composed(setup):
+    """The reduction holds composing with an int8 codec + hetero straggler
+    backlog + churn/guards — the fault and straggler draws are topology-
+    independent key streams."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    kwargs = dict(
+        comms=CommsConfig(compression="int8"),
+        hetero=HeteroConfig(straggler_rate=0.4, decay="exp", decay_rate=0.5,
+                            buffer_stale=True),
+        faults=FaultConfig(death_rate=0.2, birth_rate=0.5, drop_rate=0.2),
+        guards=GuardConfig(policy="drop", norm_factor=8.0))
+    _, rf, ff = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                     **kwargs)
+    _, r1, f1 = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS,
+        topology=uniform_topology(cfg.num_devices, 1), **kwargs)
+    _leaves_close(ff, f1)
+    np.testing.assert_allclose(np.asarray(rf["upload_mask"]),
+                               np.asarray(r1["upload_mask"]))
+    np.testing.assert_allclose(np.asarray(rf["weights"]),
+                               np.asarray(r1["weights"]), atol=1e-5)
+
+
+def test_fog_groups_sync_cadence(setup):
+    """G=2 with local_steps=2: cloud sync every other round, convex beta,
+    finite two-tier model, ONE dispatch."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds=4)
+    counters.reset_dispatches()
+    _, recs, final = eng.run_rounds_fused(
+        eng.init_state(params0), 4,
+        topology=uniform_topology(cfg.num_devices, 2, local_steps=2))
+    assert counters.dispatch_count() == 1
+    np.testing.assert_array_equal(np.asarray(recs["fog_sync"]),
+                                  [0.0, 1.0, 0.0, 1.0])
+    beta = np.asarray(recs["beta"])
+    assert beta.shape == (4, 2)
+    np.testing.assert_allclose(beta.sum(axis=1), 1.0, atol=1e-5)
+    assert np.asarray(recs["group_accept"]).sum(axis=1).max() \
+        <= cfg.num_devices
+    for leaf in jax.tree_util.tree_leaves(final):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_g1_matches_flat_async(setup):
+    """The same degenerate-hierarchy reduction on the async event loop."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    acfg = AsyncConfig(quorum=4, dist="det", mean_latency=1.0)
+    _, rf, ff = eng.run_async(eng.init_state(params0), ROUNDS,
+                              async_cfg=acfg)
+    counters.reset_dispatches()
+    _, r1, f1 = eng.run_async(
+        eng.init_state(params0), ROUNDS, async_cfg=acfg,
+        topology=uniform_topology(cfg.num_devices, 1))
+    assert counters.dispatch_count() == 1
+    # async returns the [G, ...] fog stack under a topology
+    f1_flat = jax.tree_util.tree_map(lambda a: a[0], f1)
+    _leaves_close(ff, f1_flat)
+    np.testing.assert_allclose(np.asarray(rf["agg_acc"]),
+                               np.asarray(r1["agg_acc"]), atol=1e-5)
+
+
+def test_async_fog_groups_finite(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds=4)
+    acfg = AsyncConfig(quorum=2, dist="det", mean_latency=1.0)
+    _, recs, fog = eng.run_async(
+        eng.init_state(params0), 4, async_cfg=acfg,
+        topology=uniform_topology(cfg.num_devices, 2, local_steps=2))
+    leaves = jax.tree_util.tree_leaves(fog)
+    assert leaves[0].shape[0] == 2
+    for leaf in leaves:
+        assert np.isfinite(np.asarray(leaf)).all()
+    np.testing.assert_allclose(np.asarray(recs["beta"]).sum(axis=1), 1.0,
+                               atol=1e-5)
+
+
+# --------------------------------------------------- forced 2-D mesh check
+_FORCED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import jax, numpy as np
+from dataclasses import replace
+from repro.core.engine import EdgeEngine
+from repro.core.federated import FederatedALConfig, Trainer
+from repro.core.topology import uniform_topology
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.launch.mesh import make_fog_mesh
+
+assert jax.device_count() == 8, jax.device_count()
+cfg = FederatedALConfig(num_devices=8, acquisitions=1, mc_samples=2,
+                        k_per_acquisition=2, pool_window=8,
+                        train_steps_per_acq=2, initial_train=6,
+                        initial_train_steps=2, seed=5)
+full = make_digit_dataset(96, seed=1)
+test = make_digit_dataset(24, seed=2)
+seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+shards = federated_split(full, cfg.num_devices, seed=4)
+trainer = Trainer(cfg)
+params0 = trainer.init_params(jax.random.key(0))
+topo = uniform_topology(8, 2, local_steps=2)
+mesh = make_fog_mesh(fog_shards=2, device_shards=4)
+assert mesh.shape == {"fog": 2, "device": 4}
+
+total = cfg.acquisitions * 2
+ev = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                total_acquisitions=total)
+em = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                total_acquisitions=total, mesh=mesh)
+# flat vs G=1 ON the 2-D mesh
+_, _, f_flat = em.run_rounds_fused(em.init_state(params0), 2)
+_, _, f_g1 = em.run_rounds_fused(em.init_state(params0), 2,
+                                 topology=uniform_topology(8, 1))
+for a, b in zip(jax.tree_util.tree_leaves(f_flat),
+                jax.tree_util.tree_leaves(f_g1)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+# G=2 on the 2-D mesh vs G=2 under vmap
+_, rv, fv = ev.run_rounds_fused(ev.init_state(params0), 2, topology=topo)
+_, rm, fm = em.run_rounds_fused(em.init_state(params0), 2, topology=topo)
+for a, b in zip(jax.tree_util.tree_leaves(fv), jax.tree_util.tree_leaves(fm)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+np.testing.assert_allclose(np.asarray(rv["beta"]), np.asarray(rm["beta"]),
+                           atol=1e-5)
+np.testing.assert_array_equal(np.asarray(rv["fog_sync"]),
+                              np.asarray(rm["fog_sync"]))
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_fog_mesh_on_forced_8_host_devices():
+    """Genuinely-sharded 2-D check: a subprocess forces 8 fake host devices
+    (XLA_FLAGS must be set before jax initializes) and asserts the
+    ("fog", "device") mesh reproduces vmap for flat, G=1, and G=2."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORM_NAME", "cpu")
+    out = subprocess.run([sys.executable, "-c", _FORCED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

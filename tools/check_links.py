@@ -2,10 +2,17 @@
 
 Scans ``docs/*.md``, ``README.md``, and the other top-level markdown files
 for inline links/images ``[text](target)`` and reference definitions
-``[ref]: target``, and fails when a RELATIVE target does not exist on disk
-(resolved against the linking file's directory, anchors stripped).
-External schemes (http/https/mailto) and pure in-page anchors are skipped —
-this is a docs-can't-rot gate for the repo's own files, not a crawler.
+``[ref]: target``, and fails when
+
+* a RELATIVE target does not exist on disk (resolved against the linking
+  file's directory), or
+* a ``#fragment`` — in-page (``#anchor``) or cross-file
+  (``file.md#anchor``) — does not match any heading in the target
+  markdown file (GitHub slugification: lowercase, spaces → ``-``,
+  punctuation dropped, duplicate slugs suffixed ``-1``, ``-2``, ...).
+
+External schemes (http/https/mailto) are skipped — this is a
+docs-can't-rot gate for the repo's own files, not a crawler.
 
 Usage:
     python tools/check_links.py [root]
@@ -21,6 +28,7 @@ from pathlib import Path
 _INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 # reference-style definitions: [name]: target
 _REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_HEADING = re.compile(r"^#{1,6}\s+(.+?)\s*#*\s*$", re.MULTILINE)
 _SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
 
 
@@ -36,21 +44,60 @@ def _strip_code(text: str) -> str:
     return re.sub(r"`[^`]*`", "", text)
 
 
-def check_file(path: Path, root: Path) -> list[str]:
+def github_slug(heading: str) -> str:
+    """GitHub's heading → anchor slugification: strip markdown emphasis /
+    code / link syntax, lowercase, drop everything but word chars, spaces
+    and hyphens, then spaces → hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # [t](url) -> t
+    text = re.sub(r"[*_]", "", text)
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: Path) -> set[str]:
+    """Every anchor a markdown file exposes: slugified headings, with
+    GitHub's ``-1``/``-2`` suffixing for duplicates.  Fences are stripped
+    first so a ``# comment`` inside a code block is not a heading."""
+    text = re.sub(r"```.*?```", "", path.read_text(encoding="utf-8"),
+                  flags=re.DOTALL)
+    slugs: set[str] = set()
+    seen: dict[str, int] = {}
+    for m in _HEADING.finditer(text):
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_file(path: Path, root: Path,
+               slug_cache: dict[Path, set[str]]) -> list[str]:
     text = _strip_code(path.read_text(encoding="utf-8"))
     errors = []
     targets = _INLINE.findall(text) + _REFDEF.findall(text)
     for target in targets:
-        if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+        if target.startswith(_SKIP_SCHEMES):
             continue
-        rel = target.split("#", 1)[0]
-        if not rel:
+        rel, _, frag = target.partition("#")
+        if rel:
+            resolved = (root / rel if rel.startswith("/")
+                        else path.parent / rel).resolve()
+            if not resolved.exists():
+                errors.append(f"{path.relative_to(root)}: broken link "
+                              f"-> {target}")
+                continue
+        else:
+            resolved = path                       # pure in-page #anchor
+        if not frag or resolved.suffix != ".md" or not resolved.is_file():
             continue
-        resolved = (root / rel if rel.startswith("/")
-                    else path.parent / rel).resolve()
-        if not resolved.exists():
-            errors.append(f"{path.relative_to(root)}: broken link "
-                          f"-> {target}")
+        if resolved not in slug_cache:
+            slug_cache[resolved] = heading_slugs(resolved)
+        if frag.lower() not in slug_cache[resolved]:
+            errors.append(f"{path.relative_to(root)}: broken anchor "
+                          f"-> {target} (no heading slug '{frag}' in "
+                          f"{resolved.name})")
     return errors
 
 
@@ -61,12 +108,13 @@ def main() -> int:
         print(f"no markdown files found under {root}", file=sys.stderr)
         return 1
     errors = []
+    slug_cache: dict[Path, set[str]] = {}
     for f in files:
-        errors.extend(check_file(f, root))
+        errors.extend(check_file(f, root, slug_cache))
     for e in errors:
         print(e, file=sys.stderr)
     print(f"checked {len(files)} markdown files: "
-          f"{'FAIL (' + str(len(errors)) + ' broken links)' if errors else 'all links resolve'}")
+          f"{'FAIL (' + str(len(errors)) + ' broken links)' if errors else 'all links and anchors resolve'}")
     return 1 if errors else 0
 
 
