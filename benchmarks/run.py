@@ -39,6 +39,7 @@ BENCHES = [
     ("async", "benchmarks.bench_async", "bench_async"),
     ("faults", "benchmarks.bench_faults", "bench_faults"),
     ("topology", "benchmarks.bench_topology", "bench_topology"),
+    ("stream", "benchmarks.bench_stream", "bench_stream"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

@@ -64,9 +64,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation as agg_mod
+from repro.core import cascade as cascade_mod
 from repro.core import comms as comms_mod
 from repro.core import counters, vpool
 from repro.core import faults as faults_mod
+from repro.core import fleet as fleet_mod
+from repro.core import stream as stream_mod
 from repro.core.hetero import DECAYS
 
 DISTS = ("exp", "lognormal", "det")
@@ -234,7 +237,8 @@ def _where_mask(mask, on_true, on_false):
 
 def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                    async_key, faults_key=None, guards_key=None,
-                   churn_mode: str = "none", topo_key=None):
+                   churn_mode: str = "none", topo_key=None,
+                   stream_key=None):
     """The whole event loop — every aggregation event, every candidate
     device round, every staleness-decayed delta fold-in — as ONE compiled
     program (a ``lax.scan`` over aggregation events).
@@ -261,18 +265,37 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
     4. arrivals reset staleness and are flagged for re-dispatch; everyone
        still in flight ages by one model version iff a commit happened.
 
-    ``topo_key`` (``(num_groups, local_steps)`` or None) threads the fog
-    tier (``core.topology``) through the event loop: the fog model carry
-    becomes a ``[G, ...]`` stack, each arrival folds into ITS OWN fog
-    group's model (intra-fog Eq. 1 with per-group staleness weights), and
-    every ``local_steps``-th event is a SYNC event that collapses the tier
-    — the β-mixed inter-fog base plus the flat staleness-decayed arrivals,
-    broadcast back to every group.  ``G=1`` with ``local_steps=1`` makes
-    every event a sync event with β ≡ 1.0, reproducing the flat loop
-    bitwise.  The guard verdict is per-group (one fog's byzantine burst
-    cannot skew another's threshold) and staleness ages against the model
-    the device actually dispatched from — its group's on local events, the
-    global on sync events.
+    ``topo_key`` (``(num_groups, local_steps, has_compute_profile)`` or
+    None) threads the fog tier (``core.topology``) through the event loop:
+    the fog model carry becomes a ``[G, ...]`` stack, each arrival folds
+    into ITS OWN fog group's model (intra-fog Eq. 1 with per-group
+    staleness weights), and every ``local_steps``-th event is a SYNC event
+    that collapses the tier — the β-mixed inter-fog base plus the flat
+    staleness-decayed arrivals, broadcast back to every group.  ``G=1``
+    with ``local_steps=1`` makes every event a sync event with β ≡ 1.0,
+    reproducing the flat loop bitwise.  The guard verdict is per-group
+    (one fog's byzantine burst cannot skew another's threshold) and
+    staleness ages against the model the device actually dispatched from —
+    its group's on local events, the global on sync events.  With a
+    compute profile the per-group step budgets ride as a traced ``[D]``
+    ``step_limits`` argument masking local fit steps (the same surface as
+    the sync engine's hetero profile): a slow fog group trains LESS per
+    dispatch and arrives late.
+
+    ``stream_key`` (``(process, queue_cap, max_arrivals, escalate_k,
+    selection)`` or None) turns on live traffic (``core.stream``): per
+    event, each device receives a Poisson/bursty batch of unlabeled
+    requests over the event's simulated-seconds gap (sampled under the
+    optional drifting label tilt) into a bounded queue carried per device;
+    devices that COMMITTED a local round this event score their queue with
+    the acquisition scorer and ``cascade.cascade_decide`` serves confident
+    requests locally (graded against ground truth for telemetry), escalates
+    the top-``escalate_k`` informative ones into the training pool (the
+    fog labels them — active learning on traffic), and leaves the rest
+    queued until backpressure drops them.  All rates/thresholds/drift
+    knobs are traced; the stream draws live on a DEDICATED key stream and
+    the pool advances only for devices that actually escalated, so a
+    zero-rate stream replays the plain event loop bit-for-bit.
 
     ``faults_key`` / ``guards_key`` / ``churn_mode`` mirror the
     ``core.faults`` statics of ``EdgeEngine._get_rounds_fused_jit``.
@@ -314,6 +337,14 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
             corrupt_mode, num_classes = faults_key
         topo_on = topo_key is not None
         G = topo_key[0] if topo_on else 1
+        use_steps = topo_on and topo_key[2]
+        stream_on = stream_key is not None
+        if stream_on:
+            s_process, Q, A_max, esc_k, s_selection = stream_key
+        acq_random = engine.cfg.acquisition_fn == "random"
+        ncls = engine._num_classes()
+        T_mc = engine.cfg.mc_samples
+        score_fn = engine._score_fn
         step = engine._acquisition_step(False)
         R = engine.cfg.acquisitions
         round_unroll = R if engine.unroll else 1
@@ -327,8 +358,9 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
         tmap = jax.tree_util.tree_map
         gather, local, fpsum = _fleet_collectives(mesh, D)
 
-        def events_all(state, images, labels, seed_x, seed_y, val_x, val_y,
-                       keys_all, lat_keys, means_g, quorum, timer, mix_rate,
+        def events_all(state, images, labels, valid, seed_x, seed_y,
+                       val_x, val_y, keys_all, lat_keys, skeys, means_g,
+                       quorum, timer, mix_rate, step_limits, srates, svec,
                        fkeys, frates, gfactor, group_ids, sync_flags):
             n_pad = labels.shape[1]
             if topo_on:
@@ -342,11 +374,14 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
 
             def one_event(carry, xs):
                 (fog, params, opt_state, pool, rng, residual, pending,
-                 staleness, next_done, dispatch, t_now, live) = carry
+                 staleness, next_done, dispatch, t_now, live) = carry[:12]
+                if stream_on:
+                    q_idx, q_valid = carry[12], carry[13]
+                keys_r, lat_key, fkey, *xtra = xs
                 if topo_on:
-                    keys_r, lat_key, fkey, sync_f = xs
-                else:
-                    keys_r, lat_key, fkey = xs
+                    sync_f, *xtra = xtra
+                if stream_on:
+                    skey, = xtra
 
                 # ---- 0. churn + fault draws for this event (one fault key
                 # per event, folded at the absolute index)
@@ -402,14 +437,20 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                                         opt_state)
                 params_base = params
 
-                def device_round(c, images_d, labels_d):
+                def device_round(c, images_d, labels_d, steps_d):
+                    # steps_d: the fog compute profile — a slow group's
+                    # slots mask out local fit steps past their budget
+                    # (the sync engine's hetero surface), so they train
+                    # LESS per dispatch and arrive late
                     return jax.lax.scan(
                         lambda cc_, _: step(cc_, images_d, labels_d,
-                                            seed_x, seed_y, None, None),
+                                            seed_x, seed_y, None, None,
+                                            steps_d if use_steps else None),
                         c, None, length=R, unroll=round_unroll)
 
                 (p2, o2, pool2, rng2), _ = jax.vmap(device_round)(
-                    (params, opt_state, pool, keys_r), images, labels_r)
+                    (params, opt_state, pool, keys_r), images, labels_r,
+                    step_limits)
                 # a crashed device loses the round: nothing commits, so the
                 # delta it banks is the zero its fresh dispatch started
                 # with — it restarts and reports late (latency spike below)
@@ -447,6 +488,96 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                 arrived_any = jnp.sum(arrived_g) > 0
                 recv_g = (arrived_g * (1.0 - drop_g) if faults_on
                           else arrived_g)
+
+                # ---- 2b. live traffic (core.stream): requests arrive
+                # over this event's simulated-seconds gap into the bounded
+                # per-device queues; devices that COMMITTED a round score
+                # their queue and the selection cascade serves locally /
+                # escalates to the fog / keeps each request queued.  All
+                # draws live on the dedicated stream key; the pool only
+                # advances where something escalated — zero traffic
+                # replays the plain event loop bit-for-bit.
+                if stream_on:
+                    serve_t, esc_t, kappa, period, burst = (
+                        svec[0], svec[1], svec[2], svec[3], svec[4])
+                    t_next = jnp.where(jnp.isfinite(t_event), t_event,
+                                       t_now)
+                    dt = jnp.maximum(t_next - t_now, 0.0)
+                    gids = local(jnp.arange(D, dtype=jnp.int32))
+                    srates_l = local(srates)
+                    if churn_on:
+                        # a dead device receives no traffic
+                        srates_l = srates_l * (live > 0)
+
+                    def arrivals_one(gid, rate, labels_d, valid_d, qi, qv):
+                        # per-device key folded at the GLOBAL slot index:
+                        # identical traffic under any mesh factorization
+                        kd = jax.random.fold_in(skey, gid)
+                        k_cnt, k_pick = jax.random.split(kd)
+                        n = stream_mod.draw_arrival_count(
+                            s_process, k_cnt, rate, dt, burst, A_max)
+                        logits = stream_mod.drift_logits(
+                            labels_d, valid_d, kappa, period, t_next, ncls)
+                        picks = jax.random.categorical(
+                            k_pick, logits, shape=(A_max,)).astype(
+                                jnp.int32)
+                        ok = (jnp.arange(A_max) < n) & jnp.any(valid_d)
+                        qi, qv, drp = stream_mod.queue_append(
+                            qi, qv, picks, ok)
+                        return qi, qv, drp, n
+
+                    q_idx, q_valid, dropped_d, offered_d = \
+                        jax.vmap(arrivals_one)(gids, srates_l, labels,
+                                               valid, q_idx, q_valid)
+
+                    def cascade_one(gid, p_d, qi, qv, lmask_d, images_d,
+                                    labels_d):
+                        kd = jax.random.fold_in(skey, D + gid)
+                        k_score, k_rank = jax.random.split(kd)
+                        x_q = jnp.take(images_d, qi, axis=0)
+                        preds = jnp.argmax(eval_fn(p_d, x_q), -1)
+                        if acq_random:
+                            scores = jax.random.uniform(k_score, (Q,))
+                        else:
+                            logp = trainer.score_logprobs_raw(
+                                p_d, x_q, k_score, T_mc)
+                            scores = score_fn(logp)
+                        rank = (jax.random.uniform(k_rank, (Q,))
+                                if s_selection == "random" else scores)
+                        # the random-control arm spends the SAME
+                        # escalation budget on uniformly-random queued
+                        # requests (no threshold gate) — the bench gate's
+                        # equal-budget comparison
+                        esc_thr = (jnp.float32(-jnp.inf)
+                                   if s_selection == "random" else esc_t)
+                        serve, escal, sel, sel_ok = \
+                            cascade_mod.cascade_decide(
+                                scores, rank, qi, jnp.take(lmask_d, qi),
+                                qv, serve_t, esc_thr, esc_k)
+                        correct = jnp.take(labels_d, qi) == preds
+                        return serve, escal, sel, sel_ok, correct
+
+                    serve_q, escal_q, sel_q, selv_q, correct_q = \
+                        jax.vmap(cascade_one)(gids, params, q_idx, q_valid,
+                                              pool.labeled_mask, images,
+                                              labels)
+                    commit_b = commit > 0
+                    serve_q = serve_q & commit_b[:, None]
+                    escal_q = escal_q & commit_b[:, None]
+                    selv_q = selv_q & commit_b[:, None]
+                    # escalation: the fog labels the request and it joins
+                    # the device's training pool (active learning on
+                    # traffic) — trained from the NEXT dispatch onward
+                    pool_esc = jax.vmap(vpool.acquire)(pool, q_idx, sel_q,
+                                                       selv_q)
+                    esc_cnt_d = jnp.sum(selv_q.astype(jnp.int32), axis=1)
+                    pool = _where_mask((esc_cnt_d > 0).astype(jnp.float32),
+                                       pool_esc, pool)
+                    q_valid = q_valid & ~(serve_q | escal_q)
+                    served_d = jnp.sum(serve_q.astype(jnp.int32), axis=1)
+                    correct_d = jnp.sum(
+                        (serve_q & correct_q).astype(jnp.int32), axis=1)
+                    depth_d = jnp.sum(q_valid.astype(jnp.int32), axis=1)
 
                 # ---- 3. staleness-decayed Eq. 1 over the arrivals
                 counts_g = gather(
@@ -611,6 +742,19 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                     rec["beta"] = beta
                     rec["group_accept"] = jax.ops.segment_sum(
                         accept_g, group_ids, num_segments=G)
+                if stream_on:
+                    rec["offered"] = jnp.sum(
+                        gather(offered_d.astype(jnp.float32)))
+                    rec["stream_dropped"] = jnp.sum(
+                        gather(dropped_d.astype(jnp.float32)))
+                    rec["served"] = jnp.sum(
+                        gather(served_d.astype(jnp.float32)))
+                    rec["serve_correct"] = jnp.sum(
+                        gather(correct_d.astype(jnp.float32)))
+                    rec["escalated"] = jnp.sum(
+                        gather(esc_cnt_d.astype(jnp.float32)))
+                    rec["queue_depth"] = gather(
+                        depth_d.astype(jnp.float32))
                 if has_val:
                     rec["device_accs"] = accs_g
                     # cloud-side estimate: the slot-share-weighted fog mix
@@ -620,9 +764,12 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                     preds = jnp.argmax(eval_fn(eval_model, val_x), -1)
                     rec["agg_acc"] = jnp.mean(
                         (preds == val_y).astype(jnp.float32))
-                return (fog, params, opt_state, pool, rng, residual,
-                        pending, staleness, next_done, dispatch,
-                        t_now, live), rec
+                out = (fog, params, opt_state, pool, rng, residual,
+                       pending, staleness, next_done, dispatch,
+                       t_now, live)
+                if stream_on:
+                    out = out + (q_idx, q_valid)
+                return out, rec
 
             # prologue encoded as carry init: everyone is freshly
             # dispatched the fog model (= any state row — init/set_params
@@ -647,12 +794,18 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                      jnp.zeros((D_local,), jnp.float32),
                      jnp.ones((D_local,), jnp.float32),
                      jnp.float32(0.0), state.live)
+            if stream_on:
+                # the live-traffic queues start empty
+                carry = carry + (jnp.zeros((D_local, Q), jnp.int32),
+                                 jnp.zeros((D_local, Q), bool))
             xs_rows = (keys_all, lat_keys, fkeys)
             if topo_on:
                 xs_rows = xs_rows + (sync_flags,)
+            if stream_on:
+                xs_rows = xs_rows + (skeys,)
             carry, recs = jax.lax.scan(one_event, carry, xs_rows)
             (fog, params, opt_state, pool, rng, residual, pending,
-             staleness, _nd, _disp, _t, live) = carry
+             staleness, _nd, _disp, _t, live) = carry[:12]
             out_state = type(state)(params, opt_state, pool, rng,
                                     residual, pending, staleness, live)
             return out_state, recs, fog
@@ -661,12 +814,15 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
             dev = _fleet_spec(mesh)
             events_all = shard_map(
                 events_all, mesh=mesh,
-                # fkeys / frates / gfactor / group_ids / sync_flags
-                # replicate: fault draws and the topology are global-fleet
-                # facts every shard derives identically
-                in_specs=(dev, dev, dev, P(), P(), P(), P(),
+                # fkeys / frates / gfactor / group_ids / sync_flags /
+                # skeys / srates / svec replicate: fault draws, the
+                # topology, and the traffic process are global-fleet
+                # facts every shard derives identically (per-device
+                # stream keys fold at GLOBAL slot ids)
+                in_specs=(dev, dev, dev, dev, P(), P(), P(), P(),
                           _fleet_spec(mesh, None), P(), P(), P(), P(),
-                          P(), P(), P(), P(), P(), P()),
+                          P(), P(), dev, P(), P(), P(), P(), P(), P(),
+                          P()),
                 # recs and the fog model are replicated (all_gather / psum
                 # results); state stays sharded
                 out_specs=(dev, P(), P()), check_rep=False)
@@ -675,15 +831,16 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
 
     key = engine._cache_key("async_events", False) + (
         events, aggregation, comms_key, async_key, faults_key, guards_key,
-        churn_mode, topo_key)
+        churn_mode, topo_key, stream_key)
     return _compiled(key, build)
 
 
 def run_events_fused(engine, state, events: int, *,
-                     async_cfg: AsyncConfig,
+                     async_cfg: Optional[AsyncConfig] = None,
                      aggregation: str = "fedavg_n",
                      comms=None, start_event: int = 0,
-                     faults=None, guards=None, topology=None):
+                     faults=None, guards=None, topology=None,
+                     stream=None, fleet=None):
     """``events`` fog aggregation events — rounds-free FedAsync/FedBuff
     dynamics — in ONE dispatch.
 
@@ -730,9 +887,33 @@ def run_events_fused(engine, state, events: int, *,
     and guards / staleness go per-group.  ``uniform_topology(D, 1)``
     reproduces the flat event loop bitwise.  Telemetry gains per-event
     ``fog_sync`` / ``beta`` / ``group_accept`` rows; ``agg_acc`` becomes
-    the slot-share-weighted fog mix between syncs.  ``compute_scale`` has
-    no effect here (the async loop has no step-limit surface — model
-    compute speed through the latency profile instead).
+    the slot-share-weighted fog mix between syncs.  ``compute_scale``
+    caps each device's fit steps at
+    ``clip(round(scale · train_steps_per_acq), 1, train_steps_per_acq)``
+    — slow fog groups do less local work per dispatch, the same step-limit
+    surface the hetero engine exposes per device.
+
+    ``stream`` (``core.stream.StreamConfig``) runs live traffic on the
+    virtual clock: unlabeled requests arrive per device over each event's
+    simulated-seconds gap (Poisson or deterministic rate, optional bursts
+    and temporal label drift), land in bounded per-device queues, and —
+    on the device's next committed round — are scored by the acquisition
+    scorer and split by the selection cascade
+    (``core.cascade.cascade_decide``) into served-locally, escalated to
+    the fog (labeled there and added to the training pool, billed as
+    uplink sample bytes), or kept queued until backpressure drops them.
+    Telemetry gains per-event ``offered`` / ``stream_dropped`` /
+    ``served`` / ``serve_correct`` / ``escalated`` scalars and a
+    ``queue_depth [D]`` row (``core.stream.stream_telemetry`` summarizes
+    them).  With ``stream=None`` the traffic program is not traced at
+    all; a StreamConfig with zero arrival rate DOES trace it and
+    reproduces the plain event loop bitwise (the reduction contract
+    pinned by ``tests/test_stream.py``).
+
+    ``fleet`` (``core.fleet.FleetConfig``) bundles
+    ``comms``/``async_cfg``/``faults``/``guards``/``topology``/``stream``
+    as one value; the per-feature kwargs keep working and may not be
+    mixed with ``fleet=`` without a warning (legacy values win).
 
     ``faults`` / ``guards`` (``core.faults``) inject event-time faults and
     enable the fog-side aggregation guards — see
@@ -743,6 +924,17 @@ def run_events_fused(engine, state, events: int, *,
     freshly dispatched the current fog model.  A crash loses the round's
     work AND multiplies the completion latency by ``faults.restart_mult``.
     """
+    fleet = fleet_mod.resolve_fleet(
+        fleet, "run_events_fused",
+        allowed=("comms", "async_cfg", "faults", "guards", "topology",
+                 "stream"),
+        comms=comms, async_cfg=async_cfg, faults=faults, guards=guards,
+        topology=topology, stream=stream)
+    comms, async_cfg, faults = fleet.comms, fleet.async_cfg, fleet.faults
+    guards, topology, stream = fleet.guards, fleet.topology, fleet.stream
+    if async_cfg is None:
+        raise ValueError("run_events_fused needs an AsyncConfig "
+                         "(async_cfg= or fleet.async_cfg)")
     if aggregation not in _ASYNC_AGGREGATIONS:
         raise ValueError(
             f"async aggregation must be one of "
@@ -752,7 +944,9 @@ def run_events_fused(engine, state, events: int, *,
         raise ValueError(
             "aggregation='weighted' scores devices on a validation set; "
             "construct EdgeEngine with test_set")
-    engine._check_capacity(state, rounds=events)
+    engine._check_capacity(
+        state, rounds=events,
+        extra_per_round=(stream.escalate_k if stream is not None else 0))
     D = engine.num_devices
     if topology is not None:
         topology.validate_for(D)
@@ -799,10 +993,14 @@ def run_events_fused(engine, state, events: int, *,
                  async_cfg.decay, float(async_cfg.decay_rate))
     means_np = device_latency_means(async_cfg, D)
     topo_key = None
+    sl_np = None
     if topology is not None:
         from repro.core import topology as topo_mod
-        topo_key = (topology.num_groups, int(topology.local_steps))
+        topo_key = (topology.num_groups, int(topology.local_steps),
+                    topology.compute_scale is not None)
         means_np = topo_mod.topology_latency_means(topology, means_np)
+        sl_np = topo_mod.topology_step_limits(
+            topology, D, engine.cfg.train_steps_per_acq)
         group_ids = jnp.asarray(topology.ids)
         sync_rows = jnp.asarray(
             topo_mod.sync_schedule(topology, events, start_event))
@@ -810,6 +1008,21 @@ def run_events_fused(engine, state, events: int, *,
         group_ids = jnp.zeros((D,), jnp.int32)
         sync_rows = jnp.ones((events,), jnp.float32)
     means = jnp.asarray(means_np)
+    step_limits = jnp.asarray(
+        sl_np if sl_np is not None
+        else np.full((D,), engine.cfg.train_steps_per_acq, np.int32))
+    stream_k = stream_mod.stream_static_key(stream)
+    if stream is not None:
+        srates = jnp.asarray(stream_mod.device_arrival_rates(stream, D))
+        skeys = stream_mod.stream_keys(stream, start_event, events)
+        svec = jnp.asarray([stream.serve_threshold,
+                            stream.escalate_threshold,
+                            stream.drift_kappa, stream.drift_period,
+                            stream.burst], jnp.float32)
+    else:
+        srates = jnp.zeros((D,), jnp.float32)
+        skeys = jax.random.split(jax.random.key(0), events)
+        svec = jnp.zeros((5,), jnp.float32)
     # event 0 consumes the incoming state's keys; later events follow the
     # absolute-index schedule (the run_rounds_fused chaining contract)
     later = [engine.device_keys(start_event + t) for t in range(1, events)]
@@ -829,13 +1042,16 @@ def run_events_fused(engine, state, events: int, *,
     gfactor = jnp.float32(guards.norm_factor if guards is not None
                           else 0.0)
     fn = _get_async_jit(engine, events, aggregation, comms_key, async_key,
-                        faults_key, guards_key, churn_mode, topo_key)
+                        faults_key, guards_key, churn_mode, topo_key,
+                        stream_key=stream_k)
     counters.count_dispatch()
     state, recs, fog = fn(state, engine.images, engine.labels,
+                          engine.valid,
                           engine.seed_images, engine.seed_labels,
                           engine.test_images, engine.test_labels,
-                          keys_all, lat_keys, means, quorum, timer,
-                          jnp.float32(async_cfg.mix_rate), fkeys, frates,
+                          keys_all, lat_keys, skeys, means, quorum, timer,
+                          jnp.float32(async_cfg.mix_rate), step_limits,
+                          srates, svec, fkeys, frates,
                           gfactor, group_ids, sync_rows)
     return state, recs, fog
 

@@ -10,6 +10,14 @@ micro-round schedule in which link g trains micro-round r while link g+1
 trains on r-1's hand-me-down — the chain becomes a pipeline and the steady-
 state slowdown drops from chain_len× to ~1× (fill/drain only). At pod scale
 this is a collective-permute ring on the group axis (launch/train.py).
+
+Beyond paper (PR 8): ``cascade_decide`` is the SELECTION cascade for live
+traffic — the same serve-locally / escalate-upward shape as the training
+cascade, but compiled and threshold-driven: a device scores its queued
+requests with the acquisition scorer and the thresholds split them into
+serve (confident → answered at the edge), escalate (informative → labeled
+at the fog, joining the training pool), and keep-queued.  Runs inside the
+async event loop's single dispatch (``core.stream``).
 """
 from __future__ import annotations
 
@@ -17,6 +25,7 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 
 def cascade_train(params, devices: Sequence, *, acquisitions_per_link: int,
@@ -58,6 +67,49 @@ def pipelined_cascade_schedule(chain_len: int, micro_rounds: int) -> List[List[C
                 slot_group.append(CascadeSlot(micro_round=r, link=g, consumes_from=consumes))
         steps.append(slot_group)
     return steps
+
+
+def cascade_decide(scores, rank, idx, labeled, valid,
+                   serve_threshold, escalate_threshold, escalate_k: int):
+    """One device's serve/escalate/drop decision over its request queue.
+
+    ``scores [Q]`` are acquisition-scorer values (entropy, nats) for the
+    queued requests, ``rank [Q]`` the selection order (the scores
+    themselves, or uniform draws for the random-control arm), ``idx [Q]``
+    the dataset slots, ``labeled``/``valid`` ``[Q] bool`` masks (already
+    in the training pool / live queue entry).  Thresholds are TRACED
+    scalars; ``escalate_k`` is static.
+
+    Returns ``(serve [Q], escalated [Q], sel [k], sel_valid [k])``:
+
+    * escalation candidates are valid, unlabeled, and score ≥
+      ``escalate_threshold``; the top-``escalate_k`` by ``rank`` win, with
+      intra-batch duplicates (the same dataset slot queued twice) masked
+      so one event never labels a sample twice;
+    * of the rest, valid requests scoring ≤ ``serve_threshold`` are
+      SERVED locally (answered by the edge model, leaving the queue);
+    * everything else stays queued (until backpressure drops it).
+
+    ``escalate_threshold = +inf`` is the all-serve edge (pure inference
+    fleet); ``serve_threshold = -inf`` with a low escalate threshold is
+    the all-escalate edge (every request a labeling request) — both pinned
+    by ``tests/test_stream.py``.  Pure traced ops: vmap over devices.
+    """
+    eligible = valid & ~labeled & (scores >= escalate_threshold)
+    masked = jnp.where(eligible, rank, -jnp.inf)
+    _, sel = jax.lax.top_k(masked, escalate_k)
+    sel = sel.astype(jnp.int32)
+    sel_valid = jnp.take(eligible, sel)
+    sel_idx = jnp.take(idx, sel)
+    # drop intra-batch duplicates (keep the best-ranked occurrence)
+    k = escalate_k
+    dup = jnp.any((sel_idx[:, None] == sel_idx[None, :])
+                  & jnp.tril(jnp.ones((k, k), bool), -1)
+                  & sel_valid[None, :], axis=1)
+    sel_valid = sel_valid & ~dup
+    escalated = jnp.zeros_like(valid).at[sel].set(sel_valid)
+    serve = valid & ~escalated & (scores <= serve_threshold)
+    return serve, escalated, sel, sel_valid
 
 
 def pipelined_cascade_speedup(chain_len: int, micro_rounds: int) -> float:

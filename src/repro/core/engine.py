@@ -260,6 +260,7 @@ class EdgeEngine:
             sharding = NamedSharding(mesh, _fleet_spec(mesh))
             self.images = jax.device_put(self.images, sharding)
             self.labels = jax.device_put(self.labels, sharding)
+            self.valid = jax.device_put(self.valid, sharding)
         n_pad = self.images.shape[1]
         self.window = min(cfg.pool_window, n_pad)
         self.k = min(cfg.k_per_acquisition, self.window)
@@ -486,12 +487,14 @@ class EdgeEngine:
             args += (self.test_images, self.test_labels)
         return args
 
-    def _check_capacity(self, state: EngineState, *, rounds: int = 1):
-        """A round appends R·k slots per device; dynamic_update_slice would
-        silently clamp-and-overwrite past capacity, so fail loudly instead.
+    def _check_capacity(self, state: EngineState, *, rounds: int = 1,
+                        extra_per_round: int = 0):
+        """A round appends R·k slots per device (plus ``extra_per_round``
+        — stream escalations); dynamic_update_slice would silently
+        clamp-and-overwrite past capacity, so fail loudly instead.
         Size the pool with ``total_acquisitions`` for multi-round use."""
         need = int(np.max(np.asarray(state.pool.n_filled))) \
-            + rounds * self.cfg.acquisitions * self.k
+            + rounds * (self.cfg.acquisitions * self.k + extra_per_round)
         if need > self.capacity:
             raise ValueError(
                 f"pool capacity {self.capacity} cannot absorb {rounds} "
@@ -1068,7 +1071,7 @@ class EdgeEngine:
                          upload_mask=None, upload_fraction: float = 1.0,
                          aggregation: str = "fedavg_n", start_round: int = 0,
                          comms=None, hetero=None, faults=None, guards=None,
-                         live_mask=None, topology=None):
+                         live_mask=None, topology=None, fleet=None):
         """T federated rounds (device AL + fog aggregation + re-dispatch) in
         ONE dispatch.
 
@@ -1163,7 +1166,24 @@ class EdgeEngine:
         mesh (``launch.mesh.make_fog_mesh``), still in ONE dispatch.
         ``aggregation="optimal"`` selects one argmax model, which has no
         two-level decomposition, and is rejected.
+
+        ``fleet`` (``core.fleet.FleetConfig``) bundles
+        ``comms``/``hetero``/``faults``/``guards``/``live_mask``/
+        ``topology`` as one value; the per-feature kwargs keep working
+        and may not be mixed with ``fleet=`` without a warning (legacy
+        values win).  ``async_cfg``/``stream`` fields are rejected here —
+        they belong to the async event loop (``run_async``).
         """
+        from repro.core import fleet as fleet_mod
+        fleet = fleet_mod.resolve_fleet(
+            fleet, "run_rounds_fused",
+            allowed=("comms", "hetero", "faults", "guards", "live_mask",
+                     "topology"),
+            comms=comms, hetero=hetero, faults=faults, guards=guards,
+            live_mask=live_mask, topology=topology)
+        comms, hetero, faults = fleet.comms, fleet.hetero, fleet.faults
+        guards, live_mask = fleet.guards, fleet.live_mask
+        topology = fleet.topology
         if aggregation not in _AGGREGATIONS:
             raise ValueError(f"unknown aggregation {aggregation!r}: "
                              f"use {' | '.join(_AGGREGATIONS)}")
@@ -1356,10 +1376,10 @@ class EdgeEngine:
         return state, recs, final
 
     # -------------------------------------------------- async event loop
-    def run_async(self, state: EngineState, events: int, *, async_cfg,
+    def run_async(self, state: EngineState, events: int, *, async_cfg=None,
                   aggregation: str = "fedavg_n", comms=None,
                   start_event: int = 0, faults=None, guards=None,
-                  topology=None):
+                  topology=None, stream=None, fleet=None):
         """Rounds-free FedAsync/FedBuff aggregation: ``events`` quorum- or
         timer-triggered fog aggregation events over a continuous-time
         device latency model, in ONE dispatch — see
@@ -1368,12 +1388,16 @@ class EdgeEngine:
         / ``run_rounds_fused`` / ``run_async``).  ``faults`` / ``guards``
         are the ``core.faults`` fault-injection and aggregation-guard
         configs; async churn always uses the in-trace birth/death process
-        (there is no host liveness schedule for event time)."""
+        (there is no host liveness schedule for event time).  ``stream``
+        (``core.stream.StreamConfig``) adds live traffic + the
+        serve/escalate cascade; ``fleet`` (``core.fleet.FleetConfig``)
+        bundles all the knobs as one value."""
         from repro.core.async_engine import run_events_fused
         return run_events_fused(self, state, events, async_cfg=async_cfg,
                                 aggregation=aggregation, comms=comms,
                                 start_event=start_event, faults=faults,
-                                guards=guards, topology=topology)
+                                guards=guards, topology=topology,
+                                stream=stream, fleet=fleet)
 
     # ------------------------------------------------------------ drivers
     def run_round(self, state: EngineState, *, record_curves: bool = True):

@@ -30,10 +30,14 @@ from repro.core import faults as faults_mod
 from repro.core import hetero as hetero_mod
 from repro.core.aggregation import (fedavg, fedavg_n, opt_model,
                                     weighted_average)
+from repro.core import fleet as fleet_mod
+from repro.core import stream as stream_mod
 from repro.core.async_engine import AsyncConfig
 from repro.core.comms import CommsConfig
 from repro.core.faults import FaultConfig, GuardConfig
+from repro.core.fleet import FleetConfig
 from repro.core.hetero import HeteroConfig
+from repro.core.stream import StreamConfig
 from repro.core.mc_dropout import mc_logprobs
 from repro.core.pool import ActivePool
 from repro.data.digits import SyntheticDigits
@@ -347,6 +351,7 @@ _FEATURE_ENGINES = {
     "faults": ("fused", "async"),
     "guards": ("fused", "async"),
     "topology": ("fused", "async"),
+    "stream": ("async",),
 }
 
 
@@ -415,6 +420,16 @@ def _check_topology_engine(topology, engine: str) -> None:
         _require_engine(
             "topology", engine,
             "two-tier aggregation is traced into the one-dispatch programs")
+
+
+def _check_stream_engine(stream: Optional[StreamConfig],
+                         engine: str) -> None:
+    """Live-traffic arrivals ride the async loop's virtual clock — the
+    round-synchronous paths have no time axis for an arrival process."""
+    if stream is not None:
+        _require_engine(
+            "stream", engine,
+            "traffic arrives on the async event loop's virtual clock")
 
 
 def run_federated_round(cfg: FederatedALConfig, device_data: List[SyntheticDigits],
@@ -504,7 +519,9 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                          async_cfg: Optional[AsyncConfig] = None,
                          faults: Optional[FaultConfig] = None,
                          guards: Optional[GuardConfig] = None,
-                         topology=None):
+                         topology=None,
+                         stream: Optional[StreamConfig] = None,
+                         fleet: Optional[FleetConfig] = None):
     """Iterated rounds (paper: "the learning process can be iteratively
     carried out"): each round re-dispatches the aggregated model; devices
     keep their pools (labels accumulate across rounds).
@@ -563,13 +580,28 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
         raise ValueError(
             f"unknown engine {engine!r}: "
             "use vmap | legacy | classic | fused | async")
+    fleet = fleet_mod.resolve_fleet(
+        fleet, "run_federated_rounds",
+        allowed=("comms", "hetero", "async_cfg", "faults", "guards",
+                 "topology", "stream"),
+        comms=comms, hetero=hetero, async_cfg=async_cfg, faults=faults,
+        guards=guards, topology=topology, stream=stream)
+    comms, hetero, async_cfg = fleet.comms, fleet.hetero, fleet.async_cfg
+    faults, guards = fleet.faults, fleet.guards
+    topology, stream = fleet.topology, fleet.stream
     _check_comms_engine(comms, "fused" if engine == "async" else engine)
     _check_async_engine(async_cfg, engine, hetero)
     _check_hetero_engine(hetero, engine)
     _check_faults_engine(faults, guards, engine)
     _check_topology_engine(topology, engine)
+    _check_stream_engine(stream, engine)
     image_shape = device_data[0].images.shape[1:]
-    total_cfg = replace(cfg, acquisitions=cfg.acquisitions * rounds)
+    # a stream run labels up to escalate_k extra samples per device per
+    # event on top of the round's own acquisitions — size every capacity
+    # (trainer padding AND engine pool) to absorb the worst case
+    extra_acq = rounds * stream.escalate_k if stream is not None else 0
+    total_cfg = replace(cfg,
+                        acquisitions=cfg.acquisitions * rounds + extra_acq)
     trainer = trainer or Trainer(total_cfg)
     fog = FogNode(trainer, cfg, seed_data)
     params = fog.initial_model()
@@ -626,12 +658,14 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
         async_cfg = (async_cfg if async_cfg is not None
                      else default_async(len(device_data)))
         eng = EdgeEngine(trainer, cfg, device_data, seed_data, test_set,
-                         total_acquisitions=cfg.acquisitions * rounds,
+                         total_acquisitions=cfg.acquisitions * rounds
+                         + extra_acq,
                          mesh=mesh)
         _, recs, params = eng.run_async(
             eng.init_state(params), rounds, async_cfg=async_cfg,
             aggregation=cfg.aggregation, comms=comms,
-            faults=faults, guards=guards, topology=topology)
+            faults=faults, guards=guards, topology=topology,
+            stream=stream)
         if topology is not None:
             # run_events_fused returns the [G, ...] fog stack; collapse it
             # to the slot-share-weighted mix (== flat model at G=1)
@@ -651,6 +685,9 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
         topo_rows = ({k: np.asarray(recs[k])
                       for k in ("fog_sync", "beta", "group_accept")}
                      if topology is not None else {})
+        stream_rows = ({k: np.asarray(recs[k])
+                        for k in stream_mod.STREAM_REPORT_KEYS}
+                       if stream is not None else {})
         for t in range(rounds):
             uploaded = np.nonzero(mask_out[t])[0]
             reports.append({
@@ -670,6 +707,16 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
                     "beta": topo_rows["beta"][t].tolist(),
                     "group_accept": topo_rows["group_accept"][t].tolist()}
                    if topology is not None else {}),
+                **({"offered": float(stream_rows["offered"][t]),
+                    "stream_dropped":
+                        float(stream_rows["stream_dropped"][t]),
+                    "served": float(stream_rows["served"][t]),
+                    "serve_correct":
+                        float(stream_rows["serve_correct"][t]),
+                    "escalated": float(stream_rows["escalated"][t]),
+                    "queue_depth":
+                        stream_rows["queue_depth"][t].tolist()}
+                   if stream is not None else {}),
                 **{k: v[t].tolist() for k, v in fault_rows.items()},
             })
         summary = comms_mod.comms_report(
@@ -869,6 +916,16 @@ def fog_config(num_devices: int = 64, *, seed: int = 0,
     return _small_budget_config(num_devices, seed, overrides)
 
 
+def stream_config(num_devices: int = 64, *, seed: int = 0,
+                  **overrides) -> FederatedALConfig:
+    """Preset for the live-traffic streaming regime — the shared
+    small-budget fleet on the async event loop, with unlabeled requests
+    ARRIVING on the virtual clock instead of sitting in a static pool.
+    Pair with a ``StreamConfig`` (``default_stream(D)`` via
+    ``run_experiment(scenario="stream")``)."""
+    return _small_budget_config(num_devices, seed, overrides)
+
+
 def default_async(num_devices: int) -> AsyncConfig:
     """FedBuff-style ``AsyncConfig`` default, sized to the fleet: quorum at
     a quarter of the devices (min 1), a 4-simulated-second safety timer
@@ -879,6 +936,19 @@ def default_async(num_devices: int) -> AsyncConfig:
                        dist="exp", mean_latency=1.0,
                        latency_skew=ASYNC_LATENCY_SKEW,
                        decay="poly", decay_rate=0.5)
+
+
+def default_stream(num_devices: int) -> StreamConfig:
+    """Scenario-default ``StreamConfig``: ~2 requests per device per
+    simulated second with a 4x hot/cold skew, 16-deep bounded queues,
+    entropy thresholds splitting confident serves (≤ 0.6 nats) from
+    informative escalations (≥ 1.0 nats, top-2 per committed round), and
+    a slow class-drift rotation (one full cycle per 8 simulated seconds)
+    as the temporal non-IID axis."""
+    return StreamConfig(arrival_rate=2.0, rate_skew=4.0, queue_cap=16,
+                        max_arrivals=8, serve_threshold=0.6,
+                        escalate_threshold=1.0, escalate_k=2,
+                        drift_kappa=2.0, drift_period=8.0)
 
 
 def default_topology(num_devices: int, num_groups: Optional[int] = None):
@@ -904,15 +974,16 @@ class Scenario:
     ``"uniform"`` (``federated_split``) or ``"dirichlet"`` (non-IID,
     ``HETERO_DIRICHLET_ALPHA``); ``engine`` the native engine an explicit
     ``engine=`` overrides; ``dynamics(cfg)`` the default
-    hetero/async/faults/guards/topology kwargs ``run_experiment`` fills in
-    when the caller left them None."""
+    ``core.fleet.FleetConfig`` whose fields ``run_experiment`` fills in
+    when the caller left them None (explicit knobs — legacy kwargs or a
+    ``fleet=`` bundle — win field by field)."""
 
     description: str
     split: str
     engine: str
     config: Optional[Callable[..., FederatedALConfig]] = None
-    dynamics: Callable[[FederatedALConfig], Dict[str, object]] = \
-        lambda cfg: {}
+    dynamics: Callable[[FederatedALConfig], FleetConfig] = \
+        lambda cfg: FleetConfig()
 
 
 SCENARIOS: Dict[str, Scenario] = {
@@ -925,22 +996,76 @@ SCENARIOS: Dict[str, Scenario] = {
     "hetero": Scenario(
         description="straggler/staleness-aware heterogeneous fleet",
         split="dirichlet", engine="fused", config=hetero_config,
-        dynamics=lambda cfg: {"hetero": DEFAULT_HETERO}),
+        dynamics=lambda cfg: FleetConfig(hetero=DEFAULT_HETERO)),
     "async": Scenario(
         description="rounds-free FedAsync/FedBuff event loop",
         split="dirichlet", engine="async", config=async_config,
-        dynamics=lambda cfg: {"async_cfg": default_async(cfg.num_devices)}),
+        dynamics=lambda cfg: FleetConfig(
+            async_cfg=default_async(cfg.num_devices))),
     "churn": Scenario(
         description="device churn + fault injection + aggregation guards",
         split="dirichlet", engine="fused", config=churn_config,
-        dynamics=lambda cfg: {"faults": DEFAULT_FAULTS,
-                              "guards": DEFAULT_GUARDS}),
+        dynamics=lambda cfg: FleetConfig(faults=DEFAULT_FAULTS,
+                                         guards=DEFAULT_GUARDS)),
     "fog": Scenario(
         description="hierarchical two-tier edge×fog aggregation",
         split="dirichlet", engine="fused", config=fog_config,
-        dynamics=lambda cfg: {
-            "topology": default_topology(cfg.num_devices)}),
+        dynamics=lambda cfg: FleetConfig(
+            topology=default_topology(cfg.num_devices))),
+    "stream": Scenario(
+        description="live-traffic AL: serve/escalate cascade on the "
+                    "async event loop",
+        split="dirichlet", engine="async", config=stream_config,
+        dynamics=lambda cfg: FleetConfig(
+            async_cfg=default_async(cfg.num_devices),
+            stream=default_stream(cfg.num_devices))),
 }
+
+
+def report_schema(scenario: str) -> Dict[str, frozenset]:
+    """Required keys of the report dicts ``run_experiment(scenario=...)``
+    emits — the single documented telemetry schema (docs/SCENARIOS.md
+    table; conformance-pinned by ``tests/test_fleet.py``).
+
+    Returns ``{"round": ..., "repeat": ...}`` frozensets: every per-round
+    (or per-event) report dict must carry at least the ``"round"`` keys,
+    every repeat-level report at least the ``"repeat"`` keys.  Drivers may
+    add more (the schema is a floor, not a ceiling).  ``scenario="paper"``
+    runs the single-round host path, whose repeat report IS the round
+    report (``initial_acc``/``device_histories`` instead of a ``rounds``
+    list).
+    """
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}: use "
+                         + " | ".join(SCENARIOS))
+    scn = SCENARIOS[scenario]
+    if scn.config is None:  # paper: single-round host path
+        keys = frozenset({"initial_acc", "aggregated_acc", "aggregation",
+                          "device_histories", "comms"})
+        return {"round": keys, "repeat": keys}
+    fleet = scn.dynamics(scn.config(8))
+    round_keys = {"round", "aggregated_acc", "aggregation", "comms"}
+    repeat_keys = {"rounds", "comms"}
+    if scn.engine == "async":
+        round_keys |= {"sim_time", "arrivals", "timer_fired", "staleness"}
+        repeat_keys |= {"async"}
+    if fleet.hetero is not None:
+        round_keys |= {"staleness"}
+        repeat_keys |= {"staleness"}
+    if fleet.faults is not None:
+        round_keys |= {"live", "crashed", "dropped", "corrupted"}
+        repeat_keys |= {"faults"}
+    if fleet.guards is not None:
+        round_keys |= {"rejected", "clipped"}
+        repeat_keys |= {"faults"}
+    if fleet.topology is not None:
+        round_keys |= {"fog_sync", "beta", "group_accept", "tiers"}
+        repeat_keys |= {"tiers"}
+    if fleet.stream is not None:
+        round_keys |= set(stream_mod.STREAM_REPORT_KEYS)
+        repeat_keys |= {"stream"}
+    return {"round": frozenset(round_keys),
+            "repeat": frozenset(repeat_keys)}
 
 
 def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
@@ -952,7 +1077,9 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
                    async_cfg: Optional[AsyncConfig] = None,
                    faults: Optional[FaultConfig] = None,
                    guards: Optional[GuardConfig] = None,
-                   topology=None):
+                   topology=None,
+                   stream: Optional[StreamConfig] = None,
+                   fleet: Optional[FleetConfig] = None):
     """End-to-end experiment harness (used by benchmarks + examples).
 
     Units and defaults: ``n_train`` / ``n_test`` are sample counts
@@ -1005,9 +1132,23 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     ``cross_tier_reduction`` headline (edge→fog bytes that did NOT cross
     to the cloud, the hierarchy's bandwidth win).
 
+    ``scenario="stream"`` is the live-traffic regime: the same non-IID
+    ``dirichlet_split`` fleet on the async event loop, but unlabeled
+    requests ARRIVE per device on the virtual clock
+    (``default_stream(num_devices)`` — Poisson rates with a hot/cold
+    skew, temporal label drift, bounded queues) and each committed round
+    runs the serve/escalate cascade (``core.stream``).  Each repeat then
+    carries a ``"stream"`` telemetry entry (offered load, drop/escalation
+    fractions, serve accuracy, queue depths, escalation uplink bytes) on
+    top of the async trajectory.
+
     All scenario names live in the ``SCENARIOS`` registry (one entry per
-    regime: preset maker, data split, native engine, default dynamics);
-    an unknown name raises ``ValueError`` listing the valid ones.
+    regime: preset maker, data split, native engine, a default
+    ``FleetConfig`` of dynamics); an unknown name raises ``ValueError``
+    listing the valid ones.  Every dynamics knob can be passed as the
+    legacy per-feature kwarg or bundled in ``fleet=FleetConfig(...)``
+    (``core.fleet``); scenario defaults fill in only the fields the
+    caller left None.
 
     Every repeat emits a comms telemetry dict (bytes/round, cumulative MB,
     compression ratio, accuracy-vs-bytes trajectory): multi-round repeats
@@ -1019,6 +1160,12 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     from repro.data.digits import make_digit_dataset
     from repro.data.federated_split import dirichlet_split, federated_split
 
+    fleet = fleet_mod.resolve_fleet(
+        fleet, "run_experiment",
+        allowed=("comms", "hetero", "async_cfg", "faults", "guards",
+                 "topology", "stream"),
+        comms=comms, hetero=hetero, async_cfg=async_cfg, faults=faults,
+        guards=guards, topology=topology, stream=stream)
     scn = None
     if scenario is not None:
         if scenario not in SCENARIOS:
@@ -1037,14 +1184,12 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
         raise ValueError(f"pass cfg or a preset scenario ({presets})")
     if scn is not None:
         # scenario-native dynamics fill in ONLY what the caller left None
-        defaults = scn.dynamics(cfg)
-        hetero = hetero if hetero is not None else defaults.get("hetero")
-        async_cfg = (async_cfg if async_cfg is not None
-                     else defaults.get("async_cfg"))
-        faults = faults if faults is not None else defaults.get("faults")
-        guards = guards if guards is not None else defaults.get("guards")
-        topology = (topology if topology is not None
-                    else defaults.get("topology"))
+        # (merged replaces just the non-None caller fields)
+        fleet = scn.dynamics(cfg).merged(
+            **{f: getattr(fleet, f) for f in fleet_mod.FLEET_FIELDS})
+    comms, hetero, async_cfg = fleet.comms, fleet.hetero, fleet.async_cfg
+    faults, guards = fleet.faults, fleet.guards
+    topology, stream = fleet.topology, fleet.stream
     engine = "vmap" if engine is None else engine
 
     reports = []
@@ -1062,9 +1207,7 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
         if (engine in ("fused", "async") or rounds > 1 or mesh is not None):
             _, round_reports = run_federated_rounds(
                 cfg_rep, shards, seed_set, test, rounds=rounds,
-                engine=engine, mesh=mesh, comms=comms, hetero=hetero,
-                async_cfg=async_cfg, faults=faults, guards=guards,
-                topology=topology)
+                engine=engine, mesh=mesh, fleet=fleet)
             rep_report = {
                 "rounds": round_reports,
                 "comms": comms_mod.experiment_telemetry(round_reports),
@@ -1075,6 +1218,10 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
             if engine == "async":
                 rep_report["async"] = async_mod.report_telemetry(
                     round_reports)
+            if stream is not None:
+                rep_report["stream"] = stream_mod.report_stream_telemetry(
+                    round_reports,
+                    image_shape=shards[0].images.shape[1:])
             if faults is not None or guards is not None:
                 rep_report["faults"] = faults_mod.report_summary(
                     round_reports)
@@ -1083,6 +1230,8 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
         else:
             _check_faults_engine(faults, guards, engine)
             _check_topology_engine(topology, engine)
+            _check_stream_engine(stream, engine)
+            _check_async_engine(async_cfg, engine, hetero)
             trainer = Trainer(cfg_rep)
             _, rep_report = run_federated_round(cfg_rep, shards, seed_set,
                                                 test, trainer=trainer,

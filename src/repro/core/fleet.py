@@ -1,0 +1,119 @@
+"""Unified fleet configuration: one frozen bundle for the engine knobs.
+
+The engine entrypoints accreted one optional kwarg per subsystem as the
+repo grew — ``comms=`` (PR 3), ``hetero=`` (PR 4), ``async_cfg=`` (PR 5),
+``faults=``/``guards=``/``live_mask=`` (PR 6), ``topology=`` (PR 7),
+``stream=`` (PR 8).  Eight parallel kwargs on four entrypoints is an API
+smell: call sites can't pass a scenario around as a value, presets return
+ad-hoc dicts, and every new subsystem touches every signature.
+
+``FleetConfig`` bundles them, accepted as a single ``fleet=`` on
+``EdgeEngine.run_rounds_fused`` / ``run_events_fused`` /
+``run_federated_rounds`` / ``run_experiment``.  The legacy kwargs keep
+working through ``resolve_fleet``: each driver builds a ``FleetConfig``
+from whatever form the caller used, warning when BOTH forms are mixed
+(legacy values win, field by field — the least surprising merge for
+incremental migration).  The ``SCENARIOS`` registry presets return
+``FleetConfig``s, so ``run_experiment(scenario="fog")`` and a hand-built
+``fleet=FleetConfig(topology=...)`` are the same code path.
+
+A ``FleetConfig`` is pure configuration — no validation beyond field
+names lives here.  Each engine validates the fields it supports
+(``allowed=`` in ``resolve_fleet``): the sync engine rejects
+``async_cfg``/``stream``, the async engine rejects ``hetero``/
+``live_mask``, exactly the cross-engine contracts the drivers enforced
+before.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from typing import Any, Optional, Tuple
+
+#: every bundled knob, in accretion order — the single source for the
+#: legacy-kwarg shim and the per-driver ``allowed`` subsets
+FLEET_FIELDS = ("comms", "hetero", "async_cfg", "faults", "guards",
+                "live_mask", "topology", "stream")
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Everything that shapes a fleet's dynamics, in one value.
+
+    ``comms``
+        ``core.comms.CommsConfig`` — byte accounting + uplink codecs.
+    ``hetero``
+        ``core.hetero.HeteroConfig`` — stragglers, staleness decay,
+        per-device compute budgets (sync engine only).
+    ``async_cfg``
+        ``core.async_engine.AsyncConfig`` — rounds-free event loop:
+        quorum/timer trigger + latency model (async engine only).
+    ``faults`` / ``guards``
+        ``core.faults.FaultConfig`` / ``GuardConfig`` — churn, fault
+        injection, aggregation-side guards.
+    ``live_mask``
+        host liveness schedule ``[rounds, D]`` (sync engine only; the
+        async loop has no round grid to key it against).
+    ``topology``
+        ``core.topology.FogTopology`` — two-tier edge×fog hierarchy.
+    ``stream``
+        ``core.stream.StreamConfig`` — live-traffic arrivals + the
+        serve/escalate cascade (async engine only).
+
+    All fields default to None (off).  Frozen: scenario presets hand out
+    shared instances safely.
+    """
+
+    comms: Optional[Any] = None
+    hetero: Optional[Any] = None
+    async_cfg: Optional[Any] = None
+    faults: Optional[Any] = None
+    guards: Optional[Any] = None
+    live_mask: Optional[Any] = None
+    topology: Optional[Any] = None
+    stream: Optional[Any] = None
+
+    def set_fields(self) -> Tuple[str, ...]:
+        """Names of the knobs that are actually on."""
+        return tuple(f for f in FLEET_FIELDS
+                     if getattr(self, f) is not None)
+
+    def merged(self, **overrides) -> "FleetConfig":
+        """A copy with the given (non-None) fields replaced — how
+        ``run_experiment`` layers caller knobs over a scenario preset."""
+        live = {k: v for k, v in overrides.items() if v is not None}
+        return replace(self, **live) if live else self
+
+
+def resolve_fleet(fleet: Optional[FleetConfig], context: str,
+                  allowed: Tuple[str, ...] = FLEET_FIELDS,
+                  **legacy) -> FleetConfig:
+    """Merge the legacy per-feature kwargs with a ``fleet=`` bundle.
+
+    ``fleet=None`` builds a ``FleetConfig`` from the legacy kwargs — the
+    pure-legacy call is bitwise the bundled one (same config objects,
+    same jit cache keys; pinned by ``tests/test_fleet.py``).  Mixing both
+    forms warns and lets the explicitly-passed legacy values win field by
+    field.  Fields outside ``allowed`` that end up set raise with the
+    driver's name — the cross-engine contracts (e.g. no ``stream`` on the
+    sync engine) live here once instead of per driver.
+    """
+    unknown = sorted(set(legacy) - set(FLEET_FIELDS))
+    if unknown:
+        raise ValueError(f"{context}: unknown fleet knob(s) {unknown}; "
+                         f"valid: {list(FLEET_FIELDS)}")
+    live = {k: v for k, v in legacy.items() if v is not None}
+    if fleet is None:
+        fleet = FleetConfig(**live)
+    elif live:
+        warnings.warn(
+            f"{context}: both fleet= and legacy kwarg(s) {sorted(live)} "
+            f"were passed; the legacy values take precedence — migrate "
+            f"them into the FleetConfig", stacklevel=3)
+        fleet = replace(fleet, **live)
+    bad = sorted(set(fleet.set_fields()) - set(allowed))
+    if bad:
+        raise ValueError(
+            f"{context} does not support fleet field(s) {bad}; "
+            f"supported here: {sorted(allowed)}")
+    return fleet

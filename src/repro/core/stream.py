@@ -1,0 +1,310 @@
+"""Live-traffic streaming for the async event loop (``scenario="stream"``).
+
+Every engine so far trains on STATIC pre-split pools: the whole unlabeled
+set exists at t = 0 and the only dynamics are the fleet's.  The paper's
+fog platform exists to absorb "unprecedented generation of data" — traffic
+that ARRIVES.  This module makes arrival a first-class, fully-traced axis
+of the async event loop (``core.async_engine``):
+
+* **Arrival process on the virtual clock.**  Per aggregation event, each
+  device receives ``n ~ Poisson(rate · Δt)`` unlabeled requests, where
+  ``Δt`` is the simulated-seconds gap the event spans and ``rate`` comes
+  from a per-device profile (``device_arrival_rates`` — the same log-spaced
+  skew shape as the latency model).  ``burst`` overdisperses the rate
+  mean-preservingly; ``process="det"`` is the deterministic fluid limit.
+
+* **Temporal label drift.**  Arrivals are sampled from the device's shard
+  under ``drift_logits``: a von-Mises-style tilt that rotates through the
+  label space with period ``drift_period`` — a NATURAL non-IID axis (what
+  the fleet sees at t=0 is not what it sees at t=T) on top of the spatial
+  Dirichlet skew.
+
+* **Bounded queues (backpressure).**  Each device holds at most
+  ``queue_cap`` pending requests; overflow is DROPPED and counted.  The
+  queue is a fixed-shape ``(idx, valid)`` pair so append/serve/escalate
+  are pure traced index ops (``queue_append``), vmappable over the device
+  axis and shardable over the mesh.
+
+* **Serve / escalate / drop.**  Returning devices score their queue with
+  the acquisition scorer and ``core.cascade.cascade_decide`` picks, per
+  event: confident requests SERVED locally (answered by the edge model,
+  graded against ground truth for telemetry), the top-``escalate_k`` most
+  informative ESCALATED to the fog (labeled + added to the training pool —
+  active learning on traffic), the rest stay queued until the cap drops
+  them.  Escalations are uplink bytes (``comms.sample_bytes`` per sample).
+
+``arrival_rate=0`` keeps every queue empty and every decision masked out:
+the stream engine reduces to the plain async event loop ≤ 1e-5 under vmap
+and the mesh (pinned by ``tests/test_stream.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+PROCESSES = ("poisson", "det")
+SELECTIONS = ("score", "random")
+
+#: per-event telemetry rows every stream run emits (scalars except
+#: ``queue_depth``, a per-device ``[D]`` row) — the report-schema contract
+STREAM_REPORT_KEYS = ("offered", "stream_dropped", "served",
+                      "serve_correct", "escalated", "queue_depth")
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    """Static policy for live-traffic arrivals on the async event loop.
+
+    Traffic (rates in requests per SIMULATED second per device):
+
+    ``arrival_rate``
+        float ≥ 0 (default ``1.0``).  Fleet-wide geometric-mean arrival
+        rate.  ``0`` disables the stream (the exact-reduction limit).
+    ``device_rates``
+        optional explicit per-device rates (tuple of length D; overrides
+        ``arrival_rate``/``rate_skew``).
+    ``rate_skew``
+        float ≥ 1 (default ``1.0``).  Ratio of the hottest device's rate
+        to the coldest; rates are log-spaced over
+        ``[rate/√skew, rate·√skew]`` (device 0 coldest).
+    ``burst``
+        float ≥ 0 (default ``0.0``).  Mean-preserving overdispersion: the
+        effective rate per draw is ``rate·(1 + burst·(E−1))``, ``E~Exp(1)``.
+    ``process``
+        ``"poisson" | "det"`` (default ``"poisson"``).  ``det`` rounds
+        ``rate·Δt`` — the deterministic fluid limit for tests/benches.
+    ``queue_cap``
+        int ≥ 1 (default ``16``).  Backpressure: at most this many pending
+        requests per device; overflow drops (counted in telemetry).
+    ``max_arrivals``
+        int ≥ 1 (default ``8``).  Static per-event arrival batch shape;
+        counts above it drop (size it ≥ the typical ``rate·Δt``).
+
+    Cascade (scores are acquisition-scorer entropies, nats — for 10
+    classes the range is [0, ln 10 ≈ 2.3]):
+
+    ``serve_threshold``
+        float (default ``0.5``).  Queued requests scoring ≤ this are
+        answered locally by the edge model and leave the queue.
+    ``escalate_threshold``
+        float (default ``1.0``).  Requests scoring ≥ this are escalation
+        candidates; the top-``escalate_k`` per event are labeled at the
+        fog and join the device's training pool.
+    ``escalate_k``
+        int in [1, queue_cap] (default ``1``).  Escalation budget per
+        device per event (each escalation is one labeled-sample uplink).
+    ``selection``
+        ``"score" | "random"`` (default ``"score"``).  ``random`` spends
+        the SAME escalation budget on uniformly-random queued requests —
+        the control arm the bench gate compares against.
+
+    Drift:
+
+    ``drift_kappa``
+        float ≥ 0 (default ``0.0``).  Concentration of the temporal label
+        tilt (0 = stationary uniform sampling over the shard).
+    ``drift_period``
+        float, simulated seconds (default ``0.0``).  Period of one full
+        rotation through the label space; required > 0 when ``drift_kappa``
+        > 0.
+
+    ``seed``
+        int (default ``0``).  Seeds the arrival/selection draws on a
+        DEDICATED key stream (independent of the experiment and latency
+        seeds, so zero-rate runs replay the base engine's randomness
+        bit-for-bit).
+    """
+
+    arrival_rate: float = 1.0
+    device_rates: Optional[Tuple[float, ...]] = None
+    rate_skew: float = 1.0
+    burst: float = 0.0
+    process: str = "poisson"
+    queue_cap: int = 16
+    max_arrivals: int = 8
+    serve_threshold: float = 0.5
+    escalate_threshold: float = 1.0
+    escalate_k: int = 1
+    selection: str = "score"
+    drift_kappa: float = 0.0
+    drift_period: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.arrival_rate < 0.0:
+            raise ValueError(
+                f"arrival_rate must be >= 0 requests/simulated second, "
+                f"got {self.arrival_rate}")
+        if self.rate_skew < 1.0:
+            raise ValueError(
+                f"rate_skew is hottest/coldest >= 1, got {self.rate_skew}")
+        if self.burst < 0.0:
+            raise ValueError(f"burst must be >= 0, got {self.burst}")
+        if self.process not in PROCESSES:
+            raise ValueError(f"unknown arrival process {self.process!r}: "
+                             f"use {' | '.join(PROCESSES)}")
+        if self.queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1, got {self.queue_cap}")
+        if self.max_arrivals < 1:
+            raise ValueError(
+                f"max_arrivals must be >= 1, got {self.max_arrivals}")
+        if not 1 <= self.escalate_k <= self.queue_cap:
+            raise ValueError(
+                f"escalate_k must be in [1, queue_cap={self.queue_cap}], "
+                f"got {self.escalate_k}")
+        if self.selection not in SELECTIONS:
+            raise ValueError(f"unknown selection {self.selection!r}: "
+                             f"use {' | '.join(SELECTIONS)}")
+        if self.drift_kappa < 0.0:
+            raise ValueError(
+                f"drift_kappa must be >= 0, got {self.drift_kappa}")
+        if self.drift_kappa > 0.0 and self.drift_period <= 0.0:
+            raise ValueError(
+                "drift_kappa > 0 needs drift_period > 0 simulated seconds")
+
+
+def device_arrival_rates(cfg: StreamConfig, num_devices: int) -> np.ndarray:
+    """Per-device arrival rate ``[D] float32``, requests/simulated second.
+
+    Explicit ``cfg.device_rates`` win (shape-checked); otherwise rates are
+    log-spaced over ``[rate/√skew, rate·√skew]`` so hottest/coldest =
+    ``rate_skew`` and the geometric mean is ``arrival_rate`` (device 0
+    coldest — the mirror of ``device_latency_means``).  Host-side numpy;
+    the result enters the compiled loop as a traced ``[D]`` argument, so
+    changing the traffic profile does NOT recompile.
+    """
+    if cfg.device_rates is not None:
+        rates = np.asarray(cfg.device_rates, np.float32)
+        if rates.shape != (num_devices,):
+            raise ValueError(f"device_rates shape {rates.shape} != "
+                             f"({num_devices},)")
+        if (rates < 0).any():
+            raise ValueError("device_rates must be >= 0 requests/second")
+        return rates
+    if cfg.rate_skew == 1.0 or num_devices == 1:
+        return np.full((num_devices,), cfg.arrival_rate, np.float32)
+    half = np.sqrt(cfg.rate_skew)
+    return (cfg.arrival_rate
+            * np.geomspace(1.0 / half, half, num_devices)).astype(np.float32)
+
+
+def stream_keys(cfg: StreamConfig, start: int, count: int):
+    """One arrival/selection key per event ``[count]``, folded at the
+    ABSOLUTE event index (the chaining contract: a resumed run replays the
+    same traffic).  Dedicated stream — independent of the experiment and
+    latency seeds."""
+    base = jax.random.key(cfg.seed + 0x737472)
+    return jax.vmap(lambda t: jax.random.fold_in(base, t))(
+        jnp.arange(start, start + count))
+
+
+def stream_static_key(cfg: Optional[StreamConfig]):
+    """The shape-/program-determining statics for the jit cache key (the
+    thresholds, rates, burst, and drift knobs are all traced)."""
+    if cfg is None:
+        return None
+    return (cfg.process, cfg.queue_cap, cfg.max_arrivals, cfg.escalate_k,
+            cfg.selection)
+
+
+def draw_arrival_count(process: str, key, rate, dt, burst, cap: int):
+    """How many requests arrived in a ``dt``-second gap (traced scalar).
+
+    ``rate``/``dt``/``burst`` are traced; ``process`` and ``cap`` static.
+    ``burst`` overdisperses the rate mean-preservingly
+    (``rate·(1 + burst·(E−1))``, ``E ~ Exp(1)``); counts clip to ``cap``
+    so the per-event arrival batch keeps a static shape.
+    """
+    k_b, k_n = jax.random.split(key)
+    boost = 1.0 + burst * (jax.random.exponential(k_b) - 1.0)
+    lam = jnp.maximum(rate * dt * boost, 0.0)
+    if process == "det":
+        n = jnp.round(lam).astype(jnp.int32)
+    else:
+        n = jax.random.poisson(k_n, lam).astype(jnp.int32)
+    return jnp.clip(n, 0, cap)
+
+
+def drift_logits(labels_d, valid_d, kappa, period, t, num_classes: int):
+    """Categorical logits ``[n_pad]`` over one device's dataset slots under
+    temporal label drift.
+
+    A von-Mises-style tilt on the label circle:
+    ``κ·cos(2π·(y/C − t/period))`` — the favored class rotates through all
+    ``C`` labels once per ``period`` simulated seconds.  ``κ = 0`` is
+    uniform over the shard (stationary traffic); padding slots get ``-inf``.
+    """
+    phase = jnp.where(period > 0, t / jnp.maximum(period, 1e-9), 0.0)
+    ang = 2.0 * jnp.pi * (labels_d.astype(jnp.float32) / num_classes - phase)
+    return jnp.where(valid_d, kappa * jnp.cos(ang), -jnp.inf)
+
+
+def queue_append(q_idx, q_valid, new_idx, new_valid):
+    """Append an arrival batch to one device's bounded FIFO queue.
+
+    ``(q_idx, q_valid) [Q]`` is the fixed-shape queue, ``(new_idx,
+    new_valid) [A]`` the batch.  Live entries are compacted to the front
+    (FIFO-stable), arrivals fill the free tail, and overflow past ``Q`` is
+    DROPPED (returned as a count — the backpressure signal).  Pure traced
+    index ops: vmap over the device axis.
+    """
+    Q = q_idx.shape[0]
+    # stable compaction: live entries keep their relative order up front
+    order = jnp.argsort((~q_valid).astype(jnp.int32) * (Q + 1)
+                        + jnp.arange(Q, dtype=jnp.int32))
+    q_idx = jnp.take(q_idx, order)
+    q_valid = jnp.take(q_valid, order)
+    n_q = jnp.sum(q_valid.astype(jnp.int32))
+    slots = n_q + jnp.cumsum(new_valid.astype(jnp.int32)) - 1
+    target = jnp.where(new_valid, slots, Q)  # invalid → out of bounds
+    dropped = jnp.sum((new_valid & (slots >= Q)).astype(jnp.int32))
+    q_idx = q_idx.at[target].set(new_idx, mode="drop")
+    q_valid = q_valid.at[target].set(True, mode="drop")
+    return q_idx, q_valid, dropped
+
+
+def stream_telemetry(recs, image_shape=None) -> dict:
+    """Host-side traffic summary from the fused event recs: offered load,
+    escalation fraction, serve accuracy, backpressure, and — given the
+    sample shape — the escalation uplink bytes (each escalated request is
+    one labeled-sample upload, ``comms.sample_bytes`` each)."""
+    offered = np.asarray(recs["offered"], np.float64)
+    dropped = np.asarray(recs["stream_dropped"], np.float64)
+    served = np.asarray(recs["served"], np.float64)
+    correct = np.asarray(recs["serve_correct"], np.float64)
+    escal = np.asarray(recs["escalated"], np.float64)
+    depth = np.asarray(recs["queue_depth"], np.float64)
+    out = {
+        "events": int(offered.shape[0]),
+        "offered_total": int(offered.sum()),
+        "dropped_total": int(dropped.sum()),
+        "drop_fraction": float(dropped.sum() / max(offered.sum(), 1.0)),
+        "served_total": int(served.sum()),
+        "serve_accuracy": float(correct.sum() / max(served.sum(), 1.0)),
+        "escalated_total": int(escal.sum()),
+        "escalation_fraction": float(escal.sum() / max(offered.sum(), 1.0)),
+        "offered_per_event": [float(x) for x in offered],
+        "escalated_per_event": [float(x) for x in escal],
+        "mean_queue_depth": float(depth.mean()) if depth.size else 0.0,
+        "max_queue_depth": int(depth.max()) if depth.size else 0,
+    }
+    if image_shape is not None:
+        from repro.core import comms as comms_mod
+        out["escalation_uplink_bytes"] = (
+            int(escal.sum()) * comms_mod.sample_bytes(image_shape))
+    return out
+
+
+def report_stream_telemetry(round_reports, image_shape=None) -> dict:
+    """The same traffic summary as ``stream_telemetry``, built from the
+    per-event report dicts the federated driver emits (the
+    ``run_experiment`` contract: every stream repeat carries a ``"stream"``
+    telemetry entry).  Reassembles the stacked recs and delegates."""
+    return stream_telemetry(
+        {k: [r[k] for r in round_reports] for k in STREAM_REPORT_KEYS},
+        image_shape=image_shape)

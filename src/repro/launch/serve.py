@@ -5,6 +5,13 @@ loop against the per-family KV/state caches. On CPU this serves the
 REDUCED config; on a TPU slice the same step functions run the full config
 over the production mesh (launch/dryrun.py proves every decode shape
 lowers there).
+
+This is the LM-zoo decode path. The federated-AL analogue of serving —
+live traffic scored in-flight, answered at the edge or escalated to the
+fog for labeling — is the SIMULATED ``scenario="stream"`` pipeline
+(``core/stream.py`` + ``core/cascade.py`` on the async event loop; see
+``examples/stream_fleet.py``). Wiring a stream-trained edge model into
+this real request loop is the open serve-side item in ROADMAP.md.
 """
 from __future__ import annotations
 

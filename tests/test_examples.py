@@ -23,6 +23,7 @@ EXAMPLES = [
     ("examples.quickstart", ["--quick"]),
     ("examples.async_fleet", ["--quick"]),
     ("examples.churn_fleet", ["--quick"]),
+    ("examples.stream_fleet", ["--quick"]),
     ("examples.fog_fleet", ["--quick"]),
     ("examples.massive_fleet", ["--quick"]),
     ("examples.massive_cascade", ["--quick"]),

@@ -1,0 +1,232 @@
+"""The unified FleetConfig API (core.fleet): PR 8's satellite contracts.
+
+* the legacy per-feature kwargs and a ``fleet=`` bundle are the SAME call
+  (bitwise-identical results — one jit cache entry, not two);
+* mixing both forms warns once and the legacy values win field by field;
+* each driver rejects fleet fields its engine can't trace (the
+  cross-engine contracts now live in ``resolve_fleet``);
+* ``report_schema(scenario)`` is a floor every driver's reports satisfy;
+* ``FleetConfig.merged`` / ``set_fields`` / ``resolve_fleet`` units.
+"""
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.async_engine import AsyncConfig
+from repro.core.comms import CommsConfig
+from repro.core.engine import EdgeEngine
+from repro.core.faults import FaultConfig, GuardConfig
+from repro.core.federated import (SCENARIOS, FederatedALConfig, Trainer,
+                                  report_schema, run_experiment,
+                                  run_federated_rounds)
+from repro.core.fleet import FLEET_FIELDS, FleetConfig, resolve_fleet
+from repro.core.hetero import HeteroConfig
+from repro.core.stream import StreamConfig
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROUNDS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = FederatedALConfig(num_devices=8, acquisitions=2, mc_samples=4,
+                            k_per_acquisition=3, pool_window=16,
+                            train_steps_per_acq=4, initial_train=10,
+                            initial_train_steps=5, seed=7)
+    full = make_digit_dataset(160, seed=1)
+    test = make_digit_dataset(48, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def _engine(cfg, shards, seed_set, test, *, rounds=ROUNDS):
+    total = cfg.acquisitions * rounds
+    trainer = Trainer(replace(cfg, acquisitions=total))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total)
+    params0 = trainer.init_params(jax.random.key(0))
+    return eng, params0
+
+
+def _leaves_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ----------------------------------------------------------- shim parity
+def test_fused_legacy_kwargs_match_fleet_bitwise(setup):
+    """run_rounds_fused(comms=..., faults=...) and run_rounds_fused(
+    fleet=FleetConfig(...)) are the SAME program — bitwise, not ≤ tol."""
+    cfg, shards, seed_set, test = setup
+    comms = CommsConfig(compression="topk", topk_fraction=0.5)
+    faults = FaultConfig(crash_rate=0.2, seed=5)
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    s_l, r_l, f_l = eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                                         comms=comms, faults=faults)
+    s_f, r_f, f_f = eng.run_rounds_fused(
+        eng.init_state(params0), ROUNDS,
+        fleet=FleetConfig(comms=comms, faults=faults))
+    _leaves_equal(f_l, f_f)
+    _leaves_equal(s_l.params, s_f.params)
+    for k in r_l:
+        _leaves_equal(r_l[k], r_f[k])
+
+
+def test_async_legacy_kwargs_match_fleet_bitwise(setup):
+    cfg, shards, seed_set, test = setup
+    acfg = AsyncConfig(quorum=3, timer=4.0, dist="exp", mean_latency=1.0)
+    stream = StreamConfig(arrival_rate=2.0, queue_cap=8, max_arrivals=4,
+                          escalate_k=2)
+    total = cfg.acquisitions * ROUNDS + stream.escalate_k * ROUNDS
+    trainer = Trainer(replace(cfg, acquisitions=total))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total)
+    params0 = trainer.init_params(jax.random.key(0))
+    _, r_l, f_l = eng.run_async(eng.init_state(params0), ROUNDS,
+                                async_cfg=acfg, stream=stream)
+    _, r_f, f_f = eng.run_async(
+        eng.init_state(params0), ROUNDS,
+        fleet=FleetConfig(async_cfg=acfg, stream=stream))
+    _leaves_equal(f_l, f_f)
+    for k in r_l:
+        _leaves_equal(r_l[k], r_f[k])
+
+
+def test_mixing_forms_warns_and_legacy_wins(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    comms = CommsConfig(compression="topk", topk_fraction=0.5)
+    _, r_pure, f_pure = eng.run_rounds_fused(eng.init_state(params0),
+                                             ROUNDS, comms=comms)
+    with pytest.warns(UserWarning, match="legacy values take precedence"):
+        _, r_mix, f_mix = eng.run_rounds_fused(
+            eng.init_state(params0), ROUNDS, comms=comms,
+            fleet=FleetConfig(
+                comms=CommsConfig(compression="topk", topk_fraction=0.9)))
+    _leaves_equal(f_pure, f_mix)
+    for k in r_pure:
+        _leaves_equal(r_pure[k], r_mix[k])
+
+
+# ------------------------------------------------------ engine contracts
+def test_sync_engine_rejects_stream_and_async(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    with pytest.raises(ValueError, match="does not support fleet field"):
+        eng.run_rounds_fused(eng.init_state(params0), ROUNDS,
+                             fleet=FleetConfig(stream=StreamConfig()))
+    with pytest.raises(ValueError, match="does not support fleet field"):
+        eng.run_rounds_fused(
+            eng.init_state(params0), ROUNDS,
+            fleet=FleetConfig(async_cfg=AsyncConfig(quorum=2)))
+
+
+def test_async_engine_rejects_hetero_and_live_mask(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    with pytest.raises(ValueError, match="does not support fleet field"):
+        eng.run_async(eng.init_state(params0), ROUNDS,
+                      fleet=FleetConfig(async_cfg=AsyncConfig(quorum=2),
+                                        hetero=HeteroConfig()))
+    with pytest.raises(ValueError, match="does not support fleet field"):
+        eng.run_async(
+            eng.init_state(params0), ROUNDS,
+            fleet=FleetConfig(async_cfg=AsyncConfig(quorum=2),
+                              live_mask=np.ones((ROUNDS, 8), np.float32)))
+
+
+def test_async_requires_async_cfg(setup):
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    with pytest.raises(ValueError, match="needs an AsyncConfig"):
+        eng.run_async(eng.init_state(params0), ROUNDS,
+                      fleet=FleetConfig(stream=StreamConfig()))
+
+
+# -------------------------------------------------------- resolve_fleet
+def test_resolve_fleet_units():
+    comms = CommsConfig(compression="topk", topk_fraction=0.5)
+    built = resolve_fleet(None, "t", comms=comms)
+    assert built.comms is comms
+    assert built.set_fields() == ("comms",)
+
+    passed = FleetConfig(comms=comms)
+    assert resolve_fleet(passed, "t") is passed
+
+    with pytest.raises(ValueError, match="unknown fleet knob"):
+        resolve_fleet(None, "t", typo=comms)
+
+    with pytest.raises(ValueError, match="does not support fleet field"):
+        resolve_fleet(FleetConfig(stream=StreamConfig()), "t",
+                      allowed=("comms",))
+
+    with pytest.warns(UserWarning):
+        mixed = resolve_fleet(FleetConfig(comms=None), "t", comms=comms)
+    assert mixed.comms is comms
+
+
+def test_fleet_config_units():
+    base = FleetConfig(comms=CommsConfig())
+    assert base.merged() is base
+    assert base.merged(comms=None) is base          # None never clobbers
+    g = GuardConfig(norm_factor=4.0)
+    layered = base.merged(guards=g)
+    assert layered.guards is g and layered.comms is base.comms
+    assert set(FLEET_FIELDS) == {
+        "comms", "hetero", "async_cfg", "faults", "guards", "live_mask",
+        "topology", "stream"}
+
+
+# -------------------------------------------------------- report schema
+def test_report_schema_known_scenarios():
+    for name in SCENARIOS:
+        schema = report_schema(name)
+        assert set(schema) == {"round", "repeat"}
+    assert "initial_acc" in report_schema("paper")["round"]
+    assert set(report_schema("stream")["round"]) >= {
+        "offered", "served", "escalated", "queue_depth"}
+    assert "stream" in report_schema("stream")["repeat"]
+    assert "tiers" in report_schema("fog")["repeat"]
+    with pytest.raises(ValueError, match="unknown scenario"):
+        report_schema("nope")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", ["massive", "hetero", "async"])
+def test_reports_conform_to_schema(scenario):
+    """Small end-to-end runs of the fleet scenarios: every report carries
+    at least the documented keys (the schema is a floor)."""
+    scn = SCENARIOS[scenario]
+    cfg = scn.config(4)
+    cfg = replace(cfg, acquisitions=1, k_per_acquisition=2, pool_window=8,
+                  mc_samples=2, train_steps_per_acq=2, initial_train=8,
+                  initial_train_steps=2)
+    reports = run_experiment(scenario=scenario, num_devices=4, rounds=2,
+                             cfg=cfg, n_test=32)
+    schema = report_schema(scenario)
+    rep = reports[0]
+    missing = schema["repeat"] - set(rep)
+    assert not missing, f"repeat report missing {sorted(missing)}"
+    for r in rep["rounds"]:
+        missing = schema["round"] - set(r)
+        assert not missing, f"round report missing {sorted(missing)}"
+
+
+def test_run_federated_rounds_accepts_fleet(setup):
+    cfg, shards, seed_set, test = setup
+    comms = CommsConfig(compression="topk", topk_fraction=0.5)
+    _, r_l = run_federated_rounds(cfg, shards, seed_set, test,
+                                  rounds=ROUNDS, engine="fused",
+                                  comms=comms)
+    _, r_f = run_federated_rounds(cfg, shards, seed_set, test,
+                                  rounds=ROUNDS, engine="fused",
+                                  fleet=FleetConfig(comms=comms))
+    for a, b in zip(r_l, r_f):
+        assert a["aggregated_acc"] == b["aggregated_acc"]

@@ -1,0 +1,367 @@
+"""Live-traffic streaming (core.stream) + the selection cascade: PR 8's
+contracts.
+
+* a zero-arrival-rate stream reduces to the plain async event loop
+  ≤ 1e-5, under vmap AND under the shard_map mesh (the exact-reduction
+  acceptance criterion);
+* a streaming run stays ONE dispatch, emits the STREAM_REPORT_KEYS
+  telemetry rows, and escalations grow the training pool;
+* ``cascade_decide`` honors the all-serve / all-escalate threshold edges
+  and never labels the same dataset slot twice in one event;
+* the queue, arrival, drift, and rate-profile primitives behave;
+* ``StreamConfig`` validation and the ``scenario="stream"`` driver glue.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counters
+from repro.core.async_engine import AsyncConfig
+from repro.core.cascade import cascade_decide
+from repro.core.engine import EdgeEngine
+from repro.core.federated import (FederatedALConfig, Trainer,
+                                  run_experiment, stream_config)
+from repro.core.stream import (StreamConfig, device_arrival_rates,
+                               draw_arrival_count, drift_logits,
+                               queue_append, stream_telemetry)
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.launch.mesh import make_device_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+EVENTS = 2
+
+ASYNC_CFG = AsyncConfig(quorum=3, timer=4.0, dist="exp", mean_latency=1.0,
+                        latency_skew=4.0)
+
+STREAM_CFG = StreamConfig(arrival_rate=3.0, rate_skew=4.0, queue_cap=8,
+                          max_arrivals=4, serve_threshold=0.6,
+                          escalate_threshold=1.0, escalate_k=2,
+                          drift_kappa=2.0, drift_period=8.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # 8 devices so the mesh tests divide evenly over the CI sharded job's
+    # 8 fake host devices, mirroring tests/test_async_engine.py
+    cfg = FederatedALConfig(num_devices=8, acquisitions=2, mc_samples=4,
+                            k_per_acquisition=3, pool_window=16,
+                            train_steps_per_acq=4, initial_train=10,
+                            initial_train_steps=5, seed=7)
+    full = make_digit_dataset(160, seed=1)
+    test = make_digit_dataset(48, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def _engine(cfg, shards, seed_set, test, *, events=EVENTS, mesh=None):
+    # room for the round acquisitions PLUS escalate_k escalations/event
+    total = cfg.acquisitions * events + STREAM_CFG.escalate_k * events
+    trainer = Trainer(replace(cfg, acquisitions=total))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total, mesh=mesh)
+    params0 = trainer.init_params(jax.random.key(0))
+    return eng, params0
+
+
+def _leaves_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol)
+
+
+# ---------------------------------------------------------- exact reduction
+def test_zero_rate_reduces_to_plain_async(setup):
+    """arrival_rate=0 keeps every queue empty and every cascade decision
+    masked out: the stream program must reproduce the plain event loop
+    ≤ 1e-5 (same fog model, same state, same shared telemetry)."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    s_p, r_p, f_p = eng.run_async(eng.init_state(params0), EVENTS,
+                                  async_cfg=ASYNC_CFG)
+    s_z, r_z, f_z = eng.run_async(eng.init_state(params0), EVENTS,
+                                  async_cfg=ASYNC_CFG,
+                                  stream=StreamConfig(arrival_rate=0.0))
+    _leaves_close(f_p, f_z)
+    _leaves_close(s_p.params, s_z.params)
+    _leaves_close(s_p.pool, s_z.pool, atol=0)
+    for k in ("weights", "n_labeled", "sim_time", "agg_acc"):
+        np.testing.assert_allclose(np.asarray(r_p[k]), np.asarray(r_z[k]),
+                                   atol=1e-5)
+    assert np.asarray(r_z["offered"]).sum() == 0
+    assert np.asarray(r_z["escalated"]).sum() == 0
+    assert np.asarray(r_z["queue_depth"]).sum() == 0
+
+
+def test_zero_rate_reduces_on_mesh(setup):
+    """The same exact-reduction contract under the shard_map device mesh
+    (1 host device locally; 8 fake devices in the CI sharded job)."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test,
+                           mesh=make_device_mesh())
+    s_p, r_p, f_p = eng.run_async(eng.init_state(params0), EVENTS,
+                                  async_cfg=ASYNC_CFG)
+    s_z, r_z, f_z = eng.run_async(eng.init_state(params0), EVENTS,
+                                  async_cfg=ASYNC_CFG,
+                                  stream=StreamConfig(arrival_rate=0.0))
+    _leaves_close(f_p, f_z)
+    np.testing.assert_allclose(np.asarray(r_p["agg_acc"]),
+                               np.asarray(r_z["agg_acc"]), atol=1e-5)
+    assert np.asarray(r_z["offered"]).sum() == 0
+
+
+def test_stream_mesh_matches_vmap(setup):
+    """Live traffic is mesh-invariant: per-device stream keys fold at
+    GLOBAL slot ids, so the mesh run reproduces the vmap run ≤ 1e-5."""
+    cfg, shards, seed_set, test = setup
+    eng_v, params0 = _engine(cfg, shards, seed_set, test)
+    eng_m, _ = _engine(cfg, shards, seed_set, test,
+                       mesh=make_device_mesh())
+    _, r_v, f_v = eng_v.run_async(eng_v.init_state(params0), EVENTS,
+                                  async_cfg=ASYNC_CFG, stream=STREAM_CFG)
+    _, r_m, f_m = eng_m.run_async(eng_m.init_state(params0), EVENTS,
+                                  async_cfg=ASYNC_CFG, stream=STREAM_CFG)
+    _leaves_close(f_v, f_m)
+    for k in ("offered", "served", "escalated", "stream_dropped",
+              "serve_correct", "queue_depth"):
+        np.testing.assert_allclose(np.asarray(r_v[k]), np.asarray(r_m[k]),
+                                   atol=1e-5)
+
+
+# ------------------------------------------------------------- one dispatch
+def test_stream_one_dispatch_and_telemetry(setup):
+    """Arrival-driven AL + cascade serve/escalate stays ONE dispatch and
+    emits every STREAM_REPORT_KEYS row with the documented shapes."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    eng.run_async(eng.init_state(params0), EVENTS, async_cfg=ASYNC_CFG,
+                  stream=STREAM_CFG)                  # warmup/compile
+    state = eng.init_state(params0)
+    counters.reset_dispatches()
+    _, recs, final = eng.run_async(state, EVENTS, async_cfg=ASYNC_CFG,
+                                   stream=STREAM_CFG)
+    assert counters.dispatch_count() == 1
+    for k in ("offered", "stream_dropped", "served", "serve_correct",
+              "escalated"):
+        assert np.asarray(recs[k]).shape == (EVENTS,)
+    assert np.asarray(recs["queue_depth"]).shape == (EVENTS,
+                                                     cfg.num_devices)
+    tel = stream_telemetry(recs, image_shape=(8, 8, 1))
+    assert tel["offered_total"] > 0
+    assert tel["escalation_uplink_bytes"] >= 0
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(final))
+
+
+def test_escalations_grow_pool(setup):
+    """Escalated requests are labeled at the fog and join the device's
+    training pool: labeled counts must exceed the plain async run's."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    _, r_p, _ = eng.run_async(eng.init_state(params0), EVENTS,
+                              async_cfg=ASYNC_CFG)
+    hot = replace(STREAM_CFG, arrival_rate=6.0, escalate_threshold=0.0)
+    _, r_s, _ = eng.run_async(eng.init_state(params0), EVENTS,
+                              async_cfg=ASYNC_CFG, stream=hot)
+    escalated = float(np.asarray(r_s["escalated"]).sum())
+    assert escalated > 0
+    extra = (np.asarray(r_s["n_labeled"])[-1]
+             - np.asarray(r_p["n_labeled"])[-1]).sum()
+    assert extra == escalated
+
+
+def test_random_selection_spends_same_budget(setup):
+    """The random-control arm escalates from the SAME per-event budget
+    (top-escalate_k among all queued requests, no threshold gate) — the
+    equal-budget comparison the bench gate relies on."""
+    cfg, shards, seed_set, test = setup
+    eng, params0 = _engine(cfg, shards, seed_set, test)
+    hot = replace(STREAM_CFG, arrival_rate=6.0)
+    _, r_r, _ = eng.run_async(eng.init_state(params0), EVENTS,
+                              async_cfg=ASYNC_CFG,
+                              stream=replace(hot, selection="random"))
+    assert float(np.asarray(r_r["escalated"]).sum()) > 0
+
+
+# --------------------------------------------------------- cascade_decide
+def test_cascade_all_serve_edge():
+    """escalate_threshold=+inf: nothing escalates; every valid request at
+    or below serve_threshold is served."""
+    scores = jnp.asarray([0.1, 0.5, 2.0, 0.3])
+    idx = jnp.arange(4, dtype=jnp.int32)
+    valid = jnp.asarray([True, True, True, False])
+    labeled = jnp.zeros((4,), bool)
+    serve, escal, _, sel_ok = cascade_decide(
+        scores, scores, idx, labeled, valid,
+        jnp.float32(0.6), jnp.float32(jnp.inf), 2)
+    assert not bool(escal.any())
+    assert not bool(sel_ok.any())
+    np.testing.assert_array_equal(np.asarray(serve),
+                                  [True, True, False, False])
+
+
+def test_cascade_all_escalate_edge():
+    """serve_threshold=-inf with a floor escalate threshold: the top-k
+    eligible requests escalate, nothing serves."""
+    scores = jnp.asarray([0.1, 0.5, 2.0, 0.3])
+    idx = jnp.arange(4, dtype=jnp.int32)
+    valid = jnp.ones((4,), bool)
+    labeled = jnp.zeros((4,), bool)
+    serve, escal, _, sel_ok = cascade_decide(
+        scores, scores, idx, labeled, valid,
+        jnp.float32(-jnp.inf), jnp.float32(-jnp.inf), 2)
+    assert not bool(serve.any())
+    assert int(escal.sum()) == 2
+    # the two HIGHEST-ranked requests win the budget
+    np.testing.assert_array_equal(np.asarray(escal),
+                                  [False, True, True, False])
+
+
+def test_cascade_dedups_repeated_slot():
+    """The same dataset slot queued twice escalates at most once per
+    event (one fog label per sample)."""
+    scores = jnp.asarray([2.0, 1.9, 1.8])
+    idx = jnp.asarray([5, 5, 7], jnp.int32)   # slot 5 queued twice
+    valid = jnp.ones((3,), bool)
+    labeled = jnp.zeros((3,), bool)
+    _, escal, sel, sel_ok = cascade_decide(
+        scores, scores, idx, labeled, valid,
+        jnp.float32(-jnp.inf), jnp.float32(1.0), 3)
+    kept = np.asarray(jnp.take(idx, sel))[np.asarray(sel_ok)]
+    assert sorted(kept.tolist()) == [5, 7]
+
+
+def test_cascade_skips_already_labeled():
+    scores = jnp.asarray([2.0, 1.5])
+    idx = jnp.arange(2, dtype=jnp.int32)
+    valid = jnp.ones((2,), bool)
+    labeled = jnp.asarray([True, False])
+    _, escal, _, sel_ok = cascade_decide(
+        scores, scores, idx, labeled, valid,
+        jnp.float32(-jnp.inf), jnp.float32(1.0), 2)
+    np.testing.assert_array_equal(np.asarray(escal), [False, True])
+    assert int(sel_ok.sum()) == 1
+
+
+# -------------------------------------------------------------- primitives
+def test_queue_append_fifo_and_overflow():
+    qi = jnp.zeros((4,), jnp.int32)
+    qv = jnp.zeros((4,), bool)
+    qi, qv, drop0 = queue_append(qi, qv, jnp.asarray([3, 4, 5], jnp.int32),
+                                 jnp.ones((3,), bool))
+    assert int(drop0) == 0
+    np.testing.assert_array_equal(np.asarray(qi)[:3], [3, 4, 5])
+    # three more into one free slot: two must drop, FIFO head keeps order
+    qi, qv, drop1 = queue_append(qi, qv, jnp.asarray([6, 7, 8], jnp.int32),
+                                 jnp.ones((3,), bool))
+    assert int(drop1) == 2
+    np.testing.assert_array_equal(np.asarray(qi), [3, 4, 5, 6])
+    assert bool(qv.all())
+
+
+def test_queue_append_compacts_holes():
+    """Served/escalated entries leave holes; the next append compacts the
+    survivors to the front (stable) before filling the tail."""
+    qi = jnp.asarray([9, 8, 7, 6], jnp.int32)
+    qv = jnp.asarray([False, True, False, True])
+    qi, qv, drop = queue_append(qi, qv, jnp.asarray([1], jnp.int32),
+                                jnp.ones((1,), bool))
+    assert int(drop) == 0
+    np.testing.assert_array_equal(np.asarray(qi)[:3], [8, 6, 1])
+    np.testing.assert_array_equal(np.asarray(qv), [True, True, True, False])
+
+
+def test_draw_arrival_count():
+    key = jax.random.key(0)
+    det = draw_arrival_count("det", key, jnp.float32(2.0), jnp.float32(1.5),
+                             jnp.float32(0.0), 8)
+    assert int(det) == 3
+    zero = draw_arrival_count("poisson", key, jnp.float32(0.0),
+                              jnp.float32(10.0), jnp.float32(0.0), 8)
+    assert int(zero) == 0
+    capped = draw_arrival_count("det", key, jnp.float32(100.0),
+                                jnp.float32(1.0), jnp.float32(0.0), 8)
+    assert int(capped) == 8
+
+
+def test_drift_logits_rotates():
+    labels = jnp.arange(10, dtype=jnp.int32)
+    valid = jnp.ones((10,), bool).at[9].set(False)
+    l0 = drift_logits(labels, valid, jnp.float32(2.0), jnp.float32(10.0),
+                      jnp.float32(0.0), 10)
+    l5 = drift_logits(labels, valid, jnp.float32(2.0), jnp.float32(10.0),
+                      jnp.float32(5.0), 10)
+    assert int(jnp.argmax(l0)) == 0      # favored class at t=0 is y=0
+    assert int(jnp.argmax(l5)) == 5      # half a period later: y=C/2
+    assert np.asarray(l0)[9] == -np.inf  # padding slot unreachable
+    flat = drift_logits(labels, valid, jnp.float32(0.0), jnp.float32(0.0),
+                        jnp.float32(3.0), 10)
+    np.testing.assert_allclose(np.asarray(flat)[:9], 0.0)
+
+
+def test_device_arrival_rates_profile():
+    rates = device_arrival_rates(
+        StreamConfig(arrival_rate=2.0, rate_skew=4.0), 8)
+    assert rates.shape == (8,)
+    np.testing.assert_allclose(rates[-1] / rates[0], 4.0, rtol=1e-5)
+    np.testing.assert_allclose(np.exp(np.log(rates).mean()), 2.0,
+                               rtol=1e-5)
+    explicit = device_arrival_rates(
+        StreamConfig(device_rates=(1.0, 3.0)), 2)
+    np.testing.assert_allclose(explicit, [1.0, 3.0])
+    with pytest.raises(ValueError):
+        device_arrival_rates(StreamConfig(device_rates=(1.0,)), 2)
+
+
+def test_stream_config_validation():
+    with pytest.raises(ValueError):
+        StreamConfig(arrival_rate=-1.0)
+    with pytest.raises(ValueError):
+        StreamConfig(rate_skew=0.5)
+    with pytest.raises(ValueError):
+        StreamConfig(process="uniform")
+    with pytest.raises(ValueError):
+        StreamConfig(queue_cap=0)
+    with pytest.raises(ValueError):
+        StreamConfig(escalate_k=17, queue_cap=16)
+    with pytest.raises(ValueError):
+        StreamConfig(selection="greedy")
+    with pytest.raises(ValueError):
+        StreamConfig(drift_kappa=1.0)   # period missing
+
+
+# ------------------------------------------------------------- driver glue
+@pytest.mark.slow
+def test_scenario_stream_driver():
+    """run_experiment(scenario='stream'): async trajectory + the 'stream'
+    repeat telemetry, per-event STREAM_REPORT_KEYS rows."""
+    cfg = stream_config(4, acquisitions=1, k_per_acquisition=2,
+                        pool_window=8, mc_samples=2, train_steps_per_acq=2,
+                        initial_train=8, initial_train_steps=2)
+    reports = run_experiment(scenario="stream", num_devices=4, rounds=2,
+                             cfg=cfg, n_test=32)
+    rep = reports[0]
+    assert "async" in rep and "stream" in rep
+    tel = rep["stream"]
+    assert tel["events"] == 2
+    assert tel["offered_total"] >= 0
+    for r in rep["rounds"]:
+        for k in ("offered", "served", "escalated", "queue_depth"):
+            assert k in r
+
+
+def test_stream_rejected_on_sync_engines():
+    cfg = stream_config(4, acquisitions=1, k_per_acquisition=2,
+                        pool_window=8, mc_samples=2, train_steps_per_acq=2,
+                        initial_train=8, initial_train_steps=2)
+    # the preset bundles async_cfg too, so either check may fire first —
+    # both name the async engine as the only home for streams
+    with pytest.raises(ValueError, match="requires engine='async'"):
+        run_experiment(scenario="stream", num_devices=4, rounds=2, cfg=cfg,
+                       n_test=32, engine="fused")

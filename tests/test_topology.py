@@ -262,8 +262,8 @@ def test_unknown_scenario_lists_valid_names():
 def test_fog_scenario_registered():
     scn = SCENARIOS["fog"]
     assert scn.engine == "fused" and scn.split == "dirichlet"
-    dyn = scn.dynamics(fog_config(64))
-    assert dyn["topology"].num_groups > 1
+    fleet = scn.dynamics(fog_config(64))       # FleetConfig since PR 8
+    assert fleet.topology.num_groups > 1
 
 
 def test_topology_requires_compiled_engine(setup):
