@@ -1,0 +1,153 @@
+"""LM-fleet benchmark: the SSM adapter through the fused engine.
+
+The ModelAdapter layer claims the engine core is model-agnostic; this
+bench holds the LM regime (``scenario="lm"``: single-block Mamba-2 with a
+carried per-device recurrent state, token shards from
+``data.lm.lm_federated_split``) to the same three contracts the digit
+fleets ship under:
+
+* **active beats random** — score-driven acquisition must not lose to a
+  random-selection control at the SAME label budget (the paper's
+  active-vs-random claim on tokens);
+* **one dispatch** — T fused AL rounds execute as exactly one host
+  dispatch per arm (counter-asserted), with the adapter's
+  ``aggregate_mask`` keeping ``recurrent/state`` out of Eq. 1 inside the
+  compiled program;
+* **vmap == mesh** — the shard_map mesh path reproduces the vmap path's
+  final fog model to ≤ ``MESH_ATOL`` (the global-slot-0 excluded-leaf
+  contract included).
+
+The ``acceptance`` entry in ``BENCH_lm.json`` gates all three on the
+largest swept fleet (D=16 full, D=8 on ``--quick`` — the CI bench job).
+
+    PYTHONPATH=src python -m benchmarks.run --only lm [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import replace
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import counters
+from repro.core.engine import EdgeEngine
+from repro.core.federated import (LM_SEQ_LEN, LM_VOCAB, Trainer, lm_config)
+from repro.data.lm import lm_federated_split, make_lm_dataset
+from repro.launch.mesh import make_device_mesh
+
+Row = Tuple[str, float, str]
+
+ROUNDS = 4                    # fused AL rounds per run
+ACC_ADVANTAGE_FLOOR_PP = 0.0  # score arm must not lose to random
+MESH_ATOL = 1e-5              # vmap vs shard_map final-model tolerance
+ARMS = ("score", "random")
+
+
+def _max_leaf_diff(a, b) -> float:
+    return max(float(np.max(np.abs(np.asarray(la) - np.asarray(lb))))
+               for la, lb in zip(jax.tree_util.tree_leaves(a),
+                                 jax.tree_util.tree_leaves(b)))
+
+
+def bench_lm(quick: bool = False) -> Tuple[List[Row], Dict]:
+    rows: List[Row] = []
+    sizes = [8] if quick else [8, 16]
+    payload: Dict = {"device_counts": {}, "rounds": ROUNDS,
+                     "seq_len": LM_SEQ_LEN, "vocab": LM_VOCAB}
+
+    for D in sizes:
+        cfg = lm_config(D, seed=0)
+        total = cfg.acquisitions * ROUNDS
+        shards = lm_federated_split(D, 40, seq_len=LM_SEQ_LEN,
+                                    vocab=LM_VOCAB, seed=0)
+        test = make_lm_dataset(256, seq_len=LM_SEQ_LEN, vocab=LM_VOCAB,
+                               seed=5, stream_seed=0)
+        seed_set = make_lm_dataset(cfg.initial_train, seq_len=LM_SEQ_LEN,
+                                   vocab=LM_VOCAB, seed=11, stream_seed=0)
+        payload["device_counts"][D] = {"arms": {},
+                                       "excluded": None, "mesh": None}
+
+        arms: Dict[str, Dict] = {}
+        final_by_arm: Dict[str, object] = {}
+        for arm in ARMS:
+            acq = "random" if arm == "random" else cfg.acquisition_fn
+            cfg_arm = replace(cfg, acquisition_fn=acq)
+            trainer = Trainer(cfg_arm)
+            params0 = trainer.init_params(jax.random.key(0))
+            eng = EdgeEngine(trainer, cfg_arm, shards, seed_set, test,
+                             total_acquisitions=total)
+            payload["device_counts"][D]["excluded"] = list(
+                eng._exclude_paths(params0))
+
+            # warmup compiles; the timed run reuses the executable
+            eng.run_rounds_fused(eng.init_state(params0), ROUNDS)
+            state = eng.init_state(params0)
+            counters.reset_dispatches()
+            t0 = time.perf_counter()
+            _, recs, final = eng.run_rounds_fused(state, ROUNDS)
+            jax.block_until_ready(final)
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            final_by_arm[arm] = final
+
+            cell = {
+                "wall_ms": wall_ms,
+                "dispatches": counters.dispatch_count(),
+                "final_acc": float(recs["agg_acc"][-1]),
+                "acc_trajectory": [float(a) for a in recs["agg_acc"]],
+                "labels_total": float(np.asarray(
+                    recs["n_labeled"][-1]).sum()),
+            }
+            arms[arm] = cell
+            rows.append((
+                f"lm/D{D}_{arm}", wall_ms * 1e3,
+                f"acc={cell['final_acc']:.3f},"
+                f"labels={cell['labels_total']:.0f},"
+                f"dispatches={cell['dispatches']}"))
+
+        # vmap == mesh on the score arm (the excluded-leaf contract holds
+        # under shard_map: global slot 0's recurrent state wins)
+        trainer = Trainer(cfg)
+        params0 = trainer.init_params(jax.random.key(0))
+        em = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                        total_acquisitions=total, mesh=make_device_mesh())
+        _, _, fm = em.run_rounds_fused(em.init_state(params0), ROUNDS)
+        mesh_diff = _max_leaf_diff(final_by_arm["score"], fm)
+        rows.append((f"lm/D{D}_mesh", 0.0, f"max_diff={mesh_diff:.2e}"))
+
+        arms["acc_advantage_pp"] = (
+            arms["score"]["final_acc"]
+            - arms["random"]["final_acc"]) * 100.0
+        payload["device_counts"][D]["arms"] = arms
+        payload["device_counts"][D]["mesh"] = {
+            "host_devices": jax.device_count(),
+            "max_final_model_diff": mesh_diff,
+        }
+
+    # acceptance: at the largest swept fleet — equal-budget advantage,
+    # one dispatch per arm, and mesh == vmap on the final fog model
+    d_max = max(sizes)
+    gated = payload["device_counts"][d_max]
+    one_dispatch = all(gated["arms"][a]["dispatches"] == 1 for a in ARMS)
+    mesh_ok = gated["mesh"]["max_final_model_diff"] <= MESH_ATOL
+    adv = gated["arms"]["acc_advantage_pp"]
+    payload["acceptance"] = {
+        "criterion": f"final_acc(score) - final_acc(random) >= "
+                     f"{ACC_ADVANTAGE_FLOOR_PP}pp at equal label budget "
+                     f"({ROUNDS} rounds); 1 dispatch/arm; "
+                     f"vmap == mesh <= {MESH_ATOL}",
+        "device_count": d_max,
+        "acc_advantage_pp": adv,
+        "one_dispatch": one_dispatch,
+        "excluded_leaves": gated["excluded"],
+        "mesh_max_diff": gated["mesh"]["max_final_model_diff"],
+        "met": (adv >= ACC_ADVANTAGE_FLOOR_PP and one_dispatch and mesh_ok),
+    }
+
+    os.makedirs("experiments/results", exist_ok=True)
+    with open("experiments/results/BENCH_lm.json", "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return rows, payload

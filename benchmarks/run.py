@@ -40,6 +40,7 @@ BENCHES = [
     ("faults", "benchmarks.bench_faults", "bench_faults"),
     ("topology", "benchmarks.bench_topology", "bench_topology"),
     ("stream", "benchmarks.bench_stream", "bench_stream"),
+    ("lm", "benchmarks.bench_lm", "bench_lm"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

@@ -192,7 +192,12 @@ def weighted_sum_stacked(stacked, w, *,
     CAVEAT: ``exclude`` composes with the single-host stacked path only —
     inside a shard_map'd program a psum over the result would SUM each
     shard's local device-0 slice of an excluded leaf instead of selecting
-    global device 0's.  The engine's fused path never passes ``exclude``."""
+    global device 0's.  The engines therefore never pass ``exclude`` here:
+    they thread the adapter's ``aggregate_mask`` themselves (zero excluded
+    leaves out of the upload deltas, keep each device's own copy at
+    re-dispatch, and report GLOBAL slot 0 via a one-hot representative row
+    + fleet psum — see ``engine._get_rounds_fused_jit`` / the async
+    mirror), which is mesh-exact."""
 
     def agg(path, leaf):
         if exclude is not None and exclude(_path_str(path)):

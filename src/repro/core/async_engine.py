@@ -69,6 +69,7 @@ from repro.core import comms as comms_mod
 from repro.core import counters, vpool
 from repro.core import faults as faults_mod
 from repro.core import fleet as fleet_mod
+from repro.core import hetero as hetero_mod
 from repro.core import stream as stream_mod
 from repro.core.hetero import DECAYS
 
@@ -238,7 +239,8 @@ def _where_mask(mask, on_true, on_false):
 def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                    async_key, faults_key=None, guards_key=None,
                    churn_mode: str = "none", topo_key=None,
-                   stream_key=None):
+                   stream_key=None, hetero_steps: bool = False,
+                   excl_paths: tuple = ()):
     """The whole event loop — every aggregation event, every candidate
     device round, every staleness-decayed delta fold-in — as ONE compiled
     program (a ``lax.scan`` over aggregation events).
@@ -311,6 +313,18 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
     the guard verdict act on the ARRIVED uploads exactly as in the sync
     engine, with the fog commit gated on accepted (not merely arrived)
     uploads.
+
+    ``hetero_steps`` is True when a ``HeteroConfig`` compute profile
+    contributes to the traced ``step_limits`` vector (min-composed with
+    any topology ``compute_scale`` budgets on the host) — the static that
+    turns the per-device step masking on without a topology.
+
+    ``excl_paths`` is the adapter's static tuple of flat leaf paths
+    excluded from Eq. 1 (``model_adapter.excluded_paths``): excluded
+    leaves — per-device recurrent/SSM state — never enter the banked
+    deltas, survive every dispatch with the device's OWN value, and the
+    fog model carries the GLOBAL slot-0 copy as representative (one-hot
+    + fleet psum, mesh-exact).  Empty tuple emits the unchanged program.
     """
     from repro.core import topology as topo_mod
     from repro.core.engine import (_compiled, _fleet_collectives,
@@ -337,7 +351,7 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
             corrupt_mode, num_classes = faults_key
         topo_on = topo_key is not None
         G = topo_key[0] if topo_on else 1
-        use_steps = topo_on and topo_key[2]
+        use_steps = (topo_on and topo_key[2]) or hetero_steps
         stream_on = stream_key is not None
         if stream_on:
             s_process, Q, A_max, esc_k, s_selection = stream_key
@@ -357,6 +371,28 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
         eval_fn = trainer.eval_logits_raw
         tmap = jax.tree_util.tree_map
         gather, local, fpsum = _fleet_collectives(mesh, D)
+        # adapter-excluded leaves (per-device recurrent state, out of
+        # Eq. 1) — gated on has_excl so the empty tuple emits the
+        # unchanged pre-adapter program (same contract as the sync engine)
+        has_excl = bool(excl_paths)
+        excl_set = frozenset(excl_paths)
+        twp = jax.tree_util.tree_map_with_path
+
+        def _is_excl(kp):
+            return agg_mod._path_str(kp) in excl_set
+
+        def _zero_excluded(tree):
+            # excluded leaves carry no Eq. 1 mass: zeroed out of the
+            # banked deltas so EF residuals, guard norms, and the fog
+            # fold-ins see only aggregated state
+            return twp(lambda kp, a: (jnp.zeros_like(a) if _is_excl(kp)
+                                      else a), tree)
+
+        def _keep_excluded(own, incoming):
+            # dispatch select: excluded leaves keep each device's OWN
+            # value, the rest take the incoming fog model
+            return twp(lambda kp, t, d: t if _is_excl(kp) else d,
+                       own, incoming)
 
         def events_all(state, images, labels, valid, seed_x, seed_y,
                        val_x, val_y, keys_all, lat_keys, skeys, means_g,
@@ -432,6 +468,9 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                 else:
                     fog_b = tmap(lambda a: jnp.broadcast_to(
                         a[None], (D_local,) + a.shape), fog)
+                if has_excl:
+                    # dispatch never overwrites per-device excluded state
+                    fog_b = _keep_excluded(params, fog_b)
                 params = _where_mask(dispatch, fog_b, params)
                 opt_state = _where_mask(dispatch, trainer.opt.init(params),
                                         opt_state)
@@ -461,9 +500,10 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                 opt_state = _where_mask(commit, o2, opt_state)
                 pool = _where_mask(commit, pool2, pool)
                 rng = jnp.where(commit > 0, rng2, rng)
-                pending = _where_mask(
-                    commit, tmap(jnp.subtract, params, params_base),
-                    pending)
+                banked = tmap(jnp.subtract, params, params_base)
+                if has_excl:
+                    banked = _zero_excluded(banked)
+                pending = _where_mask(commit, banked, pending)
                 # same key on every shard → consistent global latency draw
                 lat_g = _draw_latency(dist_key, lat_key, means_g)
                 if faults_on:
@@ -788,6 +828,17 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                     state.params, repr_l, gid_l, G))
             else:
                 fog0 = tmap(lambda a: a[0], state.params)
+                if has_excl:
+                    # excluded leaves may differ per device when chaining
+                    # a previous run: the fog carries GLOBAL slot 0's copy
+                    # (one-hot + fleet psum — ``a[0]`` is shard-LOCAL row 0
+                    # under shard_map, the aggregation.py caveat)
+                    rep0_l = local(
+                        jnp.zeros((D,), jnp.float32).at[0].set(1.0))
+                    fog0 = twp(
+                        lambda kp, s, b: (fpsum(jnp.tensordot(
+                            rep0_l, s, axes=1)) if _is_excl(kp) else b),
+                        state.params, fog0)
             carry = (fog0, state.params, state.opt_state, state.pool,
                      state.rng, state.residual, state.pending,
                      state.staleness,
@@ -831,7 +882,7 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
 
     key = engine._cache_key("async_events", False) + (
         events, aggregation, comms_key, async_key, faults_key, guards_key,
-        churn_mode, topo_key, stream_key)
+        churn_mode, topo_key, stream_key, hetero_steps, excl_paths)
     return _compiled(key, build)
 
 
@@ -840,7 +891,7 @@ def run_events_fused(engine, state, events: int, *,
                      aggregation: str = "fedavg_n",
                      comms=None, start_event: int = 0,
                      faults=None, guards=None, topology=None,
-                     stream=None, fleet=None):
+                     stream=None, hetero=None, fleet=None):
     """``events`` fog aggregation events — rounds-free FedAsync/FedBuff
     dynamics — in ONE dispatch.
 
@@ -910,10 +961,19 @@ def run_events_fused(engine, state, events: int, *,
     reproduces the plain event loop bitwise (the reduction contract
     pinned by ``tests/test_stream.py``).
 
-    ``fleet`` (``core.fleet.FleetConfig``) bundles
-    ``comms``/``async_cfg``/``faults``/``guards``/``topology``/``stream``
-    as one value; the per-feature kwargs keep working and may not be
-    mixed with ``fleet=`` without a warning (legacy values win).
+    ``hetero`` (``core.hetero.HeteroConfig``) maps its COMPUTE profile
+    onto the event loop: ``slow_fraction`` / ``step_limits`` feed the
+    same traced ``[D]`` step-limit vector the sync engine masks local
+    fit steps with, min-composed with any topology ``compute_scale``
+    budget — one config describes both engines.  ``straggler_rate > 0``
+    is rejected (the event loop's latency model IS the straggler model);
+    the ``decay``/``buffer_stale`` fields are sync-round staleness
+    semantics and are ignored here (``async_cfg.decay`` governs).
+
+    ``fleet`` (``core.fleet.FleetConfig``) bundles ``comms``/
+    ``async_cfg``/``faults``/``guards``/``topology``/``stream``/
+    ``hetero`` as one value; the per-feature kwargs keep working and may
+    not be mixed with ``fleet=`` without a warning (legacy values win).
 
     ``faults`` / ``guards`` (``core.faults``) inject event-time faults and
     enable the fog-side aggregation guards — see
@@ -927,11 +987,12 @@ def run_events_fused(engine, state, events: int, *,
     fleet = fleet_mod.resolve_fleet(
         fleet, "run_events_fused",
         allowed=("comms", "async_cfg", "faults", "guards", "topology",
-                 "stream"),
+                 "stream", "hetero"),
         comms=comms, async_cfg=async_cfg, faults=faults, guards=guards,
-        topology=topology, stream=stream)
+        topology=topology, stream=stream, hetero=hetero)
     comms, async_cfg, faults = fleet.comms, fleet.async_cfg, fleet.faults
     guards, topology, stream = fleet.guards, fleet.topology, fleet.stream
+    hetero = fleet.hetero
     if async_cfg is None:
         raise ValueError("run_events_fused needs an AsyncConfig "
                          "(async_cfg= or fleet.async_cfg)")
@@ -950,6 +1011,13 @@ def run_events_fused(engine, state, events: int, *,
     D = engine.num_devices
     if topology is not None:
         topology.validate_for(D)
+    if hetero is not None and hetero.straggler_rate > 0.0:
+        raise ValueError(
+            "hetero.straggler_rate has no event-time meaning: the async "
+            "latency model IS the straggler model (AsyncConfig.dist / "
+            "mean_latency / latency_skew / device_means).  Set "
+            "straggler_rate=0 — only the compute profile (slow_fraction / "
+            "step_limits) maps onto the event loop")
 
     comms_key = None
     if comms is not None and comms.compression != "none":
@@ -993,14 +1061,24 @@ def run_events_fused(engine, state, events: int, *,
                  async_cfg.decay, float(async_cfg.decay_rate))
     means_np = device_latency_means(async_cfg, D)
     topo_key = None
-    sl_np = None
+    # one HeteroConfig describes both engines: its compute profile
+    # (slow_fraction / step_limits) feeds the same traced [D] step-limit
+    # vector the sync engine masks fit steps with, min-composed with any
+    # per-group topology budget (a device obeys the tighter of its own
+    # budget and its fog group's ceiling).  The decay/buffer fields are
+    # sync-round staleness semantics — the event loop has its own
+    # (AsyncConfig.decay) and ignores them.
+    sl_np = (hetero_mod.device_step_limits(
+        hetero, D, engine.cfg.train_steps_per_acq)
+        if hetero is not None else None)
+    hetero_steps = sl_np is not None
     if topology is not None:
         from repro.core import topology as topo_mod
         topo_key = (topology.num_groups, int(topology.local_steps),
                     topology.compute_scale is not None)
         means_np = topo_mod.topology_latency_means(topology, means_np)
         sl_np = topo_mod.topology_step_limits(
-            topology, D, engine.cfg.train_steps_per_acq)
+            topology, D, engine.cfg.train_steps_per_acq, base=sl_np)
         group_ids = jnp.asarray(topology.ids)
         sync_rows = jnp.asarray(
             topo_mod.sync_schedule(topology, events, start_event))
@@ -1043,7 +1121,8 @@ def run_events_fused(engine, state, events: int, *,
                           else 0.0)
     fn = _get_async_jit(engine, events, aggregation, comms_key, async_key,
                         faults_key, guards_key, churn_mode, topo_key,
-                        stream_key=stream_k)
+                        stream_key=stream_k, hetero_steps=hetero_steps,
+                        excl_paths=engine._exclude_paths(state.params))
     counters.count_dispatch()
     state, recs, fog = fn(state, engine.images, engine.labels,
                           engine.valid,

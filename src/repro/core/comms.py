@@ -62,11 +62,13 @@ import jax.numpy as jnp
 COMPRESSIONS = ("none", "int8", "topk")
 
 # Wire-format constants (bytes).  The simulated link serializes float32
-# payloads, per-tensor flat indices at the narrowest sufficient width
-# (uint16 below 2^16 elements — every LeNet tensor — else uint32), and one
-# float32 scale per quantized tensor; per-upload metadata is three int32
-# scalars (device id, round index, labeled-sample count n_i — the Eq. 1
-# fedavg_n weight the fog node needs).
+# payloads, per-tensor flat indices at the narrowest sufficient width —
+# ``index_bytes`` picks uint16 or uint32 PER TENSOR, so a ≥2^16-element
+# leaf (an LM adapter's embedding table) is billed at uint32 while small
+# conv/bias leaves stay uint16 — and one float32 scale per quantized
+# tensor; per-upload metadata is three int32 scalars (device id, round
+# index, labeled-sample count n_i — the Eq. 1 fedavg_n weight the fog
+# node needs).
 VALUE_BYTES = 4
 SCALE_BYTES = 4
 METADATA_BYTES_PER_UPLOAD = 12

@@ -190,7 +190,10 @@ def stack_device_data(device_data: Sequence):
     D = len(device_data)
     n_pad = max(len(d) for d in device_data)
     img_shape = device_data[0].images.shape[1:]
-    images = np.zeros((D, n_pad) + img_shape, np.float32)
+    # dtype-preserving: float32 images for the paper's LeNet, int32 token
+    # sequences for the LM adapters — the engine is sample-modality-agnostic
+    img_dtype = np.asarray(device_data[0].images).dtype
+    images = np.zeros((D, n_pad) + img_shape, img_dtype)
     labels = np.zeros((D, n_pad), np.int32)
     valid = np.zeros((D, n_pad), bool)
     for i, d in enumerate(device_data):
@@ -274,7 +277,7 @@ class EdgeEngine:
             self.seed_labels = jnp.asarray(seed_data.labels.astype(np.int32))
         else:
             img_shape = self.images.shape[2:]
-            self.seed_images = jnp.zeros((0,) + img_shape, jnp.float32)
+            self.seed_images = jnp.zeros((0,) + img_shape, self.images.dtype)
             self.seed_labels = jnp.zeros((0,), jnp.int32)
         if test_set is not None and len(test_set) > 0:
             self.test_images = jnp.asarray(test_set.images)
@@ -295,8 +298,21 @@ class EdgeEngine:
 
     def _num_classes(self) -> int:
         """Label vocabulary size (the label-noise redraw bound)."""
+        if getattr(self.trainer, "num_classes", None) is not None:
+            return int(self.trainer.num_classes)
         return int(getattr(getattr(self.trainer, "model_cfg", None),
                            "num_classes", 10))
+
+    def _exclude_paths(self, params) -> tuple:
+        """Static tuple of flat leaf paths the trainer's adapter keeps OUT
+        of Eq. 1 (per-device recurrent state — ``ModelAdapter
+        .aggregate_mask``).  Empty for adapter-less trainers and for LeNet:
+        the fused programs then take exactly the pre-adapter code path."""
+        adapter = getattr(self.trainer, "adapter", None)
+        if adapter is None:
+            return ()
+        from repro.core.model_adapter import excluded_paths
+        return excluded_paths(adapter, params)
 
     def _shard_state(self, state: EngineState) -> EngineState:
         if self.mesh is None:
@@ -429,7 +445,11 @@ class EdgeEngine:
                 return c
 
         return (kind, type(self.trainer),
-                getattr(self.trainer, "model_cfg", None),
+                # adapter identity subsumes model_cfg when present (frozen
+                # dataclass — hashable); legacy trainers fall back to the
+                # raw model config slot unchanged
+                getattr(self.trainer, "adapter",
+                        getattr(self.trainer, "model_cfg", None)),
                 _no_seed(getattr(self.trainer, "cfg", None)),
                 _no_seed(self.cfg),
                 self.images.shape, self.capacity, self.window, self.k,
@@ -506,7 +526,7 @@ class EdgeEngine:
                               mask_mode: str, comms_key=None,
                               hetero_key=None, faults_key=None,
                               guards_key=None, churn_mode: str = "none",
-                              topo_key=None):
+                              topo_key=None, excl_paths: tuple = ()):
         """T whole rounds — device AL + Eq. 1 aggregation + re-dispatch — as
         ONE compiled program (an outer scan over rounds).
 
@@ -579,6 +599,16 @@ class EdgeEngine:
         Eq. 1 model — G=1/local_steps=1 reduces bitwise to the flat
         program.  ``fog_compression`` optionally runs a second codec on
         the fog→cloud link (the per-group delta sums, vmapped over G).
+
+        ``excl_paths`` is the adapter's static tuple of flat leaf paths
+        excluded from Eq. 1 (``model_adapter.excluded_paths``): excluded
+        leaves — per-device recurrent/SSM state — carry no upload mass,
+        survive re-dispatch with each device's OWN value, and the
+        returned fog model reports the GLOBAL slot-0 device's copy
+        (one-hot representative + fleet psum — mesh-exact, unlike the
+        shard-local ``leaf[0]`` caveat in
+        ``aggregation.weighted_sum_stacked``).  Empty tuple (every
+        adapter-free call) emits the unchanged pre-adapter program.
         """
 
         def build():
@@ -630,6 +660,28 @@ class EdgeEngine:
             # local [D_local] scalar ↔ global [D] and the fleet psum —
             # identities off-mesh, fog-major 2-D aware on a fog mesh
             gather, local, fpsum = _fleet_collectives(mesh, D)
+            # adapter-excluded leaves (per-device recurrent state, out of
+            # Eq. 1); everything below is gated on has_excl so the empty
+            # tuple emits the unchanged pre-adapter program
+            has_excl = bool(excl_paths)
+            excl_set = frozenset(excl_paths)
+            twp = jax.tree_util.tree_map_with_path
+
+            def _is_excl(kp):
+                return agg_mod._path_str(kp) in excl_set
+
+            def _zero_excluded(tree):
+                # excluded leaves carry no Eq. 1 mass: zeroing them out of
+                # the upload deltas keeps EF residuals, guard norms, byte
+                # accounting, and both fog tiers free of per-device state
+                return twp(lambda kp, a: (jnp.zeros_like(a) if _is_excl(kp)
+                                          else a), tree)
+
+            def _keep_excluded(trained, dispatched):
+                # re-dispatch select: excluded leaves keep each device's
+                # OWN trained value, the rest take the fog model
+                return twp(lambda kp, t, d: t if _is_excl(kp) else d,
+                           trained, dispatched)
 
             def rounds_all(state, images, labels, seed_x, seed_y,
                            val_x, val_y, keys_all, mask_arg, fraction,
@@ -646,6 +698,23 @@ class EdgeEngine:
                             vec_l.reshape(
                                 (-1,) + (1,) * (a.ndim - 1)) > 0, a, o),
                         on_true, on_false)
+
+                if has_excl:
+                    # GLOBAL slot-0 representative row, mesh-exact: a bare
+                    # ``leaf[0]`` under shard_map reads each shard's LOCAL
+                    # device 0 (the documented caveat in
+                    # aggregation.weighted_sum_stacked) — the one-hot
+                    # weighting + fleet psum picks the true global slot 0
+                    rep0_l = local(
+                        jnp.zeros((D,), jnp.float32).at[0].set(1.0))
+
+                    def _slot0_excluded(stacked, base):
+                        # excluded leaves of ``base`` take global slot 0's
+                        # row of ``stacked``; the rest pass through
+                        return twp(
+                            lambda kp, s, b: (fpsum(jnp.tensordot(
+                                rep0_l, s, axes=1)) if _is_excl(kp) else b),
+                            stacked, base)
 
                 def one_round(carry, xs):
                     if topo_on:
@@ -766,6 +835,8 @@ class EdgeEngine:
                         # this round's fresh work against the dispatched
                         # base, plus (hetero) the buffered backlog
                         delta = tmap(jnp.subtract, params, params_prev)
+                        if has_excl:
+                            delta = _zero_excluded(delta)
                         backlog = (tmap(jnp.add, delta, pending)
                                    if h_buffer else delta)
                     sent = None
@@ -910,6 +981,12 @@ class EdgeEngine:
                         agg = tmap(
                             lambda a, b: jnp.where(accept_any, a, b),
                             agg, keep)
+                    if has_excl:
+                        # excluded leaves have no fog-side average: the
+                        # aggregated model reports GLOBAL slot 0's carried
+                        # state as the representative (well-defined on any
+                        # mesh; devices keep their own at re-dispatch)
+                        agg = _slot0_excluded(params, agg)
 
                     if topo_on:
                         # ---- two-tier select: sync rounds broadcast the
@@ -996,11 +1073,13 @@ class EdgeEngine:
                     # rows are the global model, matching the flat
                     # broadcast bitwise)
                     if topo_on:
-                        params = topo_mod.take_group_rows(fog, gid_l)
+                        dispatched = topo_mod.take_group_rows(fog, gid_l)
                     else:
-                        params = jax.tree_util.tree_map(
+                        dispatched = jax.tree_util.tree_map(
                             lambda a: jnp.broadcast_to(
                                 a[None], (D_local,) + a.shape), agg)
+                    params = (_keep_excluded(params, dispatched)
+                              if has_excl else dispatched)
                     opt_state = trainer.opt.init(params)
                     out = (params, opt_state, pool, rng, residual, pending,
                            staleness, live)
@@ -1039,6 +1118,11 @@ class EdgeEngine:
                     final = topo_mod.group_reduce_stacked(carry[8], gfrac)
                 else:
                     final = jax.tree_util.tree_map(lambda a: a[0], carry[0])
+                if has_excl:
+                    # contract: the returned model's excluded leaves are
+                    # GLOBAL device 0's carried state (mesh-exact via the
+                    # one-hot representative, not the shard-local row 0)
+                    final = _slot0_excluded(carry[0], final)
                 return EngineState(*carry[:8]), recs, final
 
             if mesh is not None:
@@ -1064,7 +1148,7 @@ class EdgeEngine:
 
         key = self._cache_key("rounds_fused", False) + (
             rounds, aggregation, mask_mode, comms_key, hetero_key,
-            faults_key, guards_key, churn_mode, topo_key)
+            faults_key, guards_key, churn_mode, topo_key, excl_paths)
         return _compiled(key, build)
 
     def run_rounds_fused(self, state: EngineState, rounds: int, *,
@@ -1345,7 +1429,8 @@ class EdgeEngine:
                               else 0.0)
         fn = self._get_rounds_fused_jit(rounds, aggregation, mask_mode,
                                         comms_key, hetero_key, faults_key,
-                                        guards_key, churn_mode, topo_key)
+                                        guards_key, churn_mode, topo_key,
+                                        self._exclude_paths(state.params))
         # the compute profile is a traced [D] argument (profile sweeps reuse
         # the executable); a full-budget fill-in rides along when unused
         sl = jnp.asarray(
@@ -1379,7 +1464,7 @@ class EdgeEngine:
     def run_async(self, state: EngineState, events: int, *, async_cfg=None,
                   aggregation: str = "fedavg_n", comms=None,
                   start_event: int = 0, faults=None, guards=None,
-                  topology=None, stream=None, fleet=None):
+                  topology=None, stream=None, hetero=None, fleet=None):
         """Rounds-free FedAsync/FedBuff aggregation: ``events`` quorum- or
         timer-triggered fog aggregation events over a continuous-time
         device latency model, in ONE dispatch — see
@@ -1397,7 +1482,7 @@ class EdgeEngine:
                                 aggregation=aggregation, comms=comms,
                                 start_event=start_event, faults=faults,
                                 guards=guards, topology=topology,
-                                stream=stream, fleet=fleet)
+                                stream=stream, hetero=hetero, fleet=fleet)
 
     # ------------------------------------------------------------ drivers
     def run_round(self, state: EngineState, *, record_curves: bool = True):

@@ -39,9 +39,10 @@ from repro.core.fleet import FleetConfig
 from repro.core.hetero import HeteroConfig
 from repro.core.stream import StreamConfig
 from repro.core.mc_dropout import mc_logprobs
+from repro.core.model_adapter import LeNetAdapter, ModelAdapter
 from repro.core.pool import ActivePool
 from repro.data.digits import SyntheticDigits
-from repro.nn.lenet import LeNet, LeNetConfig
+from repro.nn.lenet import LeNetConfig
 from repro.optim import adam
 
 
@@ -63,7 +64,11 @@ class FederatedALConfig:
     ``acquisition_fn`` (default ``"entropy"``) and ``aggregation``
     (default ``"average"``, Eq. 1) pick the scoring and fog strategies;
     ``scorer`` (default ``"auto"``) picks the Pallas-vs-jnp scoring path;
-    ``seed`` (default 0) drives every PRNG stream.
+    ``seed`` (default 0) drives every PRNG stream.  ``adapter`` (default
+    ``None`` = the paper's LeNet) is a ``core.model_adapter.ModelAdapter``
+    — any init/apply/loss bundle (decoder LM, SSM, ...) runs through the
+    same engines; being a frozen dataclass it keeps the config hashable,
+    so adapter identity flows into the engines' jit cache keys.
     """
 
     num_devices: int = 4
@@ -80,6 +85,7 @@ class FederatedALConfig:
     batch_size: int = 64
     seed: int = 0
     scorer: str = "auto"             # auto | jnp | pallas | pallas_interpret
+    adapter: Optional[ModelAdapter] = None  # None = LeNet (the paper)
 
 
 def _donate_argnums(*argnums):
@@ -89,7 +95,13 @@ def _donate_argnums(*argnums):
 
 
 class Trainer:
-    """Jit-compiled train/score/eval bundle for one model family (LeNet).
+    """Jit-compiled train/score/eval bundle for one model family.
+
+    The model boundary is a ``core.model_adapter.ModelAdapter`` (default:
+    ``LeNetAdapter`` — the paper's model, bitwise-identical to the
+    pre-adapter closures).  Pass ``adapter=`` (or set ``cfg.adapter``) to
+    run any other init/apply/loss bundle — decoder LM, SSM — through the
+    exact same train/score/eval surface and both compiled engines.
 
     The un-jitted ``*_raw`` callables are the building blocks the vectorized
     engine (``repro.core.engine``) composes into its own single compiled
@@ -97,30 +109,33 @@ class Trainer:
     host→device dispatch per invocation (see ``core.counters``).
     """
 
-    def __init__(self, cfg: FederatedALConfig, model_cfg: LeNetConfig = LeNetConfig()):
+    def __init__(self, cfg: FederatedALConfig,
+                 model_cfg: LeNetConfig = LeNetConfig(),
+                 adapter: Optional[ModelAdapter] = None):
         self.cfg = cfg
-        self.model_cfg = model_cfg
+        if adapter is None:
+            adapter = getattr(cfg, "adapter", None)
+        if adapter is None:
+            adapter = LeNetAdapter(model_cfg)
+        self.adapter = adapter
+        self.model_cfg = adapter.config
+        self.num_classes = adapter.num_classes
         self.opt = adam(cfg.lr)
         capacity = cfg.initial_train + cfg.acquisitions * cfg.k_per_acquisition
         self.capacity = capacity
 
         def masked_loss(params, x, y, mask, rng):
-            logits = LeNet.apply(params, x, cfg=model_cfg, rng=rng, deterministic=False)
-            logp = jax.nn.log_softmax(logits)
-            nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
-            return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+            return adapter.loss(params, x, y, mask, rng)
 
         def train_step_raw(params, opt_state, x, y, mask, rng, step):
             grads = jax.grad(masked_loss)(params, x, y, mask, rng)
             return self.opt.update(grads, opt_state, params, step)
 
         def score_logprobs_raw(params, x, rng, T):
-            apply_stoch = lambda p, xx, key: LeNet.apply(
-                p, xx, cfg=model_cfg, rng=key, deterministic=False)
-            return mc_logprobs(apply_stoch, params, x, rng, T)
+            return mc_logprobs(adapter.stochastic_apply, params, x, rng, T)
 
         def eval_logits_raw(params, x):
-            return LeNet.apply(params, x, cfg=model_cfg, deterministic=True)
+            return adapter.apply(params, x)
 
         def fit_steps_raw(params, opt_state, x, y, mask, rng, steps: int,
                           unroll: int = 1, step_limit=None):
@@ -168,7 +183,7 @@ class Trainer:
                     donate_argnums=_donate_argnums(0, 1)))
 
     def init_params(self, key):
-        return LeNet.init(key, self.model_cfg)
+        return self.adapter.init(key)
 
     def fit(self, params, images, labels, *, steps: int, rng, opt_state=None,
             unroll: int | bool = 1):
@@ -346,7 +361,7 @@ def upload_mask_schedule(num_devices: int, upload_fraction: float, seed: int,
 # engine or feature is one row here, not four scattered tuples.
 _FEATURE_ENGINES = {
     "comms compression": ("fused",),
-    "hetero": ("fused",),
+    "hetero": ("fused", "async"),
     "async_cfg": ("async",),
     "faults": ("fused", "async"),
     "guards": ("fused", "async"),
@@ -374,28 +389,36 @@ def _check_comms_engine(comms: Optional[CommsConfig], engine: str) -> None:
 
 def _check_hetero_engine(hetero: Optional[HeteroConfig], engine: str) -> None:
     """Straggler buffering, staleness counters, and the traced compute
-    profile live inside the fused multi-round program only."""
+    profile live inside the compiled one-dispatch programs only (the async
+    engine consumes the compute profile — see ``_check_async_engine``)."""
     if hetero is not None:
         _require_engine(
             "hetero", engine,
-            "use run_federated_rounds(..., engine='fused', hetero=...)")
+            "use run_federated_rounds(..., engine='fused'|'async', "
+            "hetero=...)")
 
 
 def _check_async_engine(async_cfg: Optional[AsyncConfig], engine: str,
                         hetero: Optional[HeteroConfig] = None) -> None:
     """The continuous-time event loop is its own engine: an ``AsyncConfig``
-    on a round-synchronous engine (or a round-synchronous ``HeteroConfig``
-    on the async engine — the latency model IS the straggler model there)
-    would silently run the wrong participation dynamics."""
+    on a round-synchronous engine would silently run the wrong
+    participation dynamics.  A ``HeteroConfig`` composes with the async
+    engine through its COMPUTE profile only (slow_fraction / step_limits
+    feed the event loop's traced per-device step-limit vector, min-composed
+    with any topology budget); its straggler_rate is a round-synchronous
+    knob and is rejected — the latency model IS the straggler model there.
+    """
     if async_cfg is not None:
         _require_engine(
             "async_cfg", engine,
             "use run_federated_rounds(..., engine='async', async_cfg=...)")
-    if engine == "async" and hetero is not None:
+    if engine == "async" and hetero is not None \
+            and hetero.straggler_rate > 0.0:
         raise ValueError(
-            "engine='async' does not compose with hetero=: the async "
-            "latency model replaces the round-synchronous straggler model "
-            "(use AsyncConfig's dist/latency_skew instead)")
+            "engine='async' does not compose with hetero.straggler_rate: "
+            "the async latency model replaces the round-synchronous "
+            "straggler model (use AsyncConfig's dist/latency_skew; the "
+            "hetero compute profile DOES compose — set straggler_rate=0)")
 
 
 def _check_faults_engine(faults: Optional[FaultConfig],
@@ -665,7 +688,7 @@ def run_federated_rounds(cfg: FederatedALConfig, device_data: List[SyntheticDigi
             eng.init_state(params), rounds, async_cfg=async_cfg,
             aggregation=cfg.aggregation, comms=comms,
             faults=faults, guards=guards, topology=topology,
-            stream=stream)
+            stream=stream, hetero=hetero)
         if topology is not None:
             # run_events_fused returns the [G, ...] fog stack; collapse it
             # to the slot-share-weighted mix (== flat model at G=1)
@@ -926,6 +949,40 @@ def stream_config(num_devices: int = 64, *, seed: int = 0,
     return _small_budget_config(num_devices, seed, overrides)
 
 
+# LM scenario defaults (scenario="lm"): token geometry of the synthetic
+# Markov source (data.lm) and of the reduced SSM adapter the preset builds.
+LM_VOCAB = 256
+LM_SEQ_LEN = 32
+
+
+def lm_model_config(*, vocab: int = LM_VOCAB, seq_len: int = LM_SEQ_LEN,
+                    dropout_rate: float = 0.1):
+    """Reduced single-block SSM ``ModelConfig`` for the LM scenario:
+    CI-sized (d_model 64, one Mamba-2 block) with MC-dropout enabled —
+    ``dropout_rate > 0`` is what gives the Eq. 13 posterior samples
+    variance, exactly as LeNet's dropout layers do for the paper's CNN."""
+    from dataclasses import replace as _replace
+
+    from repro.models.config import ModelConfig
+
+    base = ModelConfig(family="ssm", attn_pattern=("M",)).reduced(
+        n_layers=1, d_model=64, vocab_size=vocab, max_seq_len=seq_len)
+    return _replace(base, dropout_rate=dropout_rate)
+
+
+def lm_config(num_devices: int = 8, *, seed: int = 0,
+              **overrides) -> FederatedALConfig:
+    """Preset for the LM regime: the shared small-budget fleet with an
+    ``SSMAdapter`` (``core.model_adapter``) in place of LeNet — token
+    shards from ``data.lm.lm_federated_split``, next-token "labels", and
+    a carried per-device recurrent state the engines keep OUT of Eq. 1
+    via the adapter's ``aggregate_mask``."""
+    from repro.core.model_adapter import SSMAdapter
+
+    overrides.setdefault("adapter", SSMAdapter(lm_model_config()))
+    return _small_budget_config(num_devices, seed, overrides)
+
+
 def default_async(num_devices: int) -> AsyncConfig:
     """FedBuff-style ``AsyncConfig`` default, sized to the fleet: quorum at
     a quarter of the devices (min 1), a 4-simulated-second safety timer
@@ -971,8 +1028,9 @@ class Scenario:
 
     ``config`` builds the scenario's ``FederatedALConfig`` preset
     (``None`` = the caller must pass an explicit ``cfg``); ``split`` is
-    ``"uniform"`` (``federated_split``) or ``"dirichlet"`` (non-IID,
-    ``HETERO_DIRICHLET_ALPHA``); ``engine`` the native engine an explicit
+    ``"uniform"`` (``federated_split``), ``"dirichlet"`` (non-IID,
+    ``HETERO_DIRICHLET_ALPHA``) or ``"lm"`` (token shards from
+    ``data.lm.lm_federated_split``); ``engine`` the native engine an explicit
     ``engine=`` overrides; ``dynamics(cfg)`` the default
     ``core.fleet.FleetConfig`` whose fields ``run_experiment`` fills in
     when the caller left them None (explicit knobs — legacy kwargs or a
@@ -1019,6 +1077,10 @@ SCENARIOS: Dict[str, Scenario] = {
         dynamics=lambda cfg: FleetConfig(
             async_cfg=default_async(cfg.num_devices),
             stream=default_stream(cfg.num_devices))),
+    "lm": Scenario(
+        description="language-model fleet: SSM adapter, token shards, "
+                    "recurrent state excluded from Eq. 1",
+        split="lm", engine="fused", config=lm_config),
 }
 
 
@@ -1195,14 +1257,33 @@ def run_experiment(cfg: Optional[FederatedALConfig] = None, *,
     reports = []
     for rep in range(repeats):
         seed = cfg.seed + 1000 * rep
-        full = make_digit_dataset(n_train, seed=seed)
-        test = make_digit_dataset(n_test, seed=seed + 5)
-        seed_set = make_digit_dataset(cfg.initial_train, seed=seed + 11)
-        if scn is not None and scn.split == "dirichlet":
-            shards = dirichlet_split(full, cfg.num_devices,
-                                     alpha=HETERO_DIRICHLET_ALPHA, seed=seed)
+        if scn is not None and scn.split == "lm":
+            # token regime: every split comes from ONE Markov chain
+            # (stream_seed=seed), sized by the adapter's vocab/context
+            from repro.data.lm import lm_federated_split, make_lm_dataset
+
+            acfg = getattr(getattr(cfg, "adapter", None), "config", None)
+            vocab = getattr(acfg, "vocab_size", LM_VOCAB)
+            seq_len = min(LM_SEQ_LEN, getattr(acfg, "max_seq_len",
+                                              LM_SEQ_LEN))
+            test = make_lm_dataset(n_test, seq_len=seq_len, vocab=vocab,
+                                   seed=seed + 5, stream_seed=seed)
+            seed_set = make_lm_dataset(cfg.initial_train, seq_len=seq_len,
+                                       vocab=vocab, seed=seed + 11,
+                                       stream_seed=seed)
+            shards = lm_federated_split(
+                cfg.num_devices, max(1, n_train // cfg.num_devices),
+                seq_len=seq_len, vocab=vocab, seed=seed)
         else:
-            shards = federated_split(full, cfg.num_devices, seed=seed)
+            full = make_digit_dataset(n_train, seed=seed)
+            test = make_digit_dataset(n_test, seed=seed + 5)
+            seed_set = make_digit_dataset(cfg.initial_train, seed=seed + 11)
+            if scn is not None and scn.split == "dirichlet":
+                shards = dirichlet_split(full, cfg.num_devices,
+                                         alpha=HETERO_DIRICHLET_ALPHA,
+                                         seed=seed)
+            else:
+                shards = federated_split(full, cfg.num_devices, seed=seed)
         cfg_rep = replace(cfg, seed=seed)
         if (engine in ("fused", "async") or rounds > 1 or mesh is not None):
             _, round_reports = run_federated_rounds(

@@ -1,0 +1,255 @@
+"""Model-adapter layer: the protocol that makes the engine core model-agnostic.
+
+The paper's method (edge-side MC-dropout active learning + fog-side Eq. 1
+federation) never looks inside the model — it only needs init / forward /
+stochastic-forward / loss.  Historically ``core.federated.Trainer`` hard-coded
+``LeNet.init/apply`` for all four, so the decoder/MoE/SSM/RG-LRU zoo
+(``configs/``, ``nn/``, ``models/``) ran only through ``launch/train.py`` and
+never saw the fused rounds, async loop, churn, topology, or stream scenarios.
+
+``ModelAdapter`` is that boundary made explicit.  ``Trainer`` composes its
+train/score/eval closures from an adapter (default: ``LeNetAdapter``, which
+reproduces the original closures operation-for-operation — the LeNet path is
+bitwise-identical through the refactor), and both compiled engines
+(``core.engine`` / ``core.async_engine``) consult the adapter's
+``aggregate_mask`` to keep per-device state out of the Eq. 1 average.
+
+Protocol (all methods pure; adapters are frozen — hence hashable — dataclasses
+so adapter identity flows into the engines' jit cache keys):
+
+    init(key) -> params                    fresh parameter pytree
+    apply(params, x) -> logits [N, C]      deterministic eval forward
+    stochastic_apply(params, x, rng)       one MC-dropout draw (dropout ACTIVE;
+        -> logits [N, C]                   the engine vmaps T of these for the
+                                           Eq. 13 posterior)
+    loss(params, x, y, mask, rng)          masked mean NLL over the padded
+        -> scalar                          labeled set (the training objective
+                                           the engine differentiates)
+    aggregate_mask(path) -> bool           True = this leaf (flat "a/b/c" key
+                                           path) is PER-DEVICE state excluded
+                                           from Eq. 1 — recurrent/SSM states,
+                                           batch statistics.  The engines carry
+                                           excluded leaves per device instead
+                                           of averaging them.
+    num_classes                            width of the logits axis (vocab size
+                                           for LM adapters)
+
+``x`` is whatever one sample row is for the adapter's modality: ``[28,28,1]``
+float32 images for LeNet, ``[S]`` int32 token sequences for the LM adapters
+(the engine is rank-generic and dtype-preserving over the sample axes).
+
+LM adapters score the NEXT-TOKEN distribution at the final position, so the
+pool/label plumbing is unchanged: a "label" is the target continuation token.
+``impl`` selects the attention / SSD core for the no-grad forwards (eval +
+MC scoring) — ``"pallas"`` routes ``kernels.flash_attention`` /
+``kernels.ssd_scan`` inside the fused AL hot loop; the differentiated loss
+always uses the pure-JAX reference cores (the Pallas kernels define no VJP).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.decoder import decoder_forward, decoder_init
+from repro.nn import embeddings as emb
+from repro.nn import layers
+from repro.nn.lenet import LeNet, LeNetConfig
+from repro.nn.norms import rmsnorm_apply, rmsnorm_init
+from repro.nn.ssm import mamba2_apply, mamba2_init, ssm_dims
+
+
+class ModelAdapter:
+    """Base adapter: shared masked-NLL loss + no excluded leaves.
+
+    Subclasses override ``init`` / ``apply`` / ``stochastic_apply`` (and
+    ``aggregate_mask`` when they carry per-device state).  The default
+    ``loss`` trains with dropout active — exactly the original Trainer
+    objective — so most adapters only implement the three forwards.
+    """
+
+    config: Any = None
+
+    def init(self, key):
+        raise NotImplementedError
+
+    def apply(self, params, x):
+        raise NotImplementedError
+
+    def stochastic_apply(self, params, x, rng):
+        raise NotImplementedError
+
+    def loss(self, params, x, y, mask, rng):
+        logits = self.stochastic_apply(params, x, rng)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def aggregate_mask(self, path: str) -> bool:
+        """True = leaf at flat key ``path`` stays per-device (out of Eq. 1)."""
+        return False
+
+    @property
+    def num_classes(self) -> int:
+        raise NotImplementedError
+
+
+def excluded_paths(adapter: ModelAdapter, params) -> tuple:
+    """Sorted tuple of flat key paths ``adapter.aggregate_mask`` excludes in
+    ``params`` — the STATIC fact the compiled engines thread into their
+    stacked Eq. 1 (empty tuple = the adapter-free fast path, bit-identical
+    to the pre-adapter program)."""
+    from repro.core.aggregation import _path_str
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return tuple(sorted(p for p in (_path_str(kp) for kp, _ in flat)
+                        if adapter.aggregate_mask(p)))
+
+
+# =============================================================== LeNet (paper)
+@dataclass(frozen=True)
+class LeNetAdapter(ModelAdapter):
+    """The paper's Bayesian LeNet (Table I) — the default adapter.
+
+    Reproduces the pre-adapter ``Trainer`` closures operation-for-operation:
+    params, gradients, and the whole fused-round program are bitwise-identical
+    for this adapter."""
+
+    config: LeNetConfig = field(default_factory=LeNetConfig)
+
+    def init(self, key):
+        return LeNet.init(key, self.config)
+
+    def apply(self, params, x):
+        return LeNet.apply(params, x, cfg=self.config, deterministic=True)
+
+    def stochastic_apply(self, params, x, rng):
+        return LeNet.apply(params, x, cfg=self.config, rng=rng,
+                           deterministic=False)
+
+    @property
+    def num_classes(self) -> int:
+        return self.config.num_classes
+
+
+# ======================================================== decoder LM (models/)
+@dataclass(frozen=True)
+class DecoderLMAdapter(ModelAdapter):
+    """Decoder-only LM from the model zoo (``models.decoder`` — any
+    ``ModelConfig`` family that ``decoder_init`` builds: dense, MoE, MLA,
+    RG-LRU hybrid).
+
+    One sample ``x`` row is an int32 token sequence ``[S]``; logits are the
+    next-token distribution at the final position ``[N, vocab]``, so entropy/
+    BALD scoring and the engine's label plumbing work unchanged.  MC scoring
+    needs ``config.dropout_rate > 0``.  ``impl`` drives the attention core of
+    the no-grad forwards (``"pallas"`` = ``kernels.flash_attention`` inside
+    the fused hot loop); the loss keeps the differentiable reference core.
+    """
+
+    config: ModelConfig = field(default_factory=ModelConfig)
+    impl: str = "auto"
+
+    def init(self, key):
+        return decoder_init(key, self.config)
+
+    def _last_logits(self, params, tokens, *, rng=None, deterministic=True,
+                     impl="auto"):
+        logits, _, _ = decoder_forward(
+            params, tokens, cfg=self.config, rng=rng,
+            deterministic=deterministic, impl=impl, last_logit_only=True)
+        return logits[:, 0, :]
+
+    def apply(self, params, x):
+        return self._last_logits(params, x, impl=self.impl)
+
+    def stochastic_apply(self, params, x, rng):
+        return self._last_logits(params, x, rng=rng, deterministic=False,
+                                 impl=self.impl)
+
+    def loss(self, params, x, y, mask, rng):
+        logits, _, aux = decoder_forward(
+            params, x, cfg=self.config, rng=rng, deterministic=False,
+            impl="auto", last_logit_only=True)
+        logp = jax.nn.log_softmax(logits[:, 0, :])
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+        return (jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)) + aux
+
+    @property
+    def num_classes(self) -> int:
+        return self.config.vocab_size
+
+
+# ================================================================ SSM LM (SSD)
+@dataclass(frozen=True)
+class SSMAdapter(ModelAdapter):
+    """Single-block Mamba-2 (SSD) LM with a CARRIED per-device recurrent
+    state — the adapter that exercises ``aggregate_mask``.
+
+    ``params["recurrent"]["state"]`` ``[H, P, N]`` is the SSD scan's initial
+    state: it feeds every forward (broadcast over the batch), receives
+    gradient like any other leaf, and is named by ``aggregate_mask`` so the
+    engines keep each device's copy OUT of Eq. 1 — the per-device recurrent
+    state the averaging would otherwise destroy (DESIGN.md §4 / the
+    ``exclude`` stub in ``core.aggregation``).
+
+    ``impl="pallas"``/``"pallas_interpret"`` routes the intra-chunk SSD block
+    of the no-grad forwards through ``kernels.ssd_scan``.
+    """
+
+    config: ModelConfig = field(default_factory=lambda: ModelConfig(
+        family="ssm", attn_pattern=("M",)))
+    impl: str = "ref"
+
+    def init(self, key):
+        k_embed, k_mamba = jax.random.split(key)
+        _, H, P, N, _ = ssm_dims(self.config)
+        return {
+            "embed": emb.embed_init(k_embed, self.config.vocab_size,
+                                    self.config.d_model,
+                                    dtype=self.config.param_dtype),
+            "mamba": mamba2_init(k_mamba, self.config),
+            "final_norm": rmsnorm_init(self.config.d_model),
+            "recurrent": {"state": jnp.zeros((H, P, N), jnp.float32)},
+        }
+
+    def _forward(self, params, tokens, *, rng=None, impl="ref"):
+        cfg = self.config
+        _, H, P, N, _ = ssm_dims(cfg)
+        x = emb.embed_apply(params["embed"], tokens, dtype=cfg.dtype)
+        init_state = jnp.broadcast_to(
+            params["recurrent"]["state"][None].astype(x.dtype),
+            (x.shape[0], H, P, N))
+        # Residual around the block, like models/decoder.py: the gated
+        # RMSNorm inside mamba2_apply is zero-init (gemma-style 1+scale
+        # convention NOT applied there), so the branch outputs 0 at init —
+        # without the skip the fresh adapter would emit all-zero logits.
+        h = x + mamba2_apply(params["mamba"], x, cfg=cfg,
+                             initial_state=init_state, impl=impl)
+        h = h[:, -1, :]
+        if rng is not None and cfg.dropout_rate > 0.0:
+            h = layers.dropout(rng, h, cfg.dropout_rate)
+        h = rmsnorm_apply(params["final_norm"], h)
+        return emb.unembed_apply(params["embed"], h, tied=True)
+
+    def apply(self, params, x):
+        return self._forward(params, x, impl=self.impl)
+
+    def stochastic_apply(self, params, x, rng):
+        return self._forward(params, x, rng=rng, impl=self.impl)
+
+    def loss(self, params, x, y, mask, rng):
+        logits = self._forward(params, x, rng=rng, impl="ref")
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def aggregate_mask(self, path: str) -> bool:
+        return path.startswith("recurrent")
+
+    @property
+    def num_classes(self) -> int:
+        return self.config.vocab_size

@@ -5,10 +5,19 @@ the selection subsystem we need token streams. We synthesize a Zipfian token
 source with local n-gram structure (a tiny Markov chain) so losses actually
 decrease and uncertainty varies across sequences — required for the
 uncertainty-driven selection demo to have signal.
+
+``make_lm_dataset`` / ``lm_federated_split`` package the stream into the
+engine's shard contract (``data.digits.SyntheticDigits`` duck type): one
+sample "image" is an int32 token prefix ``[seq_len]`` and its "label" the
+next token at the final position, so the LM adapters
+(``core.model_adapter``) run through the pool/scoring/Eq. 1 machinery
+unchanged — the fused engine is rank-generic and dtype-preserving over the
+sample axes.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import List, Optional
 
 import numpy as np
 
@@ -56,3 +65,65 @@ class SyntheticLMStream:
             state = (u < cum).argmax(-1)
             out[:, t] = state
         return out[:, :-1], out[:, 1:]
+
+
+# ------------------------------------------------- engine shard contract
+def make_lm_dataset(n: int, *, seq_len: int = 32, vocab: int = 256,
+                    seed: int = 0, temperature: float = 1.0,
+                    stream: Optional[SyntheticLMStream] = None,
+                    stream_seed: int = 0):
+    """One LM shard in the engine's ``SyntheticDigits`` contract.
+
+    ``images`` is the int32 token-prefix array ``[n, seq_len]`` and
+    ``labels`` the next token at the FINAL position ``[n]`` — the LM
+    adapters score/train on the last-position next-token distribution, so
+    a "label" is the target continuation token and the whole AL pipeline
+    (pool, MC scoring, Eq. 1) applies verbatim.
+
+    All shards of one experiment must share one Markov chain (pass the
+    same ``stream`` or the same ``stream_seed``): per-shard variation
+    comes from ``seed`` (which sequences) and ``temperature`` (how
+    peaked), not from different chains — the paper's "same distribution,
+    different proportions" regime.
+    """
+    from repro.data.digits import SyntheticDigits
+
+    if stream is None:
+        stream = SyntheticLMStream(vocab, seed=stream_seed)
+    if n == 0:
+        return SyntheticDigits(np.zeros((0, seq_len), np.int32),
+                               np.zeros((0,), np.int32))
+    toks, targets = stream.sample(n, seq_len, seed=seed,
+                                  temperature=temperature)
+    return SyntheticDigits(toks.astype(np.int32),
+                           targets[:, -1].astype(np.int32))
+
+
+def lm_federated_split(num_devices: int, samples_per_device: int, *,
+                       seq_len: int = 32, vocab: int = 256, seed: int = 0,
+                       unbalance: float = 0.3,
+                       temperature_spread: float = 0.5) -> List:
+    """Per-device LM shards for the fused engine: one shared Markov chain,
+    unbalanced shard sizes, and a per-device sampling temperature ramp.
+
+    Mirrors ``data.federated_split.federated_split`` for token data: every
+    device sees the SAME source distribution (one chain seeded from
+    ``seed``) in different proportions (``unbalance`` jitters the shard
+    sizes around ``samples_per_device``) and at a different temperature in
+    ``[1 − spread/2, 1 + spread/2]`` — hotter shards carry more
+    high-entropy sequences, so uncertainty-driven acquisition has
+    cross-device signal (the lever the LM bench gate measures).
+    """
+    from repro.data.federated_split import _partition_sizes
+
+    rng = np.random.default_rng(seed)
+    stream = SyntheticLMStream(vocab, seed=seed)
+    raw = np.maximum(
+        1.0 + rng.uniform(-unbalance, unbalance, size=num_devices), 0.05)
+    sizes = _partition_sizes(raw, samples_per_device * num_devices)
+    temps = np.linspace(1.0 - temperature_spread / 2,
+                        1.0 + temperature_spread / 2, num_devices)
+    return [make_lm_dataset(int(sizes[d]), seq_len=seq_len, vocab=vocab,
+                            seed=seed + 101 * (d + 1),
+                            temperature=float(temps[d]), stream=stream)
+            for d in range(num_devices)]

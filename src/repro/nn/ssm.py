@@ -72,7 +72,8 @@ def causal_conv1d(x, kernel, bias, *, state: Optional[jnp.ndarray] = None):
 
 
 # ------------------------------------------------------------------ SSD core
-def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None):
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None,
+                impl: str = "ref"):
     """SSD over a full sequence.
 
     x: [b, s, h, p]   (already dt-scaled NOT applied; we apply inside)
@@ -80,6 +81,11 @@ def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None):
     A: [h]            (negative decay rates)
     B, C: [b, s, g, n]
     Returns (y [b, s, h, p], final_state [b, h, p, n]).
+
+    ``impl``: ``"ref"`` (pure-JAX einsums, differentiable — the kernel
+    oracle) or ``"pallas"``/``"pallas_interpret"`` — route the quadratic
+    intra-chunk block through ``repro.kernels.ssd_scan`` (forward-only:
+    the kernel defines no VJP, so keep ``"ref"`` under ``jax.grad``).
     """
     b, s, h, p = x.shape
     g, n = B.shape[-2], B.shape[-1]
@@ -102,22 +108,42 @@ def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None):
     la = jnp.cumsum(dA, axis=2)                          # cumulative log-decay
     x_dt = xs * dts[..., None]
 
-    # intra-chunk (diagonal block): scores[l, m] = (C_l·B_m) exp(la_l - la_m)
-    cb = jnp.einsum("bclgn,bcmgn->bcglm", Cs, Bs)        # [b,nc,g,L,L]
-    # decay[b,c,h,l,m] = exp(la[l] - la[m]); exponent clamped at 0 so the
-    # (masked) m>l entries never overflow and poison gradients through where.
-    log_decay = (la[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
-                 - la[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
-    decay = jnp.exp(jnp.minimum(log_decay, 0.0))
-    mask = jnp.tril(jnp.ones((L, L), bool))
-    cbg = jnp.repeat(cb, rep, axis=2)                    # [b,nc,h,L,L]
-    scores = jnp.where(mask, cbg * decay, 0.0)
-    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", scores.astype(x.dtype), x_dt)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ssd_scan import ssd_intra_chunk
 
-    # chunk-final states: S_c = sum_m B_m x_m exp(la_last - la_m)
-    seg = jnp.exp(la[:, :, -1:, :] - la)                 # [b,nc,L,h]
-    Bg = jnp.repeat(Bs, rep, axis=3)                     # [b,nc,L,h,n]
-    chunk_states = jnp.einsum("bclhn,bclhp->bchpn", Bg, x_dt * seg[..., None])
+        # one kernel grid step per (batch · chunk · head)
+        Cc = jnp.repeat(Cs, rep, axis=3).transpose(0, 1, 3, 2, 4)
+        Bc = jnp.repeat(Bs, rep, axis=3).transpose(0, 1, 3, 2, 4)
+        y_k, st_k = ssd_intra_chunk(
+            Cc.reshape(b * nc * h, L, n),
+            Bc.reshape(b * nc * h, L, n),
+            la.transpose(0, 1, 3, 2).reshape(b * nc * h, L),
+            x_dt.transpose(0, 1, 3, 2, 4).reshape(b * nc * h, L, p),
+            interpret=(impl == "pallas_interpret"))
+        y_diag = y_k.reshape(b, nc, h, L, p).transpose(
+            0, 1, 3, 2, 4).astype(x.dtype)
+        chunk_states = st_k.reshape(b, nc, h, p, n).astype(x.dtype)
+    else:
+        # intra-chunk (diagonal block):
+        #   scores[l, m] = (C_l·B_m) exp(la_l - la_m)
+        cb = jnp.einsum("bclgn,bcmgn->bcglm", Cs, Bs)    # [b,nc,g,L,L]
+        # decay[b,c,h,l,m] = exp(la[l] - la[m]); exponent clamped at 0 so
+        # the (masked) m>l entries never overflow and poison gradients
+        # through where.
+        log_decay = (la[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+                     - la[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
+        decay = jnp.exp(jnp.minimum(log_decay, 0.0))
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        cbg = jnp.repeat(cb, rep, axis=2)                # [b,nc,h,L,L]
+        scores = jnp.where(mask, cbg * decay, 0.0)
+        y_diag = jnp.einsum("bchlm,bcmhp->bclhp", scores.astype(x.dtype),
+                            x_dt)
+
+        # chunk-final states: S_c = sum_m B_m x_m exp(la_last - la_m)
+        seg = jnp.exp(la[:, :, -1:, :] - la)             # [b,nc,L,h]
+        Bg = jnp.repeat(Bs, rep, axis=3)                 # [b,nc,L,h,n]
+        chunk_states = jnp.einsum("bclhn,bclhp->bchpn", Bg,
+                                  x_dt * seg[..., None])
 
     # inter-chunk recurrence over chunk states
     chunk_decay = jnp.exp(jnp.sum(dA, axis=2))           # [b,nc,h]
@@ -171,11 +197,12 @@ def _split_proj(z, cfg):
 
 
 def mamba2_apply(params, x, *, cfg, initial_state=None, return_state: bool = False,
-                 return_cache: bool = False):
+                 return_cache: bool = False, impl: str = "ref"):
     """Full-sequence Mamba-2 block. x: [B, S, D] → [B, S, D].
 
     ``return_cache=True`` (prefill) additionally returns the decode cache
     {"conv": last W-1 pre-conv activations, "state": final SSD state}.
+    ``impl`` selects the intra-chunk SSD core (see ``ssd_chunked``).
     """
     Bsz, S, _ = x.shape
     d_inner, H, P, N, G = ssm_dims(cfg)
@@ -196,7 +223,7 @@ def mamba2_apply(params, x, *, cfg, initial_state=None, return_state: bool = Fal
     A = -jnp.exp(params["A_log"])
     y, final_state = ssd_chunked(xc, dt.astype(x.dtype), A.astype(x.dtype),
                                  Bm, Cm, chunk=cfg.ssm_chunk,
-                                 initial_state=initial_state)
+                                 initial_state=initial_state, impl=impl)
     y = y + xc * params["D"].astype(x.dtype)[None, None, :, None]
     y = y.reshape(Bsz, S, d_inner)
     y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z), zero_centered=False)

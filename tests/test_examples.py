@@ -28,6 +28,7 @@ EXAMPLES = [
     ("examples.massive_fleet", ["--quick"]),
     ("examples.massive_cascade", ["--quick"]),
     ("examples.train_lm_selection", ["--quick"]),
+    ("examples.lm_fleet", ["--quick"]),
     ("examples.serve_decode", ["--quick", "--arch", "gemma2-2b"]),
 ]
 

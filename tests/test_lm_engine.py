@@ -1,0 +1,250 @@
+"""LM fleets through the compiled engines (core.model_adapter.SSMAdapter):
+one-dispatch fused AL rounds with the recurrent state excluded from Eq. 1,
+vmap == shard_map (the global-slot-0 excluded-leaf contract), and the
+async × hetero step-limit composition.
+
+Like tests/test_shard_engine.py, the mesh tests run over whatever host
+devices exist — 1 in a plain run, 8 in the CI job that sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (where the
+shard-local-device-0 caveat genuinely bites: shard k's local row 0 is
+global slot k·D_local, and only global slot 0 may win).
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counters
+from repro.core import hetero as hetero_mod
+from repro.core import topology as topo_mod
+from repro.core.engine import EdgeEngine
+from repro.core.federated import (FederatedALConfig, Trainer, default_async,
+                                  lm_config, lm_model_config)
+from repro.core.hetero import HeteroConfig
+from repro.core.model_adapter import SSMAdapter
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.data.lm import lm_federated_split, make_lm_dataset
+from repro.launch.mesh import make_device_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+VOCAB, SEQ = 64, 8
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    adapter = SSMAdapter(lm_model_config(vocab=VOCAB, seq_len=SEQ))
+    cfg = lm_config(8, seed=3, adapter=adapter, initial_train=6,
+                    acquisitions=2, k_per_acquisition=2, pool_window=8,
+                    mc_samples=2, train_steps_per_acq=2,
+                    initial_train_steps=2)
+    shards = lm_federated_split(cfg.num_devices, 12, seq_len=SEQ,
+                                vocab=VOCAB, seed=0)
+    test = make_lm_dataset(24, seq_len=SEQ, vocab=VOCAB, seed=5,
+                           stream_seed=0)
+    seed_set = make_lm_dataset(cfg.initial_train, seq_len=SEQ, vocab=VOCAB,
+                               seed=11, stream_seed=0)
+    return cfg, shards, seed_set, test
+
+
+def _leaves_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol)
+
+
+def _engine(cfg, shards, seed_set, test, rounds, **kw):
+    total = cfg.acquisitions * rounds
+    trainer = Trainer(cfg)
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=total, **kw)
+    return eng, trainer.init_params(jax.random.key(0))
+
+
+# ------------------------------------------------ fused rounds, one dispatch
+def test_lm_fused_rounds_one_dispatch(lm_setup):
+    cfg, shards, seed_set, test = lm_setup
+    rounds = 2
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds)
+    counters.reset_dispatches()
+    state, recs, final = eng.run_rounds_fused(eng.init_state(params0),
+                                              rounds)
+    assert counters.dispatch_count() == 1
+    accs = np.asarray(recs["agg_acc"])
+    assert accs.shape == (rounds,) and np.all(np.isfinite(accs))
+    assert eng._exclude_paths(params0) == ("recurrent/state",)
+
+
+def test_recurrent_state_is_per_device_and_out_of_eq1(lm_setup):
+    """The adapter's ``aggregate_mask`` contract end to end: after fused
+    rounds each device keeps its OWN recurrent state (never averaged,
+    never overwritten at re-dispatch), while every aggregated leaf is
+    dispatched identically; the returned fog model carries global slot
+    0's copy."""
+    cfg, shards, seed_set, test = lm_setup
+    rounds = 2
+    eng, params0 = _engine(cfg, shards, seed_set, test, rounds)
+    state, _, final = eng.run_rounds_fused(eng.init_state(params0), rounds)
+
+    rec = np.asarray(state.params["recurrent"]["state"])
+    # trained on different shards → the per-device copies diverge
+    assert not np.allclose(rec[0], rec[1])
+    # aggregated (re-dispatched) leaves are identical across devices
+    emb = np.asarray(state.params["embed"]["embedding"])
+    np.testing.assert_array_equal(emb[0], emb[1])
+    # the fog model's excluded leaf is global slot 0's, not the average
+    np.testing.assert_allclose(
+        np.asarray(final["recurrent"]["state"]), rec[0], atol=1e-6)
+    assert not np.allclose(np.asarray(final["recurrent"]["state"]),
+                           rec.mean(axis=0))
+
+
+# -------------------------------------------- mesh path (slot-0 contract)
+def test_lm_vmap_matches_mesh(lm_setup):
+    """vmap == shard_map ≤1e-5 for the LM fleet, INCLUDING the excluded
+    leaf: under a real multi-device mesh (the CI sharded job) shard k's
+    local row 0 is global slot k·D_local, so agreement with the vmap
+    path's slot 0 proves the one-hot global-representative fix (the
+    shard-local-device-0 caveat formerly documented in aggregation.py)."""
+    cfg, shards, seed_set, test = lm_setup
+    rounds = 2
+    ev, params0 = _engine(cfg, shards, seed_set, test, rounds)
+    sv, rv, fv = ev.run_rounds_fused(ev.init_state(params0), rounds)
+    em, _ = _engine(cfg, shards, seed_set, test, rounds,
+                    mesh=make_device_mesh())
+    sm, rm, fm = em.run_rounds_fused(em.init_state(params0), rounds)
+
+    _leaves_close(fv, fm)
+    _leaves_close(sv.params, sm.params)
+    np.testing.assert_allclose(np.asarray(rv["agg_acc"]),
+                               np.asarray(rm["agg_acc"]), atol=1e-5)
+
+
+def test_mesh_excluded_leaf_takes_global_slot0(lm_setup):
+    """Seed DISTINCT per-device recurrent states before the call: the
+    returned fog model must carry slot 0's trajectory on both paths —
+    a shard-local row-0 implementation would leak shard ≥1 states in."""
+    cfg, shards, seed_set, test = lm_setup
+    rounds = 1
+    ev, params0 = _engine(cfg, shards, seed_set, test, rounds)
+    D = cfg.num_devices
+
+    def seeded(state):
+        bump = jnp.arange(1, D + 1, dtype=jnp.float32)
+        rec = state.params["recurrent"]["state"]
+        rec = rec + bump[:, None, None, None]
+        params = dict(state.params)
+        params["recurrent"] = {"state": rec}
+        return state._replace(params=params)
+
+    _, _, fv = ev.run_rounds_fused(seeded(ev.init_state(params0)), rounds)
+    em, _ = _engine(cfg, shards, seed_set, test, rounds,
+                    mesh=make_device_mesh())
+    _, _, fm = em.run_rounds_fused(seeded(em.init_state(params0)), rounds)
+    np.testing.assert_allclose(np.asarray(fv["recurrent"]["state"]),
+                               np.asarray(fm["recurrent"]["state"]),
+                               atol=1e-5)
+
+
+# --------------------------------------------------- async engine coverage
+def test_lm_async_one_dispatch_excluded_state(lm_setup):
+    cfg, shards, seed_set, test = lm_setup
+    events = 2
+    eng, params0 = _engine(cfg, shards, seed_set, test, events)
+    counters.reset_dispatches()
+    state, recs, final = eng.run_async(
+        eng.init_state(params0), events,
+        async_cfg=default_async(cfg.num_devices))
+    assert counters.dispatch_count() == 1
+    rec = np.asarray(state.params["recurrent"]["state"])
+    assert not np.allclose(rec[0], rec[1])
+    # banked deltas zero their excluded leaves, so the fog model keeps the
+    # entry slot-0 recurrent state (per-device state never reaches Eq. 1)
+    np.testing.assert_allclose(
+        np.asarray(final["recurrent"]["state"]),
+        np.asarray(params0["recurrent"]["state"]), atol=1e-6)
+
+
+# ------------------------------------------- satellite: async × hetero
+@pytest.fixture(scope="module")
+def digit_setup():
+    cfg = FederatedALConfig(num_devices=8, acquisitions=2, mc_samples=2,
+                            k_per_acquisition=2, pool_window=8,
+                            train_steps_per_acq=4, initial_train=6,
+                            initial_train_steps=2, seed=5)
+    full = make_digit_dataset(96, seed=1)
+    test = make_digit_dataset(24, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def test_async_hetero_compute_profile_changes_training(digit_setup):
+    """``HeteroConfig`` slow_fraction/step_limits map onto the async
+    engine's traced per-device step-limit vector: the slow fleet trains
+    less, so its final model differs from the uncapped run."""
+    cfg, shards, seed_set, test = digit_setup
+    events = 2
+    eng, params0 = _engine(cfg, shards, seed_set, test, events)
+    acfg = default_async(cfg.num_devices)
+    hetero = HeteroConfig(slow_fraction=1.0, slow_steps_fraction=0.25)
+
+    counters.reset_dispatches()
+    _, _, f_slow = eng.run_async(eng.init_state(params0), events,
+                                 async_cfg=acfg, hetero=hetero)
+    assert counters.dispatch_count() == 1
+    _, _, f_fast = eng.run_async(eng.init_state(params0), events,
+                                 async_cfg=acfg)
+    assert any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(f_slow),
+                        jax.tree_util.tree_leaves(f_fast)))
+
+
+def test_async_hetero_explicit_step_limits_match_device_vector(digit_setup):
+    """An explicit ``step_limits`` tuple reaches the event loop verbatim
+    (the same [D] vector ``device_step_limits`` builds)."""
+    cfg, shards, seed_set, test = digit_setup
+    limits = (1, 1, 1, 1, 4, 4, 4, 4)
+    hetero = HeteroConfig(step_limits=limits)
+    sl = hetero_mod.device_step_limits(hetero, cfg.num_devices,
+                                       cfg.train_steps_per_acq)
+    np.testing.assert_array_equal(sl, np.asarray(limits, np.int32))
+    eng, params0 = _engine(cfg, shards, seed_set, test, 1)
+    _, recs, _ = eng.run_async(eng.init_state(params0), 1,
+                               async_cfg=default_async(cfg.num_devices),
+                               hetero=hetero)
+    assert np.all(np.isfinite(np.asarray(recs["agg_acc"])))
+
+
+def test_async_hetero_composes_with_topology_compute_scale(digit_setup):
+    """min-composition: the fog group's compute ceiling caps its slots
+    below the hetero profile where it is tighter."""
+    cfg, shards, seed_set, test = digit_setup
+    D, steps = cfg.num_devices, cfg.train_steps_per_acq
+    hetero = HeteroConfig(step_limits=(4, 4, 4, 4, 2, 2, 2, 2))
+    base = hetero_mod.device_step_limits(hetero, D, steps)
+    topo = topo_mod.uniform_topology(D, 2, compute_scale=(0.25, 1.0))
+    composed = topo_mod.topology_step_limits(topo, D, steps, base=base)
+    np.testing.assert_array_equal(composed,
+                                  [1, 1, 1, 1, 2, 2, 2, 2])
+    # and without a topology profile the hetero vector passes through
+    flat = topo_mod.uniform_topology(D, 2)
+    np.testing.assert_array_equal(
+        topo_mod.topology_step_limits(flat, D, steps, base=base), base)
+
+
+def test_async_rejects_straggler_rate(digit_setup):
+    """The async latency model IS the straggler model: a round-robin
+    Bernoulli straggler rate has no event-loop meaning and is rejected
+    rather than silently dropped."""
+    cfg, shards, seed_set, test = digit_setup
+    eng, params0 = _engine(cfg, shards, seed_set, test, 1)
+    with pytest.raises(ValueError, match="straggler"):
+        eng.run_async(eng.init_state(params0), 1,
+                      async_cfg=default_async(cfg.num_devices),
+                      hetero=HeteroConfig(straggler_rate=0.5))

@@ -1,0 +1,163 @@
+"""ModelAdapter protocol (core.model_adapter): LeNet bitwise stability
+through the refactor, LM adapter conformance, excluded-leaf naming, and
+the adapter-generic checkpoint / sharding / comms surfaces.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comms
+from repro.core.federated import FederatedALConfig, Trainer, lm_model_config
+from repro.core.model_adapter import (DecoderLMAdapter, LeNetAdapter,
+                                      SSMAdapter, excluded_paths)
+from repro.models.config import ModelConfig
+from repro.nn.lenet import LeNet, LeNetConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tiny_decoder() -> ModelConfig:
+    cfg = ModelConfig(family="decoder").reduced(
+        n_layers=1, d_model=64, vocab_size=64, max_seq_len=8)
+    return replace(cfg, dropout_rate=0.1)
+
+
+def _tiny_ssm() -> ModelConfig:
+    return lm_model_config(vocab=64, seq_len=8)
+
+
+def _adapters():
+    return [
+        ("lenet", LeNetAdapter(),
+         np.random.default_rng(0).normal(size=(3, 28, 28, 1))
+         .astype(np.float32)),
+        ("decoder", DecoderLMAdapter(_tiny_decoder()),
+         np.random.default_rng(0).integers(0, 64, size=(3, 8))
+         .astype(np.int32)),
+        ("ssm", SSMAdapter(_tiny_ssm()),
+         np.random.default_rng(0).integers(0, 64, size=(3, 8))
+         .astype(np.int32)),
+    ]
+
+
+# ------------------------------------------------- LeNet bitwise stability
+def test_lenet_adapter_is_bitwise_identical_to_lenet():
+    key = jax.random.key(0)
+    ad = LeNetAdapter()
+    pa = ad.init(key)
+    pl = LeNet.init(key, LeNetConfig())
+    for a, b in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    x = jnp.asarray(np.random.default_rng(1).normal(
+        size=(4, 28, 28, 1)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ad.apply(pa, x)),
+        np.asarray(LeNet.apply(pl, x, cfg=LeNetConfig(),
+                               deterministic=True)))
+    rng = jax.random.key(7)
+    np.testing.assert_array_equal(
+        np.asarray(ad.stochastic_apply(pa, x, rng)),
+        np.asarray(LeNet.apply(pl, x, cfg=LeNetConfig(), rng=rng,
+                               deterministic=False)))
+
+
+def test_trainer_defaults_to_lenet_adapter():
+    cfg = FederatedALConfig(num_devices=2, acquisitions=1, initial_train=4)
+    tr = Trainer(cfg)
+    assert isinstance(tr.adapter, LeNetAdapter)
+    assert tr.num_classes == LeNetConfig().num_classes
+    # legacy callers hit the same jit cache: the default adapter is one
+    # (hashable, ==) value across Trainer instances
+    assert tr.adapter == Trainer(cfg).adapter
+
+
+# ------------------------------------------------------ protocol conformance
+@pytest.mark.parametrize("name,adapter,x", _adapters(),
+                         ids=[a[0] for a in _adapters()])
+def test_protocol_conformance(name, adapter, x):
+    params = adapter.init(jax.random.key(0))
+    x = jnp.asarray(x)
+    logits = adapter.apply(params, x)
+    assert logits.shape == (x.shape[0], adapter.num_classes)
+    # MC scoring: dropout ACTIVE under stochastic_apply — two draws differ
+    s1 = adapter.stochastic_apply(params, x, jax.random.key(1))
+    s2 = adapter.stochastic_apply(params, x, jax.random.key(2))
+    assert s1.shape == logits.shape
+    assert not np.allclose(np.asarray(s1), np.asarray(s2))
+    y = jnp.zeros((x.shape[0],), jnp.int32)
+    mask = jnp.ones((x.shape[0],), jnp.float32)
+    loss = adapter.loss(params, x, y, mask, jax.random.key(3))
+    assert loss.shape == () and np.isfinite(float(loss))
+    grads = jax.grad(adapter.loss)(params, x, y, mask, jax.random.key(3))
+    assert all(np.all(np.isfinite(np.asarray(g)))
+               for g in jax.tree_util.tree_leaves(grads))
+
+
+def test_excluded_paths_per_adapter():
+    for name, adapter, _ in _adapters():
+        params = adapter.init(jax.random.key(0))
+        excl = excluded_paths(adapter, params)
+        if name == "ssm":
+            assert excl == ("recurrent/state",)
+        else:
+            assert excl == ()
+    assert SSMAdapter().aggregate_mask("recurrent/state")
+    assert not SSMAdapter().aggregate_mask("mamba/in_proj/kernel")
+
+
+# ------------------------------------------------ adapter-generic surfaces
+def test_checkpoint_roundtrip_adapter_tree(tmp_path):
+    from repro.checkpoint.msgpack_ckpt import load_pytree, save_pytree
+
+    adapter = SSMAdapter(_tiny_ssm())
+    params = adapter.init(jax.random.key(0))
+    path = str(tmp_path / "ssm.msgpack")
+    save_pytree(path, params)
+    loaded = load_pytree(path)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    lflat, ltreedef = jax.tree_util.tree_flatten(loaded)
+    assert treedef == ltreedef
+    for a, b in zip(flat, lflat):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_param_pspecs_cover_adapter_trees():
+    from repro.launch.sharding import param_pspecs
+
+    for name, adapter, _ in _adapters():
+        params = adapter.init(jax.random.key(0))
+        specs = param_pspecs(params)
+        assert (jax.tree_util.tree_structure(specs)
+                == jax.tree_util.tree_structure(params))
+
+
+# --------------------------------------- comms: per-tensor top-k index width
+def test_index_bytes_is_per_tensor():
+    assert comms.index_bytes(2**16 - 1) == 2
+    assert comms.index_bytes(2**16) == 4
+
+
+def test_topk_bytes_at_lm_embedding_scale():
+    """Satellite: a ≥2^16-element leaf (the LM embedding table) is billed
+    at uint32 indices while small leaves stay uint16 — per tensor, in one
+    upload."""
+    tree = {
+        "embed": jnp.zeros((1024, 64), jnp.float32),   # 65536 = 2^16 elems
+        "bias": jnp.zeros((128,), jnp.float32),
+    }
+    cfg = comms.CommsConfig(compression="topk", topk_fraction=0.05)
+    k_embed = comms.topk_k(65536, 0.05)
+    k_bias = comms.topk_k(128, 0.05)
+    expected = (k_embed * (4 + comms.VALUE_BYTES)
+                + k_bias * (2 + comms.VALUE_BYTES))
+    assert comms.upload_bytes(cfg, tree) == expected
+    # the same table one row smaller drops back to uint16 indices
+    small = {"embed": jnp.zeros((1023, 64), jnp.float32)}
+    k_small = comms.topk_k(1023 * 64, 0.05)
+    assert (comms.upload_bytes(cfg, small)
+            == k_small * (2 + comms.VALUE_BYTES))
