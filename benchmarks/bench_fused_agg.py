@@ -1,0 +1,171 @@
+"""Fused-aggregation micro-benchmark: unfused vs fused Eq. 1 pipeline.
+
+Times the int8 dequantize → staleness-decay → masked Eq. 1 reduce
+pipeline over a LeNet-sized stacked tree at D ∈ {64, 256} three ways:
+
+* ``unfused`` — three separately-jitted dispatches (dequantize the full
+  [D, ...] tree to f32, compute the decay weights, reduce), with the
+  dequantized tree materialized between dispatches — the lowering a
+  naive host loop would produce;
+* ``fused`` — the SAME math as ONE jitted program
+  (``kernels.ref.fused_agg_ref``): the single-dispatch lowering the
+  engines compile via ``aggregate_stacked``, where XLA fuses the
+  dequantize and decay into the reduce and never materializes the f32
+  tree;
+* ``pallas`` — the hand-fused Pallas kernel
+  (``kernels.fused_aggregation``).  On CPU this runs in INTERPRET mode
+  (a Python-level emulator, orders of magnitude slower than compiled
+  code), so it is recorded for parity bookkeeping but NOT gated here;
+  the compiled-kernel speedup claim needs a TPU run — tracked as the
+  ROADMAP TPU-validation item.
+
+The ``acceptance`` entry in ``BENCH_fused_agg.json`` gates the fusion
+claim CI can actually check: the one-dispatch fused program is
+>= ``FUSED_SPEEDUP_MIN`` (1.3x) faster than the unfused three-dispatch
+pipeline at D=256.
+
+    PYTHONPATH=src python -m benchmarks.run --only fused_agg [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core.comms import dequantize_int8
+from repro.kernels.fused_aggregation import fused_aggregate
+from repro.kernels.ref import fused_agg_ref
+
+Row = Tuple[str, float, str]
+
+FUSED_SPEEDUP_MIN = 1.3     # fused one-dispatch program vs unfused pipeline
+GATE_D = 256                # fleet size the acceptance entry gates at
+
+# LeNet-sized layer shapes (the digits CNN the engines train)
+LEAF_SHAPES = {
+    "conv1": (3, 3, 1, 8), "conv1_b": (8,),
+    "conv2": (3, 3, 8, 16), "conv2_b": (16,),
+    "dense": (256, 32), "dense_b": (32,),
+    "head": (32, 10), "head_b": (10,),
+}
+
+
+def _inputs(D: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    q = {k: jnp.asarray(rng.integers(-127, 128, (D,) + s), jnp.int8)
+         for k, s in LEAF_SHAPES.items()}
+    scales = {k: jnp.asarray(rng.uniform(1e-4, 1e-2, D), jnp.float32)
+              for k in LEAF_SHAPES}
+    raw = jnp.asarray(rng.uniform(0.1, 1.0, D), jnp.float32)
+    stale = jnp.asarray(rng.integers(0, 5, D), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, D), jnp.float32)
+    return q, scales, raw, stale, mask
+
+
+def _time_us(fn, repeats: int) -> float:
+    jax.block_until_ready(fn())                    # warmup: compile
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench_fused_agg(quick: bool = False) -> Tuple[List[Row], Dict]:
+    rows: List[Row] = []
+    sizes = [GATE_D] if quick else [64, GATE_D]
+    repeats = 5 if quick else 20
+    payload: Dict = {"device_counts": {}, "backend": jax.default_backend(),
+                     "leaf_shapes": {k: list(s)
+                                     for k, s in LEAF_SHAPES.items()},
+                     "caveat": (
+                         "the pallas arm runs in interpret mode off-TPU "
+                         "(Python emulation — not a performance "
+                         "measurement); the gated statistic is the fused "
+                         "single-dispatch XLA program the engines "
+                         "compile.  Compiled-kernel speedups need a TPU "
+                         "run (ROADMAP: TPU validation).")}
+
+    for D in sizes:
+        q, scales, raw, stale, mask = _inputs(D)
+
+        # unfused: three dispatches, f32 tree materialized in between
+        dequant = jax.jit(lambda q, s: jax.tree_util.tree_map(
+            lambda l, sc: dequantize_int8(
+                l, sc.reshape((-1,) + (1,) * (l.ndim - 1))), q, s))
+        weights = jax.jit(lambda r, st, m: agg.staleness_weights(
+            r, st, m, kind="exp", rate=0.5))
+        reduce_ = jax.jit(agg.weighted_sum_stacked)
+
+        def unfused():
+            tree = dequant(q, scales)
+            w = weights(raw, stale, mask)
+            return reduce_(tree, w)
+
+        # fused: the engines' lowering — same math, ONE program
+        fused = jax.jit(lambda q, s, r, st, m: fused_agg_ref(
+            q, r, staleness=st, mask=m, kind="exp", rate=0.5, scales=s))
+
+        def fused_run():
+            return fused(q, scales, raw, stale, mask)
+
+        kernel = jax.jit(lambda q, s, r, st, m: fused_aggregate(
+            q, r, staleness=st, mask=m, kind="exp", rate=0.5, scales=s))
+
+        def kernel_run():
+            return kernel(q, scales, raw, stale, mask)
+
+        np.testing.assert_allclose(
+            np.asarray(jax.tree_util.tree_leaves(unfused())[0]),
+            np.asarray(jax.tree_util.tree_leaves(fused_run())[0]),
+            atol=1e-5)
+
+        un_us = _time_us(unfused, repeats)
+        fu_us = _time_us(fused_run, repeats)
+        # interpret mode is slow — one timed call is plenty off-TPU
+        pl_us = _time_us(kernel_run,
+                         repeats if jax.default_backend() == "tpu" else 1)
+        speedup = un_us / fu_us
+        payload["device_counts"][D] = {
+            "unfused_us": un_us, "fused_us": fu_us,
+            "pallas_us": pl_us,
+            "pallas_interpreted": jax.default_backend() != "tpu",
+            "speedup_fused_vs_unfused": speedup,
+        }
+        rows.append((f"fused_agg/unfused_D{D}", un_us, "dispatches=3"))
+        rows.append((f"fused_agg/fused_D{D}", fu_us,
+                     f"dispatches=1,speedup={speedup:.2f}x"))
+        rows.append((f"fused_agg/pallas_D{D}", pl_us,
+                     "interpret" if jax.default_backend() != "tpu"
+                     else "compiled"))
+
+    gated = payload["device_counts"][GATE_D]
+    payload["acceptance"] = {
+        "criterion": (f"fused single-dispatch aggregation program >= "
+                      f"{FUSED_SPEEDUP_MIN}x faster than the unfused "
+                      f"three-dispatch pipeline at D={GATE_D}"),
+        "device_count": GATE_D,
+        "unfused_us": gated["unfused_us"],
+        "fused_us": gated["fused_us"],
+        "speedup": gated["speedup_fused_vs_unfused"],
+        "met": bool(gated["speedup_fused_vs_unfused"]
+                    >= FUSED_SPEEDUP_MIN),
+    }
+
+    os.makedirs("experiments/results", exist_ok=True)
+    with open("experiments/results/BENCH_fused_agg.json", "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return rows, payload
+
+
+if __name__ == "__main__":
+    for row in bench_fused_agg(quick=True)[0]:
+        print(",".join(str(c) for c in row))

@@ -41,6 +41,7 @@ BENCHES = [
     ("topology", "benchmarks.bench_topology", "bench_topology"),
     ("stream", "benchmarks.bench_stream", "bench_stream"),
     ("lm", "benchmarks.bench_lm", "bench_lm"),
+    ("fused_agg", "benchmarks.bench_fused_agg", "bench_fused_agg"),
     ("roofline", "benchmarks.roofline", "bench_roofline"),
 ]
 

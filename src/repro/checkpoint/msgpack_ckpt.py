@@ -47,10 +47,22 @@ def _encode_leaf(x):
     }
 
 
+def _np_dtype(name: str) -> np.dtype:
+    """``np.dtype`` lookup that also resolves the ml_dtypes extension
+    types numpy itself does not know (``"bfloat16"`` — a bf16 EngineState
+    round-trips through the same flat-key encoding as fp32)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def _decode_leaf(d):
     if d["kind"] == "py":
         return d["value"]
-    arr = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(d["shape"])
+    arr = np.frombuffer(d["data"], dtype=_np_dtype(d["dtype"])).reshape(d["shape"])
     return jnp.asarray(arr)
 
 

@@ -182,12 +182,15 @@ def opt_model(models: Sequence, scores: Sequence[float]):
 
 
 # --------------------------------------------------------------- stacked axis
-def weighted_sum_stacked(stacked, w, *,
+def weighted_sum_stacked(stacked, w, *, out_dtype=None,
                          exclude: Optional[Callable[[str], bool]] = None):
     """Σ_i w_i · leaf[i] over the leading device axis; ``w`` [D] is applied
-    as-is (already normalized — see ``normalize_weights``).  Excluded leaves
-    take device 0's slice.  The building block the engine psum-reduces under
-    ``shard_map`` (each shard contributes its local partial sum).
+    as-is (already normalized — see ``normalize_weights``).  Accumulates in
+    f32 and casts each output leaf to ``out_dtype`` (default: the leaf's own
+    dtype — the storage-dtype discipline a bf16 fleet over an fp32 master
+    relies on).  Excluded leaves take device 0's slice.  The building block
+    the engine psum-reduces under ``shard_map`` (each shard contributes its
+    local partial sum).
 
     CAVEAT: ``exclude`` composes with the single-host stacked path only —
     inside a shard_map'd program a psum over the result would SUM each
@@ -203,9 +206,57 @@ def weighted_sum_stacked(stacked, w, *,
         if exclude is not None and exclude(_path_str(path)):
             return leaf[0]
         wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
-        return jnp.sum(wb * leaf.astype(jnp.float32), axis=0).astype(leaf.dtype)
+        return jnp.sum(wb * leaf.astype(jnp.float32), axis=0).astype(
+            leaf.dtype if out_dtype is None else out_dtype)
 
     return jax.tree_util.tree_map_with_path(agg, stacked)
+
+
+# ----------------------------------------------------- Eq. 1 reduce routing
+AGG_IMPLS = ("auto", "ref", "pallas", "pallas_interpret")
+
+
+def resolve_aggregate_impl(impl: Optional[str]) -> str:
+    """``auto`` → the fused Pallas kernel on TPU, the jnp reference
+    elsewhere (interpret-mode Pallas is functional but slow on CPU — the
+    same policy as ``engine.resolve_scorer``)."""
+    if impl in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in AGG_IMPLS:
+        raise ValueError(
+            f"unknown aggregate_impl {impl!r}: use {' | '.join(AGG_IMPLS)}")
+    return impl
+
+
+def aggregate_stacked(stacked, w, *, impl: str = "ref", segment_ids=None,
+                      num_segments: Optional[int] = None, out_dtype=None):
+    """THE routed Eq. 1 reduce: Σ_i w_i · leaf[i] over the stacked axis,
+    flat (→ ``[...]``) or per-segment (→ ``[G, ...]`` local partials, the
+    ``topology.segment_sum_stacked`` contract).  ``w`` is applied AS-IS —
+    under ``shard_map`` the coefficients are normalized GLOBALLY and each
+    shard reduces its local rows before the fleet psum, so no impl may
+    renormalize here.
+
+    ``impl="ref"`` is bitwise the pre-existing jnp lowering
+    (``weighted_sum_stacked`` / ``segment_sum_stacked``);
+    ``"pallas"``/``"pallas_interpret"`` route to the one-pass fused kernel
+    (``kernels.fused_aggregation``, preweighted mode), f32-accumulated to
+    float tolerance of the reference.  Both fused engines and the two-tier
+    topology path call this for every per-round reduce, so one static
+    ``aggregate_impl`` knob (engine constructor / ``FederatedALConfig``)
+    swaps the lowering without any new dispatches."""
+    impl = resolve_aggregate_impl(impl)
+    if impl == "ref":
+        if segment_ids is None:
+            return weighted_sum_stacked(stacked, w, out_dtype=out_dtype)
+        from repro.core.topology import segment_sum_stacked
+        return segment_sum_stacked(stacked, w, segment_ids, num_segments,
+                                   out_dtype=out_dtype)
+    from repro.kernels.fused_aggregation import fused_aggregate
+    return fused_aggregate(
+        stacked, w, normalize=False, segment_ids=segment_ids,
+        num_segments=num_segments, out_dtype=out_dtype,
+        interpret=True if impl == "pallas_interpret" else None)
 
 
 def weighted_average_stacked(stacked, weights, *, mask=None,

@@ -335,12 +335,16 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
-        compress = comms_key is not None and comms_key[0] != "none"
+        # non-None comms_key == lossy wire: a real codec OR a sub-f32
+        # compute_dtype (the bf16 wire rounds values in-compile too)
+        compress = comms_key is not None
         use_ef = compress and comms_key[2]
         cc = (comms_mod.CommsConfig(compression=comms_key[0],
                                     topk_fraction=comms_key[1],
-                                    error_feedback=comms_key[2])
+                                    error_feedback=comms_key[2],
+                                    compute_dtype=comms_key[3])
               if compress else None)
+        agg_impl = engine.aggregate_impl
         dist, sigma, has_quorum, has_timer, decay, decay_rate = async_key
         dist_key = (dist, sigma)
         faults_on = faults_key is not None
@@ -693,8 +697,8 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                 accept_any = jnp.sum(accept_g) > 0
                 w_g = jnp.where(accept_any, w_g, jnp.zeros_like(w_g))
 
-                agg_delta = fpsum(
-                    agg_mod.weighted_sum_stacked(sent, local(w_g)))
+                agg_delta = fpsum(agg_mod.aggregate_stacked(
+                    sent, local(w_g), impl=agg_impl))
                 if topo_on:
                     # intra-fog Eq. 1: each accepted delta folds into ITS
                     # fog group with per-group staleness-decayed alphas; a
@@ -705,8 +709,9 @@ def _get_async_jit(engine, events: int, aggregation: str, comms_key,
                         stale_g, kind=decay, rate=decay_rate)
                     alpha, beta, group_any = topo_mod.two_tier_weights(
                         decayed, accept_g, group_ids, G)
-                    fold = fpsum(topo_mod.segment_sum_stacked(
-                        sent, local(alpha), gid_l, G))
+                    fold = fpsum(agg_mod.aggregate_stacked(
+                        sent, local(alpha), impl=agg_impl,
+                        segment_ids=gid_l, num_segments=G))
                     fog_cand = tmap(lambda f, d: f + mix_rate * d, fog, fold)
                     fog_cand = tmap(
                         lambda a, b: jnp.where(group_any.reshape(
@@ -1020,9 +1025,12 @@ def run_events_fused(engine, state, events: int, *,
             "step_limits) maps onto the event loop")
 
     comms_key = None
-    if comms is not None and comms.compression != "none":
+    wire = ("float32" if comms is None
+            else getattr(comms, "compute_dtype", "float32"))
+    if comms is not None and (comms.compression != "none"
+                              or wire != "float32"):
         comms_key = (comms.compression, comms.topk_fraction,
-                     comms.error_feedback)
+                     comms.error_feedback, wire)
         if comms.error_feedback and not jax.tree_util.tree_leaves(
                 state.residual):
             state = state._replace(residual=jax.tree_util.tree_map(

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 
 COMPRESSIONS = ("none", "int8", "topk")
+COMPUTE_DTYPES = ("float32", "bfloat16")
 
 # Wire-format constants (bytes).  The simulated link serializes float32
 # payloads, per-tensor flat indices at the narrowest sufficient width —
@@ -113,6 +114,18 @@ class CommsConfig:
         independent — e.g. raw edge→fog uploads over the cheap local link
         with ``int8`` across the expensive fog→cloud backhaul.  Ignored
         without a topology.
+    ``compute_dtype``
+        ``"float32" | "bfloat16"`` (default ``"float32"``).  Wire dtype of
+        the device-side upload VALUES — the mixed-precision fleet: each
+        f32 delta crosses the link rounded to bf16 (the engines round-trip
+        it in-compile, so the fog node aggregates exactly what the wire
+        carried, f32-accumulated over the fp32 master model) and the byte
+        ledgers bill 2 bytes/value instead of 4.  Composes with ``topk``
+        (kept values ship at the wire width) and with error feedback (the
+        residual then carries the bf16 rounding error across rounds);
+        ``int8`` payloads are already 1 byte/value with f32 scales, so the
+        knob does not change their wire format.  Downlink re-dispatch
+        stays at the master model's dtype (full precision).
     """
 
     compression: str = "none"
@@ -120,8 +133,14 @@ class CommsConfig:
     error_feedback: bool = True
     upload_samples: bool = False
     fog_compression: str = "none"
+    compute_dtype: str = "float32"
 
     def __post_init__(self):
+        if self.compute_dtype not in COMPUTE_DTYPES:
+            raise ValueError(
+                f"unknown compute_dtype {self.compute_dtype!r}: "
+                f"use {' | '.join(COMPUTE_DTYPES)}"
+            )
         if self.compression not in COMPRESSIONS:
             raise ValueError(
                 f"unknown compression {self.compression!r}: "
@@ -154,16 +173,32 @@ def topk_k(n: int, fraction: float) -> int:
     return max(1, min(n, math.ceil(fraction * n)))
 
 
+def value_bytes(cfg: Optional[CommsConfig]) -> int:
+    """Wire width of ONE uploaded payload value: the real bytes a value
+    occupies on the simulated link — 2 under ``compute_dtype="bfloat16"``,
+    else the float32 ``VALUE_BYTES``.  (int8 payloads are billed at their
+    own 1-byte width by ``upload_bytes`` directly.)"""
+    if cfg is not None and cfg.compute_dtype == "bfloat16":
+        return 2
+    return VALUE_BYTES
+
+
 def upload_bytes(cfg: Optional[CommsConfig], params) -> int:
     """Exact uplink bytes for ONE device's model/delta upload.
 
-    ``none``: full float32 payload.  ``int8``: one byte per element plus a
-    float32 scale per tensor.  ``topk``: (flat index at the narrowest
-    sufficient width + float32 value) per kept entry.  Metadata is billed
-    separately (``METADATA_BYTES_PER_UPLOAD``).
+    ``none``: full payload at the wire width (float32, or 2 bytes/value
+    under ``compute_dtype="bfloat16"``).  ``int8``: one byte per element
+    plus a float32 scale per tensor.  ``topk``: (flat index at the
+    narrowest sufficient width + wire-width value) per kept entry.
+    Metadata is billed separately (``METADATA_BYTES_PER_UPLOAD``).
     """
     leaves = jax.tree_util.tree_leaves(params)
+    vb = value_bytes(cfg)
     if cfg is None or cfg.compression == "none":
+        if vb != VALUE_BYTES:
+            return sum(
+                int(np.prod(l.shape, dtype=np.int64)) * vb for l in leaves
+            )
         return sum(leaf_bytes(l) for l in leaves)
     if cfg.compression == "int8":
         return sum(
@@ -171,8 +206,7 @@ def upload_bytes(cfg: Optional[CommsConfig], params) -> int:
         )
     sizes = [int(np.prod(l.shape, dtype=np.int64)) for l in leaves]
     return sum(
-        topk_k(n, cfg.topk_fraction) * (index_bytes(n) + VALUE_BYTES)
-        for n in sizes
+        topk_k(n, cfg.topk_fraction) * (index_bytes(n) + vb) for n in sizes
     )
 
 
@@ -196,12 +230,24 @@ def quantize_int8_stochastic(key, x):
     Returns ``(q int8, scale f32)`` with ``scale = max|x|/127``; the
     round-trip error is bounded by one quantization step:
     ``|x − q·scale| ≤ scale`` elementwise, and E[q·scale] = x.
+
+    The quantization math runs in f32 (bf16 inputs are upcast first).  A
+    tensor containing ANY non-finite value poisons the returned scale to
+    NaN instead of feeding inf/NaN through ``floor``/``clip`` into the
+    int8 cast (whose result XLA leaves backend-defined): the dequantized
+    round-trip is then deterministically all-NaN, which the fog-side
+    finiteness guard (``faults.GuardConfig``) rejects wholesale — the
+    same verdict the uncompressed upload would get.
     """
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
-    scaled = x / scale
+    x = jnp.asarray(x, jnp.float32)
+    finite = jnp.isfinite(x)
+    safe = jnp.where(finite, x, 0.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(safe)), 1e-12) / 127.0
+    scaled = safe / scale
     lo = jnp.floor(scaled)
     up = jax.random.bernoulli(key, scaled - lo, x.shape)
     q = jnp.clip(lo + up, -127, 127).astype(jnp.int8)
+    scale = jnp.where(jnp.all(finite), scale, jnp.float32(jnp.nan))
     return q, scale
 
 
@@ -219,22 +265,39 @@ def topk_mask(x, k: int):
     return mask.reshape(x.shape)
 
 
+def wire_cast(cfg: Optional[CommsConfig], x):
+    """Round one payload tensor through the configured wire dtype: under
+    ``compute_dtype="bfloat16"`` the values lose their low mantissa bits
+    exactly as a 2-byte link would ship them (round-trip back to the
+    storage dtype so downstream aggregation math is unchanged f32);
+    float32 is the identity."""
+    if cfg is not None and cfg.compute_dtype == "bfloat16":
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+    return x
+
+
 def compress_tree(cfg: CommsConfig, key, tree):
     """Apply the configured codec leafwise: returns the DEQUANTIZED tree
-    (what the fog node reconstructs from the wire payload).  Shape-static and
-    vmap-safe — the engine vmaps this over the stacked device axis."""
-    if cfg.compression == "none":
+    (what the fog node reconstructs from the wire payload).  With
+    ``compute_dtype="bfloat16"`` the ``none``/``topk`` payload values are
+    additionally rounded through the bf16 wire (``wire_cast``); int8 codes
+    are narrower than the wire dtype already and keep their f32 scales.
+    Shape-static and vmap-safe — the engine vmaps this over the stacked
+    device axis."""
+    if cfg.compression == "none" and cfg.compute_dtype == "float32":
         return tree
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
     out = []
     for k_leaf, leaf in zip(keys, leaves):
-        if cfg.compression == "int8":
+        if cfg.compression == "none":
+            out.append(wire_cast(cfg, leaf))
+        elif cfg.compression == "int8":
             q, scale = quantize_int8_stochastic(k_leaf, leaf)
             out.append(dequantize_int8(q, scale))
         else:  # topk
             k = topk_k(leaf.size, cfg.topk_fraction)
-            out.append(leaf * topk_mask(leaf, k))
+            out.append(wire_cast(cfg, leaf * topk_mask(leaf, k)))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -313,8 +376,11 @@ def comms_report(
 
     report = {
         "compression": "none" if cfg is None else cfg.compression,
+        "compute_dtype": "float32" if cfg is None else cfg.compute_dtype,
         "error_feedback": bool(
-            cfg is not None and cfg.error_feedback and cfg.compression != "none"
+            cfg is not None
+            and cfg.error_feedback
+            and (cfg.compression != "none" or cfg.compute_dtype != "float32")
         ),
         "param_bytes": pbytes,
         "upload_bytes_per_device": ubytes,
@@ -341,7 +407,7 @@ def comms_report(
 
 
 STATIC_FIELDS = (
-    "compression", "error_feedback", "param_bytes",
+    "compression", "compute_dtype", "error_feedback", "param_bytes",
     "upload_bytes_per_device", "compression_ratio",
 )
 
@@ -510,6 +576,7 @@ def experiment_telemetry(round_reports) -> Optional[Dict[str, Any]]:
     last = rounds[-1]["comms"]
     return {
         "compression": last["compression"],
+        "compute_dtype": last.get("compute_dtype", "float32"),
         "error_feedback": last["error_feedback"],
         "compression_ratio": last["compression_ratio"],
         "param_bytes": last["param_bytes"],

@@ -235,7 +235,7 @@ class EdgeEngine:
     def __init__(self, trainer, cfg, device_data: Sequence, seed_data,
                  test_set=None, *, total_acquisitions: Optional[int] = None,
                  scorer: Optional[str] = None, unroll: Optional[bool] = None,
-                 mesh=None):
+                 aggregate_impl: Optional[str] = None, mesh=None):
         self.trainer = trainer
         self.cfg = cfg
         self.mesh = mesh
@@ -271,6 +271,12 @@ class EdgeEngine:
         self.scorer = resolve_scorer(scorer if scorer is not None
                                      else getattr(cfg, "scorer", "auto"))
         self._score_fn = _make_score_fn(cfg.acquisition_fn, self.scorer)
+        # Eq. 1 reduce lowering (aggregation.aggregate_stacked): "ref" is
+        # the jnp program, "pallas" the fused one-pass kernel; resolved
+        # here so it is a static fact of the engine (and its jit cache key)
+        self.aggregate_impl = agg_mod.resolve_aggregate_impl(
+            aggregate_impl if aggregate_impl is not None
+            else getattr(cfg, "aggregate_impl", "auto"))
 
         if seed_data is not None and len(seed_data) > 0:
             self.seed_images = jnp.asarray(seed_data.images)
@@ -453,7 +459,8 @@ class EdgeEngine:
                 _no_seed(getattr(self.trainer, "cfg", None)),
                 _no_seed(self.cfg),
                 self.images.shape, self.capacity, self.window, self.k,
-                self.scorer, self.unroll, self.seed_images.shape,
+                self.scorer, self.aggregate_impl, self.unroll,
+                self.seed_images.shape,
                 None if self.test_images is None else self.test_images.shape,
                 record, self.mesh)
 
@@ -544,12 +551,20 @@ class EdgeEngine:
         contributes nothing, zero-weight-sum rounds fall back to uniform.
 
         ``comms_key`` is the static ``(compression, topk_fraction,
-        error_feedback)`` triple (or None): with a lossy codec the round
-        compresses per-device DELTAS w_i − w_dispatched (plus the carried
+        error_feedback, compute_dtype)`` tuple (or None): with a lossy
+        wire — a real codec, or a bf16 ``compute_dtype`` rounding the
+        upload values to the 2-byte width — the round compresses
+        per-device DELTAS w_i − w_dispatched (plus the carried
         error-feedback residual) inside the program and aggregates
         BASE + Σ αᵢ·C(Δᵢ + eᵢ) — exact for C = identity because Σα = 1 —
         so compressed rounds stay one dispatch and shard unchanged (the
         codec is per-device-local; only the weighted delta sum is psum'd).
+        Every Eq. 1 reduce routes through ``aggregation
+        .aggregate_stacked`` with the engine's static ``aggregate_impl``
+        (``"ref"`` = the jnp program below, ``"pallas"`` = the fused
+        one-pass kernel in ``kernels.fused_aggregation``, preweighted
+        mode — local rows reduce with the GLOBAL coefficients, partials
+        psum'd, so the kernel never renormalizes under the mesh).
 
         ``hetero_key`` is the static ``(decay, decay_rate, buffer_stale,
         use_step_limits)`` tuple (or None) from a ``core.hetero
@@ -612,12 +627,17 @@ class EdgeEngine:
         """
 
         def build():
-            compress = comms_key is not None and comms_key[0] != "none"
+            # comms_key is only non-None when the wire is lossy: a real
+            # codec OR a sub-f32 compute_dtype (bf16 rounding is itself a
+            # codec — identity at fraction 1.0 it is not)
+            compress = comms_key is not None
             use_ef = compress and comms_key[2]
             cc = (comms_mod.CommsConfig(compression=comms_key[0],
                                         topk_fraction=comms_key[1],
-                                        error_feedback=comms_key[2])
+                                        error_feedback=comms_key[2],
+                                        compute_dtype=comms_key[3])
                   if compress else None)
+            agg_impl = self.aggregate_impl
             hetero_on = hetero_key is not None
             if hetero_on:
                 h_decay, h_rate, h_buffer, h_steps = hetero_key
@@ -933,8 +953,8 @@ class EdgeEngine:
                         # delta-form Eq. 1: BASE + Σ αᵢ·uᵢ (exact for
                         # C = identity and no faults because Σα = 1); only
                         # the weighted sum is psum'd
-                        agg = fpsum(
-                            agg_mod.weighted_sum_stacked(sent, local(w_g)))
+                        agg = fpsum(agg_mod.aggregate_stacked(
+                            sent, local(w_g), impl=agg_impl))
                         if topo_on:
                             # inter-fog delta form: Σ_g β_g·F_g is the
                             # sync base (β ≡ 1.0 at G=1, so this is the
@@ -943,8 +963,9 @@ class EdgeEngine:
                             # compresses the per-group delta sums first
                             base = topo_mod.group_reduce_stacked(fog, beta)
                             if fog_compress or fog_local:
-                                fog_delta = fpsum(topo_mod.segment_sum_stacked(
-                                    sent, local(alpha), gid_l, G))
+                                fog_delta = fpsum(agg_mod.aggregate_stacked(
+                                    sent, local(alpha), impl=agg_impl,
+                                    segment_ids=gid_l, num_segments=G))
                             if fog_compress:
                                 fog_qkeys = jax.vmap(
                                     lambda i: jax.random.fold_in(fogkey, i))(
@@ -967,11 +988,13 @@ class EdgeEngine:
                         # tolerance instead of drifting round over round
                         # (and makes the topo sync round BITWISE flat:
                         # alpha·beta telescopes to the flat weights)
-                        agg = agg_mod.weighted_sum_stacked(params, local(w_g))
+                        agg = agg_mod.aggregate_stacked(params, local(w_g),
+                                                        impl=agg_impl)
                         if h_buffer:
                             agg = tmap(jnp.add, agg,
-                                       agg_mod.weighted_sum_stacked(
-                                           pending, local(w_g)))
+                                       agg_mod.aggregate_stacked(
+                                           pending, local(w_g),
+                                           impl=agg_impl))
                         agg = fpsum(agg)
                     if hetero_on or fault_like:
                         # zero-accept guard: no surviving uploads → the
@@ -1004,13 +1027,17 @@ class EdgeEngine:
                             if delta_form_always:
                                 fog_cand = tmap(jnp.add, fog, fog_delta)
                             else:
-                                fog_cand = fpsum(topo_mod.segment_sum_stacked(
-                                    params, local(alpha), gid_l, G))
+                                fog_cand = fpsum(agg_mod.aggregate_stacked(
+                                    params, local(alpha), impl=agg_impl,
+                                    segment_ids=gid_l, num_segments=G))
                                 if h_buffer:
                                     fog_cand = tmap(
                                         jnp.add, fog_cand,
-                                        fpsum(topo_mod.segment_sum_stacked(
-                                            pending, local(alpha), gid_l, G)))
+                                        fpsum(agg_mod.aggregate_stacked(
+                                            pending, local(alpha),
+                                            impl=agg_impl,
+                                            segment_ids=gid_l,
+                                            num_segments=G)))
                             fog_cand = tmap(
                                 lambda a, b: jnp.where(
                                     group_any.reshape(
@@ -1307,9 +1334,15 @@ class EdgeEngine:
         self._check_capacity(state, rounds=rounds)
         D = self.num_devices
         comms_key = None
-        if comms is not None and comms.compression != "none":
+        wire = ("float32" if comms is None
+                else getattr(comms, "compute_dtype", "float32"))
+        if comms is not None and (comms.compression != "none"
+                                  or wire != "float32"):
+            # a sub-f32 wire is a lossy codec in its own right: it forces
+            # the delta-form program (and may carry an EF residual) even
+            # at compression="none"
             comms_key = (comms.compression, comms.topk_fraction,
-                         comms.error_feedback)
+                         comms.error_feedback, wire)
             if comms.error_feedback and not jax.tree_util.tree_leaves(
                     state.residual):
                 # fresh error-feedback buffer, mirroring params (inherits

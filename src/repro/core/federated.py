@@ -64,6 +64,9 @@ class FederatedALConfig:
     ``acquisition_fn`` (default ``"entropy"``) and ``aggregation``
     (default ``"average"``, Eq. 1) pick the scoring and fog strategies;
     ``scorer`` (default ``"auto"``) picks the Pallas-vs-jnp scoring path;
+    ``aggregate_impl`` (default ``"auto"``) picks the Eq. 1 reduce
+    lowering the same way — the fused Pallas aggregation kernel on TPU,
+    the jnp reference elsewhere (``aggregation.aggregate_stacked``);
     ``seed`` (default 0) drives every PRNG stream.  ``adapter`` (default
     ``None`` = the paper's LeNet) is a ``core.model_adapter.ModelAdapter``
     — any init/apply/loss bundle (decoder LM, SSM, ...) runs through the
@@ -85,6 +88,7 @@ class FederatedALConfig:
     batch_size: int = 64
     seed: int = 0
     scorer: str = "auto"             # auto | jnp | pallas | pallas_interpret
+    aggregate_impl: str = "auto"     # auto | ref | pallas | pallas_interpret
     adapter: Optional[ModelAdapter] = None  # None = LeNet (the paper)
 
 

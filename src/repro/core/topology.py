@@ -191,17 +191,21 @@ def topology_latency_means(topo: FogTopology,
 
 
 # ------------------------------------------------------------- traced helpers
-def segment_sum_stacked(stacked, coeff, ids, num_groups: int):
+def segment_sum_stacked(stacked, coeff, ids, num_groups: int, *,
+                        out_dtype=None):
     """Per-group Σ_{i∈g} coeff_i · leaf[i] over the leading [D_local] axis:
     the intra-fog Eq. 1 reduction.  Returns a [G, ...] pytree of LOCAL
     partials — under shard_map the caller psums them over every fleet mesh
     axis (group-local psum + fog-axis psum), which is exact because groups
-    are decoupled from shards."""
+    are decoupled from shards.  Accumulates f32, casts each output leaf to
+    ``out_dtype`` (default: the leaf's own dtype)."""
 
     def red(leaf):
         cb = coeff.reshape((-1,) + (1,) * (leaf.ndim - 1))
         return jax.ops.segment_sum(cb * leaf.astype(jnp.float32), ids,
-                                   num_segments=num_groups).astype(leaf.dtype)
+                                   num_segments=num_groups).astype(
+                                       leaf.dtype if out_dtype is None
+                                       else out_dtype)
 
     return jax.tree_util.tree_map(red, stacked)
 

@@ -44,6 +44,52 @@ def attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     return out.reshape(B, Sq, H, d).astype(q.dtype)
 
 
+# ------------------------------------------------------- fused aggregation
+def fused_agg_ref(stacked, weights, *, staleness=None, mask=None,
+                  kind: str = "none", rate: float = 0.5,
+                  normalize: bool = True, segment_ids=None,
+                  num_segments: Optional[int] = None, scales=None,
+                  out_dtype=None):
+    """Oracle for ``kernels.fused_aggregation.fused_aggregate`` — BITWISE
+    the existing composition the engines lower today: (optional)
+    ``comms.dequantize_int8`` → ``aggregation.staleness_weights`` (when
+    ``normalize``; bare ``decay·mask`` scaling otherwise, the engines'
+    preweighted mode) → ``aggregation.weighted_sum_stacked`` /
+    ``topology.segment_sum_stacked``.  It does not re-implement anything:
+    it IS those calls, so ``aggregate_impl="ref"`` is the unchanged
+    pre-kernel program and the kernel's differential suite tests against
+    the very code path the engines shipped with."""
+    from repro.core import aggregation as agg
+    from repro.core import comms as comms_mod
+    from repro.core.topology import segment_sum_stacked
+
+    tree = stacked
+    if scales is not None:
+        tree = jax.tree_util.tree_map(
+            lambda q, s: comms_mod.dequantize_int8(
+                q, jnp.asarray(s, jnp.float32).reshape(
+                    (-1,) + (1,) * (q.ndim - 1))),
+            stacked, scales)
+        if out_dtype is None:
+            out_dtype = jnp.float32
+    D = jax.tree_util.tree_leaves(tree)[0].shape[0]
+    s = (jnp.zeros((D,), jnp.float32) if staleness is None
+         else jnp.asarray(staleness, jnp.float32))
+    if normalize:
+        w = agg.staleness_weights(weights, s, mask, kind=kind, rate=rate,
+                                  segment_ids=segment_ids,
+                                  num_segments=num_segments)
+    else:
+        w = (jnp.asarray(weights, jnp.float32)
+             * agg.staleness_decay(s, kind=kind, rate=rate))
+        if mask is not None:
+            w = w * jnp.asarray(mask, jnp.float32)
+    if segment_ids is None:
+        return agg.weighted_sum_stacked(tree, w, out_dtype=out_dtype)
+    return segment_sum_stacked(tree, w, segment_ids, num_segments,
+                               out_dtype=out_dtype)
+
+
 # ------------------------------------------------------- ssd intra-chunk
 def ssd_intra_ref(Cc, Bc, la, xdt):
     """Oracle for ssd_intra_chunk: masked quadratic form + chunk state."""

@@ -120,3 +120,26 @@ def test_load_engine_state_rejects_plain_checkpoints(tmp_path):
     save_pytree(path, {"v": jnp.ones((2,))})
     with pytest.raises(ValueError, match="engine-state"):
         load_engine_state(path)
+
+
+def test_engine_state_roundtrip_bf16(tmp_path):
+    """A mixed-precision EngineState (bf16 params/residual over f32
+    optimizer moments) must survive the msgpack roundtrip with dtypes
+    intact — the flat-key decoder resolves ``"bfloat16"`` through
+    ml_dtypes, which plain ``np.dtype`` does not know."""
+    state = _tiny_engine_state(with_buffers=True)
+    cast = jax.tree_util.tree_map(lambda a: a.astype(jnp.bfloat16),
+                                  state.params)
+    state = state._replace(
+        params=cast,
+        residual={"w": jnp.full((3, 2), 0.125, jnp.bfloat16)})
+    path = str(tmp_path / "es16.msgpack")
+    save_engine_state(path, state, metadata={"next_round": 2})
+    back, meta = load_engine_state(path)
+    assert meta["next_round"] == 2
+    assert back.params["w"].dtype == jnp.bfloat16
+    assert back.residual["w"].dtype == jnp.bfloat16
+    assert back.opt_state["m"].dtype == jnp.float32
+    for a, b in zip(jax.tree_util.tree_leaves(state._replace(rng=())),
+                    jax.tree_util.tree_leaves(back._replace(rng=()))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

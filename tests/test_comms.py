@@ -345,3 +345,60 @@ def test_run_experiment_comms_telemetry():
     assert len(traj) == ROUNDS
     assert traj[-1]["cumulative_uplink_bytes"] == tel["uplink_bytes_total"]
     assert all(0.0 <= p["accuracy"] <= 1.0 for p in traj)
+
+
+# --------------------------------------------------------- int8 edge cases
+def test_int8_degenerate_leaves():
+    """All-zero and single-element leaves quantize without a zero-division
+    (the scale floors at 1e-12/127) and round-trip exactly."""
+    key = jax.random.key(3)
+    q, s = quantize_int8_stochastic(key, jnp.zeros((5, 7)))
+    assert np.isfinite(float(s)) and float(s) > 0
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, s)), 0.0)
+    # a single element sits exactly on the clip rail: x = ±127·scale
+    x1 = jnp.asarray([-3.25])
+    q1, s1 = quantize_int8_stochastic(key, x1)
+    assert int(q1[0]) == -127
+    np.testing.assert_allclose(np.asarray(dequantize_int8(q1, s1)),
+                               np.asarray(x1), rtol=1e-6)
+    # bf16 payloads upcast to f32 for the scale math (the bf16 wire can
+    # stack int8 on top without losing the max|x| to bf16 rounding)
+    qb, sb = quantize_int8_stochastic(
+        key, jnp.asarray([1.0, -0.5, 0.25], jnp.bfloat16))
+    assert qb.dtype == jnp.int8 and np.isfinite(float(sb))
+    np.testing.assert_allclose(float(sb), 1.0 / 127.0, rtol=1e-6)
+
+
+def test_int8_nonfinite_poisons_scale_for_guard_rejection():
+    """A non-finite upload (overflowed delta, NaN grads) must NOT quantize
+    garbage: the scale is poisoned to NaN so the round-trip is uniformly
+    non-finite and the fog finiteness guard (``faults.GuardConfig``)
+    rejects the upload wholesale — deterministically, not depending on
+    where the inf landed."""
+    from repro.core.faults import guard_verdict, stacked_finite, stacked_norms
+
+    key = jax.random.key(4)
+    for bad in (jnp.inf, -jnp.inf, jnp.nan):
+        x = jnp.asarray([[1.0, bad], [2.0, 3.0]])
+        q, s = quantize_int8_stochastic(key, x)
+        assert not np.isfinite(float(s))
+        deq = np.asarray(dequantize_int8(q, s))
+        assert not np.any(np.isfinite(deq))
+    # float32 overflow (finite bf16-sized values are fine; true inf isn't)
+    x = jnp.asarray([jnp.finfo(jnp.float32).max]) * 2.0
+    q, s = quantize_int8_stochastic(key, x)
+    assert not np.isfinite(float(s))
+    # the guard sees the poisoned upload and zeroes its Eq. 1 weight
+    stacked = {"w": jnp.stack([jnp.full((2, 2), jnp.nan),
+                               jnp.ones((2, 2))])}
+    finite = stacked_finite(stacked)
+    rejected, _, _ = guard_verdict(stacked_norms(stacked), finite,
+                                   jnp.ones((2,)), policy="drop", factor=8.0)
+    assert bool(rejected[0]) and not bool(rejected[1])
+    # finite inputs are bitwise unaffected by the hardening
+    k2 = jax.random.key(5)
+    xf = jax.random.normal(k2, (64,))
+    qa, sa = quantize_int8_stochastic(k2, xf)
+    np.testing.assert_allclose(float(sa),
+                               float(jnp.max(jnp.abs(xf))) / 127.0,
+                               rtol=1e-6)

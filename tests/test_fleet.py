@@ -131,10 +131,13 @@ def test_sync_engine_rejects_stream_and_async(setup):
 def test_async_engine_rejects_hetero_and_live_mask(setup):
     cfg, shards, seed_set, test = setup
     eng, params0 = _engine(cfg, shards, seed_set, test)
-    with pytest.raises(ValueError, match="does not support fleet field"):
+    # hetero is an allowed async fleet field since the compute profile
+    # landed, but the straggler model stays rejected with its own message
+    with pytest.raises(ValueError, match="straggler_rate has no event-time"):
         eng.run_async(eng.init_state(params0), ROUNDS,
-                      fleet=FleetConfig(async_cfg=AsyncConfig(quorum=2),
-                                        hetero=HeteroConfig()))
+                      fleet=FleetConfig(
+                          async_cfg=AsyncConfig(quorum=2),
+                          hetero=HeteroConfig(straggler_rate=0.3)))
     with pytest.raises(ValueError, match="does not support fleet field"):
         eng.run_async(
             eng.init_state(params0), ROUNDS,

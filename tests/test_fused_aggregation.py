@@ -1,0 +1,466 @@
+"""Differential suite pinning the fused Pallas aggregation kernel.
+
+The kernel (``kernels.fused_aggregation``) defines no VJP and runs in
+interpret mode on CPU CI, so its correctness story is THIS harness, not a
+code read:
+
+* ``fused_agg_ref`` is asserted BITWISE against the pre-existing
+  ``staleness_weights`` + ``weighted_sum_stacked`` /
+  ``segment_sum_stacked`` composition (it delegates, so this pins the
+  delegation);
+* the kernel is differential-tested against ``fused_agg_ref`` across the
+  property grid — D ∈ {1, 4, 8, 64}, ragged leaf shapes, fp32/bf16,
+  int8+scales, random liveness/arrival masks including the all-dead →
+  uniform NaN-guard edge of ``masked_normalize``, flat and segment mode
+  (with empty groups), normalize and preweighted mode — at ≤1e-5 (fp32);
+* both fused engines run the routed ``aggregate_impl="pallas_interpret"``
+  program against the ``"ref"`` program (sync and async, G=1 and G=4,
+  vmap and the forced-8-fake-device mesh subprocess) at ONE dispatch;
+* the bf16 mixed-precision wire (``CommsConfig.compute_dtype``) halves
+  the billed bytes, carries its rounding error in the EF residual, and
+  (slow) stays within 2pp of the fp32 paper-scenario quick run.
+"""
+import os
+import subprocess
+import sys
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:           # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+from repro.core import aggregation as agg
+from repro.core import counters
+from repro.core.async_engine import AsyncConfig, run_events_fused
+from repro.core.comms import CommsConfig, upload_bytes
+from repro.core.engine import EdgeEngine
+from repro.core.federated import FederatedALConfig, Trainer, \
+    run_federated_rounds
+from repro.core.topology import segment_sum_stacked, uniform_topology
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.kernels.fused_aggregation import fused_aggregate
+from repro.kernels.ref import fused_agg_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES = ((3, 4), (7,), (), (2, 1, 2))
+
+
+def _tree(rng, D, dtype=jnp.float32):
+    return {f"l{i}": jnp.asarray(rng.normal(size=(D,) + s), dtype)
+            for i, s in enumerate(SHAPES)}
+
+
+def _close(a, b, atol=1e-6, rtol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32),
+                                   atol=atol, rtol=rtol)
+
+
+# ------------------------------------------------- ref ≡ existing composition
+def test_ref_bitwise_equals_existing_composition():
+    """fused_agg_ref IS the shipped program: staleness_weights +
+    weighted_sum_stacked, bit for bit (flat and segment mode)."""
+    rng = np.random.default_rng(0)
+    D = 8
+    tree = _tree(rng, D)
+    raw = jnp.asarray(rng.uniform(0.1, 1.0, D), jnp.float32)
+    stale = jnp.asarray(rng.integers(0, 5, D), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, D), jnp.float32)
+    for kind in ("none", "exp", "poly"):
+        w = agg.staleness_weights(raw, stale, mask, kind=kind, rate=0.5)
+        want = agg.weighted_sum_stacked(tree, w)
+        got = fused_agg_ref(tree, raw, staleness=stale, mask=mask,
+                            kind=kind, rate=0.5)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ids = jnp.asarray([0, 0, 1, 1, 2, 2, 3, 3], jnp.int32)
+    w = agg.staleness_weights(raw, stale, mask, kind="exp", rate=0.7,
+                              segment_ids=ids, num_segments=4)
+    want = segment_sum_stacked(tree, w, ids, 4)
+    got = fused_agg_ref(tree, raw, staleness=stale, mask=mask, kind="exp",
+                        rate=0.7, segment_ids=ids, num_segments=4)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ref_preweighted_is_bare_weighted_sum():
+    rng = np.random.default_rng(1)
+    tree = _tree(rng, 4)
+    w = jnp.asarray(rng.uniform(size=4), jnp.float32)
+    got = fused_agg_ref(tree, w, normalize=False)
+    want = agg.weighted_sum_stacked(tree, w)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------- kernel vs ref (units)
+@pytest.mark.parametrize("D", [1, 4, 8, 64])
+@pytest.mark.parametrize("kind", ["none", "exp", "poly"])
+def test_kernel_matches_ref_flat(D, kind):
+    rng = np.random.default_rng(D * 31 + len(kind))
+    tree = _tree(rng, D)
+    raw = jnp.asarray(rng.uniform(0.1, 1.0, D), jnp.float32)
+    stale = jnp.asarray(rng.integers(0, 4, D), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, D), jnp.float32)
+    k = fused_aggregate(tree, raw, staleness=stale, mask=mask, kind=kind,
+                        rate=0.5, interpret=True)
+    r = fused_agg_ref(tree, raw, staleness=stale, mask=mask, kind=kind,
+                      rate=0.5)
+    _close(k, r)
+
+
+@pytest.mark.parametrize("G", [1, 4])
+def test_kernel_matches_ref_segment_with_empty_group(G):
+    rng = np.random.default_rng(5)
+    D = 8
+    tree = _tree(rng, D)
+    raw = jnp.asarray(rng.uniform(0.1, 1.0, D), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, D), jnp.float32)
+    # num_segments G+1: the last group has NO member slots at all
+    ids = jnp.asarray(rng.integers(0, G, D), jnp.int32)
+    k = fused_aggregate(tree, raw, mask=mask, segment_ids=ids,
+                        num_segments=G + 1, interpret=True)
+    r = fused_agg_ref(tree, raw, mask=mask, segment_ids=ids,
+                      num_segments=G + 1)
+    _close(k, r)
+
+
+def test_kernel_all_dead_mask_uniform_guard():
+    """Σ(w·mask)=0 → masked_normalize's uniform fallbacks, not NaN."""
+    rng = np.random.default_rng(6)
+    D = 8
+    tree = _tree(rng, D)
+    raw = jnp.asarray(rng.uniform(size=D), jnp.float32)
+    dead = jnp.zeros((D,), jnp.float32)
+    k = fused_aggregate(tree, raw, mask=dead, interpret=True)
+    r = fused_agg_ref(tree, raw, mask=dead)
+    _close(k, r)
+    assert all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree_util.tree_leaves(k))
+    # same per-segment: one group fully dead, one fully live
+    ids = jnp.asarray([0] * 4 + [1] * 4, jnp.int32)
+    half = jnp.asarray([0.0] * 4 + [1.0] * 4, jnp.float32)
+    k = fused_aggregate(tree, raw, mask=half, segment_ids=ids,
+                        num_segments=2, interpret=True)
+    r = fused_agg_ref(tree, raw, mask=half, segment_ids=ids, num_segments=2)
+    _close(k, r)
+
+
+def test_kernel_preweighted_matches_ref():
+    rng = np.random.default_rng(7)
+    D = 8
+    tree = _tree(rng, D)
+    w = agg.masked_normalize(jnp.asarray(rng.uniform(size=D), jnp.float32),
+                             jnp.asarray(rng.integers(0, 2, D), jnp.float32))
+    _close(fused_aggregate(tree, w, normalize=False, interpret=True),
+           fused_agg_ref(tree, w, normalize=False))
+
+
+def test_kernel_int8_dequantize_fusion():
+    rng = np.random.default_rng(8)
+    D = 8
+    q = {f"l{i}": jnp.asarray(rng.integers(-127, 128, (D,) + s), jnp.int8)
+         for i, s in enumerate(SHAPES)}
+    scales = {k: jnp.asarray(rng.uniform(1e-4, 1e-2, D), jnp.float32)
+              for k in q}
+    raw = jnp.asarray(rng.uniform(0.1, 1.0, D), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, D), jnp.float32)
+    k = fused_aggregate(q, raw, mask=mask, scales=scales, interpret=True)
+    r = fused_agg_ref(q, raw, mask=mask, scales=scales)
+    _close(k, r)
+    assert all(l.dtype == jnp.float32 for l in jax.tree_util.tree_leaves(k))
+
+
+def test_kernel_bf16_payload_keeps_storage_dtype():
+    rng = np.random.default_rng(9)
+    D = 8
+    tree = _tree(rng, D, jnp.bfloat16)
+    w = jnp.full((D,), 1.0 / D, jnp.float32)
+    k = fused_aggregate(tree, w, normalize=False, interpret=True)
+    r = fused_agg_ref(tree, w, normalize=False)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree_util.tree_leaves(k))
+    _close(k, r, atol=5e-2, rtol=2e-2)
+    # fp32 master discipline: out_dtype=f32 accumulates and STAYS f32
+    k32 = fused_aggregate(tree, w, normalize=False, out_dtype=jnp.float32,
+                          interpret=True)
+    assert all(l.dtype == jnp.float32 for l in jax.tree_util.tree_leaves(k32))
+
+
+def test_kernel_input_validation():
+    tree = {"x": jnp.ones((2, 3))}
+    with pytest.raises(ValueError, match="staleness decay"):
+        fused_aggregate(tree, jnp.ones(2), kind="bogus", interpret=True)
+    with pytest.raises(ValueError, match="num_segments"):
+        fused_aggregate(tree, jnp.ones(2),
+                        segment_ids=jnp.zeros(2, jnp.int32), interpret=True)
+    with pytest.raises(ValueError, match="leaves"):
+        fused_aggregate(tree, jnp.ones(2), scales={"x": jnp.ones(2),
+                                                   "y": jnp.ones(2)},
+                        interpret=True)
+    with pytest.raises(ValueError, match="aggregate_impl"):
+        agg.resolve_aggregate_impl("bogus")
+
+
+# ------------------------------------------------- property differential
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           D=st.sampled_from([1, 4, 8, 64]),
+           kind=st.sampled_from(["none", "exp", "poly"]),
+           rate=st.floats(0.1, 1.0),
+           bf16=st.booleans(),
+           segmented=st.booleans(),
+           all_dead=st.booleans(),
+           normalize=st.booleans())
+    def test_property_kernel_matches_ref(seed, D, kind, rate, bf16,
+                                         segmented, all_dead, normalize):
+        rng = np.random.default_rng(seed)
+        dtype = jnp.bfloat16 if bf16 else jnp.float32
+        tree = _tree(rng, D, dtype)
+        raw = jnp.asarray(rng.uniform(0.0, 2.0, D), jnp.float32)
+        stale = jnp.asarray(rng.integers(0, 6, D), jnp.float32)
+        mask = (jnp.zeros((D,), jnp.float32) if all_dead
+                else jnp.asarray(rng.integers(0, 2, D), jnp.float32))
+        G = min(D, 3) if segmented else None
+        ids = (jnp.asarray(rng.integers(0, G, D), jnp.int32)
+               if segmented else None)
+        kw = dict(staleness=stale, mask=mask, kind=kind, rate=rate,
+                  normalize=normalize, segment_ids=ids, num_segments=G)
+        k = fused_aggregate(tree, raw, interpret=True, **kw)
+        r = fused_agg_ref(tree, raw, **kw)
+        if bf16:
+            _close(k, r, atol=6e-2, rtol=3e-2)   # bf16 storage rounding
+        else:
+            _close(k, r, atol=1e-5, rtol=1e-5)   # the ≤1e-5 fp32 contract
+
+
+# ----------------------------------------------------- engine parity (vmap)
+ROUNDS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # 8 devices: divides the CI sharded job's 8 fake host devices and the
+    # G=4 topology below
+    cfg = FederatedALConfig(num_devices=8, acquisitions=1, mc_samples=2,
+                            k_per_acquisition=2, pool_window=8,
+                            train_steps_per_acq=2, initial_train=6,
+                            initial_train_steps=2, seed=11)
+    full = make_digit_dataset(96, seed=1)
+    test = make_digit_dataset(24, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+    return cfg, shards, seed_set, test
+
+
+def _engine(setup, impl):
+    cfg, shards, seed_set, test = setup
+    trainer = Trainer(replace(cfg, acquisitions=cfg.acquisitions * ROUNDS))
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     total_acquisitions=cfg.acquisitions * ROUNDS,
+                     aggregate_impl=impl)
+    params0 = trainer.init_params(jax.random.key(0))
+    return eng, eng.init_state(params0)
+
+
+@pytest.mark.parametrize("G", [1, 4])
+def test_sync_engine_pallas_matches_ref_one_dispatch(setup, G):
+    """aggregate_impl='pallas_interpret' at codec none/fp32 reproduces the
+    existing ('ref') engine output under vmap, in ONE dispatch — flat
+    (G=1) and two-tier (G=4)."""
+    topo = None if G == 1 else uniform_topology(8, G, local_steps=2)
+    finals = {}
+    for impl in ("ref", "pallas_interpret"):
+        eng, state = _engine(setup, impl)
+        counters.reset_dispatches()
+        _, recs, finals[impl] = eng.run_rounds_fused(state, ROUNDS,
+                                                     topology=topo)
+        assert counters.dispatch_count() == 1
+    # per-reduce parity is ≤1e-5 (kernel differential above); two rounds of
+    # training compound it — same 5e-5 cross-engine budget as
+    # tests/test_fused_rounds.py uses
+    _close(finals["ref"], finals["pallas_interpret"], atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("G", [1, 4])
+def test_async_engine_pallas_matches_ref_one_dispatch(setup, G):
+    topo = None if G == 1 else uniform_topology(8, G, local_steps=2)
+    acfg = AsyncConfig(quorum=4, dist="det", mean_latency=1.0)
+    finals = {}
+    for impl in ("ref", "pallas_interpret"):
+        eng, state = _engine(setup, impl)
+        counters.reset_dispatches()
+        _, recs, finals[impl] = run_events_fused(eng, state, ROUNDS,
+                                                 async_cfg=acfg,
+                                                 topology=topo)
+        assert counters.dispatch_count() == 1
+    _close(finals["ref"], finals["pallas_interpret"], atol=5e-5, rtol=1e-4)
+
+
+def test_aggregate_impl_enters_cache_key(setup):
+    eng_r, _ = _engine(setup, "ref")
+    eng_p, _ = _engine(setup, "pallas_interpret")
+    assert eng_r._cache_key("rounds_fused", False) != \
+        eng_p._cache_key("rounds_fused", False)
+
+
+# ------------------------------------------------------- bf16 wire (fast)
+def test_bf16_wire_halves_ledger_and_stays_one_dispatch(setup):
+    cfg, shards, seed_set, test = setup
+    cc16 = CommsConfig(compute_dtype="bfloat16")
+    cc32 = CommsConfig()
+    eng, state = _engine(setup, "ref")
+    tmpl = jax.tree_util.tree_map(lambda a: a[0], state.params)
+    assert upload_bytes(cc16, tmpl) * 2 == upload_bytes(cc32, tmpl)
+    # topk values also ship at the wire width; int8 codes keep 1 byte
+    t16 = CommsConfig(compression="topk", topk_fraction=0.25,
+                      compute_dtype="bfloat16")
+    t32 = CommsConfig(compression="topk", topk_fraction=0.25)
+    assert upload_bytes(t16, tmpl) < upload_bytes(t32, tmpl)
+    i16 = CommsConfig(compression="int8", compute_dtype="bfloat16")
+    i32 = CommsConfig(compression="int8")
+    assert upload_bytes(i16, tmpl) == upload_bytes(i32, tmpl)
+
+    counters.reset_dispatches()
+    state16, recs, final16 = eng.run_rounds_fused(state, ROUNDS, comms=cc16)
+    assert counters.dispatch_count() == 1
+    # EF residual now carries the bf16 rounding error across rounds
+    res = jax.tree_util.tree_leaves(state16.residual)
+    assert res and any(float(jnp.max(jnp.abs(l))) > 0 for l in res)
+    for l in jax.tree_util.tree_leaves(final16):
+        assert bool(jnp.all(jnp.isfinite(l)))
+    # the wire only rounds mantissas: the run stays close to fp32
+    eng2, state2 = _engine(setup, "ref")
+    _, _, final32 = eng2.run_rounds_fused(state2, ROUNDS)
+    _close(final16, final32, atol=5e-2, rtol=5e-2)
+
+
+def test_bf16_wire_async_runs_one_dispatch(setup):
+    eng, state = _engine(setup, "ref")
+    counters.reset_dispatches()
+    _, recs, final = run_events_fused(
+        eng, state, ROUNDS,
+        async_cfg=AsyncConfig(quorum=4, dist="det", mean_latency=1.0),
+        comms=CommsConfig(compute_dtype="bfloat16", error_feedback=False))
+    assert counters.dispatch_count() == 1
+    for l in jax.tree_util.tree_leaves(final):
+        assert bool(jnp.all(jnp.isfinite(l)))
+
+
+def test_compute_dtype_validation():
+    with pytest.raises(ValueError, match="compute_dtype"):
+        CommsConfig(compute_dtype="float16")
+
+
+# --------------------------------------------- forced-8-device mesh parity
+_FORCED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import jax, numpy as np
+from dataclasses import replace
+from repro.core.engine import EdgeEngine
+from repro.core.async_engine import AsyncConfig, run_events_fused
+from repro.core.federated import FederatedALConfig, Trainer
+from repro.core.topology import uniform_topology
+from repro.data.digits import make_digit_dataset
+from repro.data.federated_split import federated_split
+from repro.launch.mesh import make_device_mesh
+
+assert jax.device_count() == 8, jax.device_count()
+cfg = FederatedALConfig(num_devices=8, acquisitions=1, mc_samples=2,
+                        k_per_acquisition=2, pool_window=8,
+                        train_steps_per_acq=2, initial_train=6,
+                        initial_train_steps=2, seed=11)
+full = make_digit_dataset(96, seed=1)
+test = make_digit_dataset(24, seed=2)
+seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+shards = federated_split(full, cfg.num_devices, seed=4)
+trainer = Trainer(cfg)
+params0 = trainer.init_params(jax.random.key(0))
+
+def final(impl, mesh, topo, sync):
+    eng = EdgeEngine(trainer, cfg, shards, seed_set, test,
+                     aggregate_impl=impl, mesh=mesh)
+    state = eng.init_state(params0)
+    if sync:
+        _, _, f = eng.run_rounds_fused(state, 1, topology=topo)
+    else:
+        _, _, f = run_events_fused(
+            eng, state, 1,
+            async_cfg=AsyncConfig(quorum=4, dist="det", mean_latency=1.0),
+            topology=topo)
+    return f
+
+for sync in (True, False):
+    for G in (1, 4):
+        topo = None if G == 1 else uniform_topology(8, G, local_steps=2)
+        fv = final("pallas_interpret", None, topo, sync)
+        fm = final("pallas_interpret", make_device_mesh(), topo, sync)
+        fr = final("ref", None, topo, sync)
+        for a, b in zip(jax.tree_util.tree_leaves(fv),
+                        jax.tree_util.tree_leaves(fm)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+        for a, b in zip(jax.tree_util.tree_leaves(fv),
+                        jax.tree_util.tree_leaves(fr)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_pallas_engines_on_forced_8_host_devices():
+    """Genuinely-sharded parity: the routed kernel reduces LOCAL rows with
+    GLOBAL coefficients under shard_map — vmap == mesh == ref on sync and
+    async, G=1 and G=4 (XLA_FLAGS must predate jax, hence a subprocess)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORM_NAME", "cpu")
+    out = subprocess.run([sys.executable, "-c", _FORCED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+# -------------------------------------------------- bf16 accuracy gate
+@pytest.mark.slow
+def test_bf16_accuracy_within_2pp_of_fp32():
+    """Paper-scenario quick run: the bf16 wire costs ≤2pp aggregated
+    accuracy vs fp32 at half the uplink bytes."""
+    cfg = FederatedALConfig(num_devices=4, acquisitions=3, mc_samples=8,
+                            k_per_acquisition=6, pool_window=48,
+                            train_steps_per_acq=12, initial_train=16,
+                            initial_train_steps=24, seed=0)
+    full = make_digit_dataset(480, seed=1)
+    test = make_digit_dataset(160, seed=2)
+    seed_set = make_digit_dataset(cfg.initial_train, seed=3)
+    shards = federated_split(full, cfg.num_devices, seed=4)
+
+    def run(comms):
+        _, reports = run_federated_rounds(
+            cfg, shards, seed_set, test, rounds=3, engine="fused",
+            comms=comms)
+        return reports[-1]["aggregated_acc"]
+
+    acc32 = run(None)
+    acc16 = run(CommsConfig(compute_dtype="bfloat16"))
+    assert abs(acc32 - acc16) <= 0.02, (acc32, acc16)
